@@ -1,0 +1,19 @@
+use pfm_reorder::runtime::PfmRuntime;
+fn main() {
+    let mut rt = PfmRuntime::new("artifacts").unwrap();
+    let exe = rt.executable(&std::env::args().nth(1).unwrap_or("pfm".into()), 64).unwrap();
+    // deterministic inputs: adj = 7x7 grid laplacian padded, x0 = linspace, mask
+    let mut adj = vec![0f32; 64*64];
+    let (nx, ny) = (7usize, 7usize);
+    let idx = |x: usize, y: usize| y*nx + x;
+    for y in 0..ny { for x in 0..nx {
+        let i = idx(x,y); adj[i*64+i] = 4.0;
+        if x+1<nx { let j = idx(x+1,y); adj[i*64+j]=-1.0; adj[j*64+i]=-1.0; }
+        if y+1<ny { let j = idx(x,y+1); adj[i*64+j]=-1.0; adj[j*64+i]=-1.0; }
+    }}
+    let x0: Vec<f32> = (0..64).map(|i| (i as f32)/64.0 - 0.5).collect();
+    let mut mask = vec![0f32; 64]; for m in mask.iter_mut().take(49) { *m = 1.0; }
+    let s = exe.run(&adj, &x0, &mask).unwrap();
+    println!("scores[0..8] = {:?}", &s[0..8]);
+    println!("scores[45..52] = {:?}", &s[45..52]);
+}

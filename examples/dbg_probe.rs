@@ -1,0 +1,16 @@
+fn main() {
+    let path = std::env::args().nth(1).unwrap();
+    let n = 16usize;
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let mut a = vec![0f32; n*n];
+    for i in 0..11 { a[i*n+i+1] = -1.0; a[(i+1)*n+i] = -1.0; }
+    for i in 0..12 { a[i*n+i] = 2.0; }
+    let x0: Vec<f32> = (0..n).map(|i| (i as f32)/(n as f32) - 0.5).collect();
+    let mut mask = vec![0f32; n]; for m in mask.iter_mut().take(12) { *m = 1.0; }
+    let al = xla::Literal::vec1(&a).reshape(&[16,16]).unwrap();
+    let r = exe.execute::<xla::Literal>(&[al, xla::Literal::vec1(&x0), xla::Literal::vec1(&mask)]).unwrap()[0][0].to_literal_sync().unwrap();
+    let out = r.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    println!("rust: {:?}", out.iter().map(|x| (x*10000.0).round()/10000.0).collect::<Vec<_>>());
+}

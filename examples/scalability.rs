@@ -1,0 +1,53 @@
+//! Scalability walk (paper Figure 4 in miniature): sweep matrix sizes and
+//! print how fill ratio, factorization time, and ordering time evolve per
+//! method — showing the paper's qualitative claim that score-sorting
+//! (learned) methods hold their ordering cost flat while eigen/partition
+//! methods grow.
+//!
+//! ```bash
+//! cargo run --release --example scalability
+//! ```
+
+use pfm_reorder::coordinator::Method;
+use pfm_reorder::gen::{ProblemClass, TestMatrix};
+use pfm_reorder::harness::runner::evaluate_one;
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut rt = PfmRuntime::new("artifacts")?;
+    let methods = [
+        Method::Classical(Classical::Amd),
+        Method::Classical(Classical::Metis),
+        Method::Classical(Classical::Fiedler),
+        Method::Learned(Learned::Pfm),
+    ];
+    println!(
+        "{:<8} {:<10} {:>8} {:>12} {:>12}",
+        "n", "method", "fill", "factor (ms)", "order (ms)"
+    );
+    for &n in &[128usize, 256, 512, 1024, 2048] {
+        let tm = TestMatrix {
+            name: format!("sweep_n{n}"),
+            class: ProblemClass::TwoDThreeD,
+            matrix: ProblemClass::TwoDThreeD.generate(n, 99),
+        };
+        for &m in &methods {
+            let r = evaluate_one(&tm, m, &mut rt, 5)?;
+            println!(
+                "{:<8} {:<10} {:>8.2} {:>12.2} {:>12.2}{}",
+                r.n,
+                r.method,
+                r.fill_ratio,
+                r.factor_time * 1e3,
+                r.ordering_time * 1e3,
+                match r.provenance {
+                    Some(pfm_reorder::runtime::Provenance::SpectralFallback) => "  (fallback)",
+                    _ => "",
+                }
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! **End-to-end serving driver** (the system-prompt-mandated E2E
+//! validation): starts the coordinator service, submits a sustained
+//! mixed-method workload across all six problem classes and several
+//! sizes, and reports latency/throughput plus batching metrics.
+//!
+//! Proves all three layers compose under concurrency: L3 routing/batching
+//! → PJRT execution of the L2 network → whose hot ops are L1 Pallas
+//! kernels — while the classical pool runs in parallel threads.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_reorder
+//! ```
+
+use std::time::Instant;
+
+use pfm_reorder::coordinator::{Method, ReorderService, ServiceConfig};
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+use pfm_reorder::util::check::check_permutation;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // verify artifacts exist up front so the learned rows use the network
+    let rt = PfmRuntime::new("artifacts")?;
+    let has_artifacts = !rt.variants().is_empty();
+    println!(
+        "artifacts: {} ({} variants)",
+        if has_artifacts { "found" } else { "MISSING (learned -> fallback)" },
+        rt.variants().len()
+    );
+    drop(rt);
+
+    let service = ReorderService::start(ServiceConfig {
+        workers: 4,
+        max_batch: 8,
+        artifact_dir: "artifacts".into(),
+        ..Default::default()
+    });
+
+    // workload: 3 waves x 6 classes x 3 sizes x 4 methods = 216 requests
+    let methods = [
+        Method::Learned(Learned::Pfm),
+        Method::Learned(Learned::Udno),
+        Method::Classical(Classical::Amd),
+        Method::Classical(Classical::Metis),
+    ];
+    let sizes = [128usize, 256, 420];
+    let t0 = Instant::now();
+    let mut inflight = Vec::new();
+    let mut submitted = 0u64;
+    for wave in 0..3u64 {
+        for &n in &sizes {
+            for &class in &ProblemClass::ALL {
+                let a = class.generate(n, wave * 1000 + n as u64);
+                for &m in &methods {
+                    inflight.push((a.nrows(), m, service.submit(a.clone(), m, submitted)));
+                    submitted += 1;
+                }
+            }
+        }
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+
+    let mut ok = 0u64;
+    for (n, m, rx) in inflight {
+        let resp = rx.recv()?;
+        let result = resp.result.map_err(|e| format!("{}: {e}", m.label()))?;
+        assert_eq!(result.order.len(), n);
+        check_permutation(&result.order).map_err(|e| format!("{}: {e}", m.label()))?;
+        ok += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nsubmitted {submitted} requests in {submit_wall:.2}s; all {ok} completed in {wall:.2}s");
+    println!("throughput: {:.1} req/s", ok as f64 / wall);
+    println!("\nper-method latency:");
+    for (name, s) in service.metrics.latency_stats() {
+        println!(
+            "  {:<22} n={:<4} mean {:>8.2} ms   p95 {:>8.2} ms   max {:>8.2} ms",
+            name,
+            s.n,
+            s.mean * 1e3,
+            s.p95 * 1e3,
+            s.max * 1e3
+        );
+    }
+    println!(
+        "\nnetwork batching: mean batch occupancy {:.2}, fallbacks {}",
+        service.metrics.mean_batch(),
+        service.metrics.fallbacks()
+    );
+    println!("metrics json: {}", service.metrics.to_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT export: train the PFM network (Algorithm 1, deterministic seeds) and
+lower the inference graph to HLO *text* artifacts the Rust runtime loads.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported per size bucket n:
+  pfm_n{n}.hlo.txt          — the paper's method (S_e + MgGNN + FactLoss)
+  se_n{n}.hlo.txt           — S_e baseline (spectral embedding as scores)
+  gpce_n{n}.hlo.txt         — GPCE baseline (PCE loss)
+  udno_n{n}.hlo.txt         — UDNO baseline (expected-envelope loss)
+  pfm_randinit_n{n}.hlo.txt — ablation: no spectral embedding
+  pfm_gunet_n{n}.hlo.txt    — ablation: GraphUnet-lite encoder
+plus manifest.json describing every artifact (inputs, variant, bucket).
+
+The network weights are feature-dimension-only (SAGE + linear layers), so
+one training run at the smallest bucket serves every export size.
+
+Inference signature (all f32): (adj[n,n], x0[n], mask[n]) -> (scores[n],).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, train
+
+TRAIN_BUCKET = 64
+TRAIN_COUNT = 12
+TRAIN_EPOCHS = 3
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps with to_tuple1).
+
+    `print_large_constants=True` is load-bearing: the default HLO printer
+    elides big literals as `constant({...})`, and the xla crate's text
+    parser silently reads those back as ZEROS — which wipes out the baked
+    network weights (every score comes out constant). Cost: ~10x larger
+    artifact files, still well under a MB per bucket.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_scores_fn(fn, n: int, out_path: str) -> int:
+    """Lower `fn(adj, x0, mask) -> scores` at bucket size n; returns #chars."""
+    spec_a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(fn).lower(spec_a, spec_v, spec_v)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def make_variant_fns(trained: dict):
+    """Build the inference closures for every artifact variant.
+
+    `trained` maps variant name -> params pytree (None for `se`)."""
+
+    def mk(params, encoder, use_spectral):
+        def fn(adj, x0, mask):
+            return (model.pfm_scores(params, adj, x0, mask, encoder=encoder,
+                                     use_spectral=use_spectral),)
+
+        return fn
+
+    return {
+        "pfm": mk(trained["pfm"], "mggnn", True),
+        "se": lambda adj, x0, mask: (model.se_scores(adj, x0, mask),),
+        "gpce": mk(trained["gpce"], "mggnn", True),
+        "udno": mk(trained["udno"], "mggnn", True),
+        "pfm_randinit": mk(trained["pfm_randinit"], "mggnn", False),
+        "pfm_gunet": mk(trained["pfm_gunet"], "gunet", True),
+    }
+
+
+def train_all(verbose=True) -> dict:
+    """Train every variant on the paper's training mix (2D3D ∪ Delaunay in
+    GradeL/Hole3/Hole6), deterministic seeds."""
+    mats = train.make_training_set(TRAIN_COUNT, 40, TRAIN_BUCKET - 4,
+                                   TRAIN_BUCKET, seed=SEED)
+    out = {}
+    specs = [
+        ("pfm", dict(variant="factloss", encoder="mggnn", use_spectral=True)),
+        ("gpce", dict(variant="pce", encoder="mggnn", use_spectral=True)),
+        ("udno", dict(variant="udno", encoder="mggnn", use_spectral=True)),
+        ("pfm_randinit",
+         dict(variant="factloss", encoder="mggnn", use_spectral=False)),
+        ("pfm_gunet",
+         dict(variant="factloss", encoder="gunet", use_spectral=True)),
+    ]
+    for name, kw in specs:
+        if verbose:
+            print(f"[aot] training variant {name} "
+                  f"({TRAIN_COUNT} matrices x {TRAIN_EPOCHS} epochs)")
+        out[name] = train.train(mats, epochs=TRAIN_EPOCHS, seed=SEED,
+                                verbose=verbose, **kw)
+    return out
+
+
+def save_params(trained: dict, out_dir: str):
+    """Flatten every variant's params into one npz (inspection/reuse)."""
+    flat = {}
+    for name, params in trained.items():
+        leaves, _ = jax.tree_util.tree_flatten(params)
+        for i, leaf in enumerate(leaves):
+            flat[f"{name}__{i}"] = np.asarray(leaf)
+    np.savez(os.path.join(out_dir, "params.npz"), **flat)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="64 128 256 512",
+                    help="space-separated bucket sizes")
+    ap.add_argument("--skip-variants", action="store_true",
+                    help="export only the main pfm artifacts")
+    args = ap.parse_args()
+    buckets = [int(b) for b in args.buckets.split()]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    trained = train_all()
+    save_params(trained, args.out_dir)
+    fns = make_variant_fns(trained)
+
+    manifest = {"signature": "(adj[n,n] f32, x0[n] f32, mask[n] f32) -> (scores[n] f32,)",
+                "train_bucket": TRAIN_BUCKET, "seed": SEED, "artifacts": []}
+    variants = list(fns) if not args.skip_variants else ["pfm"]
+    for variant in variants:
+        for n in buckets:
+            fname = f"{variant}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            size = export_scores_fn(fns[variant], n, path)
+            manifest["artifacts"].append(
+                {"variant": variant, "n": n, "file": fname, "chars": size})
+            print(f"[aot] wrote {fname} ({size} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] {len(manifest['artifacts'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

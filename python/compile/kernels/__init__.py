@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels for the PFM network (interpret=True on CPU;
+see DESIGN.md for the TPU BlockSpec rationale) plus pure-jnp oracles."""

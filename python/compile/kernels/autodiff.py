@@ -1,0 +1,33 @@
+"""Autodiff bridging for Pallas kernels.
+
+Pallas `interpret=True` kernels do not support reverse-mode autodiff, but
+PFM training differentiates through the reordering layer and the encoder.
+`with_ref_vjp(kernel, ref)` wraps a Pallas forward with a `jax.custom_vjp`
+whose backward pass is the VJP of the *pure-jnp reference oracle* — the two
+are numerically identical (asserted by the test suite), so gradients are
+exact while the forward stays on the kernel (and therefore in the exported
+HLO artifacts).
+"""
+
+import jax
+
+
+def with_ref_vjp(pallas_fn, ref_fn):
+    """Wrap `pallas_fn` so forward runs Pallas and backward runs the VJP of
+    `ref_fn`. Both must have identical signatures and outputs; all
+    positional arguments must be arrays (scalars are fine — they get zero
+    cotangents of matching shape)."""
+
+    @jax.custom_vjp
+    def wrapped(*args):
+        return pallas_fn(*args)
+
+    def fwd(*args):
+        return pallas_fn(*args), args
+
+    def bwd(args, ct):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(ct)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped

@@ -1,0 +1,77 @@
+"""Pallas kernel: the proximal operator of the l1 norm with the
+lower-triangular projection (paper Eq. 14 + Algorithm 1 lines 11-13).
+
+S_eta(L)ij = sign(Lij) * max(|Lij| - eta, 0), then tril().
+
+Elementwise VPU work: blocked into row panels so the kernel streams the
+matrix through VMEM once. The tril mask is computed in-kernel from the
+panel's global row offset (program_id * TILE) instead of materializing an
+(n, n) mask in HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.tiles import pick_tile
+
+TILE = 8
+
+
+def _prox_tril_kernel(l_ref, eta_ref, o_ref):
+    i = pl.program_id(0)
+    l = l_ref[...]  # (TILE, n)
+    eta = eta_ref[0]
+    tm, n = l.shape
+    soft = jnp.sign(l) * jnp.maximum(jnp.abs(l) - eta, 0.0)
+    # global row index of each panel row
+    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, n), 1)
+    o_ref[...] = jnp.where(cols <= rows, soft, 0.0).astype(o_ref.dtype)
+
+
+def prox_tril(l: jnp.ndarray, eta) -> jnp.ndarray:
+    """tril(S_eta(L)) as a row-panel Pallas kernel.
+
+    `eta` may be a python float or a traced scalar (it is passed as a
+    length-1 array so the exported HLO can take it as an input).
+    """
+    n, m = l.shape
+    tile = pick_tile(n)
+    eta_arr = jnp.asarray(eta, dtype=l.dtype).reshape((1,))
+    return pl.pallas_call(
+        _prox_tril_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), l.dtype),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        interpret=True,
+    )(l, eta_arr)
+
+
+def soft_threshold(l: jnp.ndarray, eta) -> jnp.ndarray:
+    """S_eta without the tril projection (used by tests and the L-update's
+    gradient-step variant)."""
+    n, m = l.shape
+    tile = pick_tile(n)
+    eta_arr = jnp.asarray(eta, dtype=l.dtype).reshape((1,))
+
+    def kernel(l_ref, eta_ref, o_ref):
+        x = l_ref[...]
+        e = eta_ref[0]
+        o_ref[...] = (jnp.sign(x) * jnp.maximum(jnp.abs(x) - e, 0.0)).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), l.dtype),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        interpret=True,
+    )(l, eta_arr)

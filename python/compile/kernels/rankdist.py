@@ -1,0 +1,122 @@
+"""Pallas kernels: Gaussian rank-distribution construction (paper Eq. 6-9,
+the first reparameterization of the differentiable reordering layer).
+
+Two kernels:
+  1. `rank_stats`  — pairwise win probabilities reduced on the fly into the
+     rank mean/variance (mu_u, sigma_u^2). Row panel (TILE, n) of the
+     pairwise matrix lives only in VMEM; the full n x n win matrix is never
+     materialized in HBM (the GPU reference keeps it resident — on TPU the
+     fused reduce saves n^2 * 4 bytes of HBM traffic per pass).
+  2. `rank_dist_from_stats` — P̂[u, i] = Phi((i+.5-mu)/s) - Phi((i-.5-mu)/s)
+     row panel over u.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.tiles import pick_tile
+
+TILE = 8
+_SQRT2 = 1.4142135623730951
+
+
+def _phi(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / _SQRT2))
+
+
+def _stats_kernel(y_tile_ref, y_all_ref, sigma_ref, mu_ref, var_ref):
+    """Rank moments for one panel of nodes u: reduce over all v."""
+    yu = y_tile_ref[...]  # (TILE,)
+    yv = y_all_ref[...]  # (n,)
+    sigma = sigma_ref[0]
+    # wins[u, v] = Pr(Y_u > Y_v)
+    diff = yu[:, None] - yv[None, :]
+    wins = _phi(diff / (_SQRT2 * sigma))
+    # exclude v == u: that pair contributes Phi(0) = 0.5 to every row
+    # exactly once — subtract it instead of building an identity mask
+    mu_ref[...] = jnp.sum(wins, axis=1) - 0.5
+    var_ref[...] = jnp.sum(wins * (1.0 - wins), axis=1) - 0.25
+
+
+def _rank_stats_pallas(y: jnp.ndarray, sigma) -> tuple:
+    """(mu, var) of each node's rank distribution (Eq. 7-8).
+
+    R_u = expected number of nodes scoring *below* u, so the lowest score
+    gets rank ~0 — consistent with the ascending argsort the Rust
+    coordinator applies at inference.
+    """
+    n = y.shape[0]
+    tile = pick_tile(n)
+    sigma_arr = jnp.asarray(sigma, dtype=y.dtype).reshape((1,))
+    mu, var = pl.pallas_call(
+        _stats_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), y.dtype),
+            jax.ShapeDtypeStruct((n,), y.dtype),
+        ),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(y, y, sigma_arr)
+    return mu, var
+
+
+def _dist_kernel(mu_ref, var_ref, o_ref):
+    """P̂ rows for one panel of nodes u over all positions i."""
+    mu = mu_ref[...]  # (TILE,)
+    var = var_ref[...]
+    tm = mu.shape[0]
+    n = o_ref.shape[1]
+    std = jnp.sqrt(jnp.maximum(var, 1e-12))
+    i = jax.lax.broadcasted_iota(jnp.float32, (tm, n), 1)
+    upper = (i + 0.5 - mu[:, None]) / std[:, None]
+    lower = (i - 0.5 - mu[:, None]) / std[:, None]
+    # Phi(upper) - Phi(lower) can go epsilon-negative by cancellation;
+    # clamp so downstream log() stays finite
+    o_ref[...] = jnp.maximum(_phi(upper) - _phi(lower), 0.0).astype(o_ref.dtype)
+
+
+def _rank_dist_from_stats_pallas(mu: jnp.ndarray, var: jnp.ndarray) -> jnp.ndarray:
+    """P̂ (Eq. 9) from precomputed rank moments."""
+    n = mu.shape[0]
+    tile = pick_tile(n)
+    return pl.pallas_call(
+        _dist_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), mu.dtype),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        interpret=True,
+    )(mu, var)
+
+
+# Public entry points: Pallas forward, reference-oracle backward
+# (interpret mode has no reverse-mode autodiff — see kernels/autodiff.py).
+from compile.kernels.autodiff import with_ref_vjp  # noqa: E402
+from compile.kernels.ref import (  # noqa: E402
+    rank_dist_from_stats_ref,
+    rank_stats_ref,
+)
+
+rank_stats = with_ref_vjp(_rank_stats_pallas, rank_stats_ref)
+rank_dist_from_stats = with_ref_vjp(
+    _rank_dist_from_stats_pallas, rank_dist_from_stats_ref
+)
+
+
+def rank_dist(y: jnp.ndarray, sigma) -> jnp.ndarray:
+    """Full first reparameterization: scores -> P̂ (Eq. 6-9)."""
+    mu, var = rank_stats(y, sigma)
+    return rank_dist_from_stats(mu, var)

@@ -1,0 +1,102 @@
+"""Pallas kernel: Sinkhorn normalization in log space (Gumbel-Sinkhorn
+inner loop, paper Algorithm 2 lines 9-12).
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the GPU reference
+implementation normalizes the whole n x n matrix at once; here each
+normalization pass is a Pallas kernel blocked into row panels of shape
+(TILE, n) so one panel fits VMEM even at the largest bucket (n=1024:
+128*1024*4 B = 512 KiB/panel). Column normalization reuses the same kernel
+on the transposed view, which keeps the reduction axis contiguous in VMEM
+lanes instead of striding across panels.
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls; on a real TPU the same BlockSpecs lower natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.tiles import pick_tile
+
+from compile.kernels.autodiff import with_ref_vjp
+
+# Row-panel height. 8 divides every bucket size we export (64..1024) and
+# keeps the (TILE, n) panel + (TILE, 1) accumulator well inside VMEM.
+TILE = 8
+
+
+def _row_lse_sub_kernel(x_ref, o_ref):
+    """o = x - logsumexp(x, axis=1, keepdims=True) over one row panel."""
+    x = x_ref[...]
+    m = jnp.max(x, axis=1, keepdims=True)
+    # guard -inf rows (all-masked): keep them -inf without NaN
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m), axis=1, keepdims=True))
+    o_ref[...] = x - lse
+
+
+def _normalize_rows_pallas(log_p: jnp.ndarray) -> jnp.ndarray:
+    """Row-normalize in log space via the row-panel Pallas kernel."""
+    n, m = log_p.shape
+    tile = pick_tile(n)
+    return pl.pallas_call(
+        _row_lse_sub_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), log_p.dtype),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        interpret=True,
+    )(log_p)
+
+
+def _normalize_rows_ref(log_p: jnp.ndarray) -> jnp.ndarray:
+    return log_p - jax.scipy.special.logsumexp(log_p, axis=1, keepdims=True)
+
+
+# Pallas forward, reference-oracle backward (interpret mode has no
+# reverse-mode autodiff — see kernels/autodiff.py).
+_normalize_rows = with_ref_vjp(_normalize_rows_pallas, _normalize_rows_ref)
+
+
+def sinkhorn_step(log_p: jnp.ndarray) -> jnp.ndarray:
+    """One Sinkhorn iteration: column then row normalization (log space)."""
+    # column pass = row pass on the transpose
+    log_p = _normalize_rows(log_p.T).T
+    return _normalize_rows(log_p)
+
+
+@functools.partial(jax.jit, static_argnames="n_iters")
+def sinkhorn(log_p: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    """`n_iters` Sinkhorn iterations (log-space). Returns log of the
+    (approximately) doubly stochastic matrix. Implemented with lax.scan
+    (static trip count) so the whole operator is reverse-differentiable."""
+
+    def body(lp, _):
+        return sinkhorn_step(lp), None
+
+    out, _ = jax.lax.scan(body, log_p, None, length=n_iters)
+    return out
+
+
+def gumbel_noise(key, shape, dtype=jnp.float32, eps: float = 1e-20):
+    """Gumbel(0,1) noise as in Algorithm 2 lines 2-3."""
+    u = jax.random.uniform(key, shape, dtype=dtype, minval=0.0, maxval=1.0)
+    return -jnp.log(eps - jnp.log(u + eps))
+
+
+def gumbel_sinkhorn(
+    log_p_hat: jnp.ndarray,
+    key,
+    tau: float = 0.3,
+    n_iters: int = 20,
+    noise_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Full Gumbel-Sinkhorn operator (Algorithm 2): perturb the log rank
+    distribution matrix with Gumbel noise, divide by the temperature, run
+    Sinkhorn, exponentiate. Returns the (soft) permutation matrix P_theta."""
+    g = gumbel_noise(key, log_p_hat.shape, log_p_hat.dtype) * noise_scale
+    log_p = (log_p_hat + g) / tau
+    return jnp.exp(sinkhorn(log_p, n_iters))

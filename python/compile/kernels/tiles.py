@@ -1,0 +1,16 @@
+"""Tile-size selection shared by the Pallas kernels.
+
+Panels want to be as tall as VMEM allows: fewer grid steps means less
+interpret-mode dispatch on CPU and better MXU occupancy on real TPU. All
+exported buckets are multiples of 64; odd test shapes fall back gracefully.
+"""
+
+
+def pick_tile(n: int, cap: int = 64) -> int:
+    """Largest power-of-two tile <= cap that divides n (>= 1)."""
+    t = cap
+    while t > 1:
+        if n % t == 0:
+            return t
+        t //= 2
+    return 1

@@ -1,0 +1,227 @@
+"""L2: the PFM reordering network in JAX (build-time only).
+
+Pipeline (paper Fig. 2): graph transformation (done by the caller — the
+matrix arrives as a dense adjacency panel) → spectral embedding S_e → graph
+node encoder f_theta → node scores Y.
+
+Design notes / substitutions (DESIGN.md §Substitutions):
+
+* **S_e** — the paper uses the pretrained multigrid GNN of Gatti et al.
+  (2021) to estimate the Fiedler vector and freezes it. At our scale the
+  Fiedler estimate is computed exactly by deflated power iteration on the
+  normalized Laplacian — same interface (random features in, spectral
+  embedding out), same role (frozen, not trained), strictly better
+  estimate.
+* **MgGNN encoder** — Graclus pooling/unpooling is data-dependent and
+  cannot live in a fixed-shape AOT artifact. The encoder keeps the paper's
+  ingredients (SAGEConv + Tanh stacks, hidden width 16, multi-scale
+  receptive field, 4 linear head layers) but realizes multi-scale context
+  with a deep jumping-knowledge SAGE stack plus a global mean-pool summary
+  node instead of explicit coarsening.
+* **GraphUnet variant** — for the Table 3 ablation: same depth, soft
+  sigmoid gating in place of top-k pooling (top-k is dynamic-shape).
+
+Every dense contraction the encoder performs goes through the L1 Pallas
+kernels (`kernels.sage`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sage import sage_aggregate
+
+HIDDEN = 16
+ENCODER_LAYERS = 4
+# Deflated power iteration converges at rate (2-λ₂)/(2-λ₃). Mesh-like
+# graphs at n≈512 have gaps ~1e-2, needing ~1.5k iterations for a clean
+# Fiedler estimate. Each iteration is one dense mat-VEC (n² flops), so even
+# 1536 iterations at n=1024 is ~3 GFLOP — sub-second on the CPU PJRT.
+SPECTRAL_ITERS = 1536
+
+
+# ---------------------------------------------------------------------------
+# Spectral embedding S_e (frozen)
+# ---------------------------------------------------------------------------
+
+
+def spectral_embedding(adj: jnp.ndarray, x0: jnp.ndarray, mask: jnp.ndarray,
+                       iters: int = SPECTRAL_ITERS) -> jnp.ndarray:
+    """Estimate the Fiedler vector of the masked adjacency by deflated
+    power iteration on B = 2I - L̂ (L̂ = normalized Laplacian).
+
+    B's top eigenvector is the known d^(1/2) direction; deflating it makes
+    the iteration converge to the Fiedler embedding. `x0` is the random
+    feature initialization (paper Eq. 2); `mask` marks real (non-padding)
+    nodes.
+
+    The embedding graph is the BINARY sparsity pattern, not the weighted
+    matrix: fill-in is determined by the pattern alone, and on
+    high-contrast matrices (thermal class) the weighted Fiedler vector
+    orders by conductivity clusters instead of geometry — measurably worse
+    for fill (see EXPERIMENTS.md §Perf, S_e iteration log).
+    """
+    w = (jnp.abs(adj) > 0).astype(jnp.float32) * mask[:, None] * mask[None, :]
+    w = w - jnp.diag(jnp.diag(w))  # strip self loops
+    deg = jnp.sum(w, axis=1)
+    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    # top eigenvector direction of B: d^(1/2), masked + normalized
+    top = jnp.sqrt(jnp.maximum(deg, 0.0)) * mask
+    top = top / jnp.maximum(jnp.linalg.norm(top), 1e-12)
+
+    def matvec_b(x):
+        # B x = 2x - L̂x = x + D^{-1/2} W D^{-1/2} x   (on masked nodes)
+        wx = w @ (inv_sqrt * x)
+        return (x + inv_sqrt * wx) * mask
+
+    def body(_, x):
+        x = matvec_b(x)
+        x = x - jnp.dot(top, x) * top  # deflate the trivial eigenvector
+        x = x * mask
+        return x / jnp.maximum(jnp.linalg.norm(x), 1e-12)
+
+    x = x0 * mask
+    x = x - jnp.dot(top, x) * top
+    x = x / jnp.maximum(jnp.linalg.norm(x), 1e-12)
+    x = jax.lax.fori_loop(0, iters, body, x)
+    return x[:, None]  # (n, 1) spectral feature
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_params(key, in_dim: int = 1, hidden: int = HIDDEN,
+                layers: int = ENCODER_LAYERS) -> dict:
+    """Initialize encoder parameters (SAGE stack + gates + 4-layer head)."""
+    keys = jax.random.split(key, layers * 3 + 5)
+    params = {"sage": [], "gate": []}
+    d = in_dim
+    for l in range(layers):
+        params["sage"].append({
+            "w_self": _glorot(keys[3 * l], (d, hidden)),
+            "w_nb": _glorot(keys[3 * l + 1], (d, hidden)),
+            "b": jnp.zeros((hidden,), jnp.float32),
+        })
+        params["gate"].append(_glorot(keys[3 * l + 2], (hidden, 1)))
+        d = hidden
+    # head input: jumping-knowledge concat of all layer outputs + global ctx
+    head_in = hidden * layers + hidden
+    k0 = layers * 3
+    params["head"] = [
+        {"w": _glorot(keys[k0], (head_in, hidden)), "b": jnp.zeros((hidden,))},
+        {"w": _glorot(keys[k0 + 1], (hidden, hidden)), "b": jnp.zeros((hidden,))},
+        {"w": _glorot(keys[k0 + 2], (hidden, hidden)), "b": jnp.zeros((hidden,))},
+        # zero-init final layer: together with the spectral skip connection
+        # in pfm_scores the network starts *exactly* at the S_e ordering and
+        # training refines it — without this the noisy factorization-loss
+        # gradient destroys the spectral prior before it can improve on it
+        {"w": jnp.zeros((hidden, 1), jnp.float32), "b": jnp.zeros((1,))},
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Encoders
+# ---------------------------------------------------------------------------
+
+
+def _sage_layer(p, adj_mask, h, mask):
+    """SAGEConv + Tanh (paper Eq. 16): self transform + mean-aggregated
+    neighbour transform. Aggregation runs on the L1 Pallas kernel."""
+    agg = sage_aggregate(adj_mask, h)
+    out = jnp.tanh(h @ p["w_self"] + agg @ p["w_nb"] + p["b"])
+    return out * mask[:, None]
+
+
+def _head(params, feats, mask):
+    h = feats
+    for i, lin in enumerate(params["head"]):
+        h = h @ lin["w"] + lin["b"]
+        if i < len(params["head"]) - 1:
+            h = jnp.tanh(h)
+    return (h[:, 0]) * mask
+
+
+def _global_context(h, mask):
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    g = jnp.sum(h * mask[:, None], axis=0) / denom
+    return jnp.broadcast_to(g, h.shape)
+
+
+def encode_mggnn(params, adj_mask, xg, mask):
+    """Multi-scale SAGE encoder (MgGNN stand-in): jumping-knowledge stack
+    with a global context summary (the 'coarsest level' analogue)."""
+    h = xg
+    collected = []
+    for p in params["sage"]:
+        h = _sage_layer(p, adj_mask, h, mask)
+        collected.append(h)
+    ctx = _global_context(collected[-1], mask)
+    feats = jnp.concatenate(collected + [ctx], axis=1)
+    return _head(params, feats, mask)
+
+
+def encode_gunet(params, adj_mask, xg, mask):
+    """GraphUnet-lite ablation variant: soft sigmoid gating after each
+    SAGE layer (the fixed-shape analogue of top-k pooling)."""
+    h = xg
+    collected = []
+    for p, gate_w in zip(params["sage"], params["gate"]):
+        h = _sage_layer(p, adj_mask, h, mask)
+        g = jax.nn.sigmoid(h @ gate_w)  # (n, 1) soft retention
+        h = h * g
+        collected.append(h)
+    ctx = _global_context(collected[-1], mask)
+    feats = jnp.concatenate(collected + [ctx], axis=1)
+    return _head(params, feats, mask)
+
+
+# ---------------------------------------------------------------------------
+# Full network
+# ---------------------------------------------------------------------------
+
+
+def adjacency_mask(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Binary off-diagonal adjacency restricted to real nodes."""
+    m = (jnp.abs(adj) > 0).astype(jnp.float32)
+    m = m - jnp.diag(jnp.diag(m))
+    return m * mask[:, None] * mask[None, :]
+
+
+def pfm_scores(params, adj, x0, mask, encoder: str = "mggnn",
+               use_spectral: bool = True):
+    """Node scores Y = f_theta(S_e(G))  (paper Eq. 3-4).
+
+    `adj`: (n, n) dense symmetric matrix panel (zero-padded);
+    `x0`: (n,) random node features (paper Eq. 2);
+    `mask`: (n,) 1.0 for real nodes, 0.0 for padding.
+    """
+    am = adjacency_mask(adj, mask)
+    if use_spectral:
+        # iteration budget scales with the bucket: small graphs have large
+        # spectral gaps and converge in ~3n steps; cap at SPECTRAL_ITERS
+        iters = min(SPECTRAL_ITERS, 3 * adj.shape[0])
+        xg = spectral_embedding(adj, x0, mask, iters=iters)
+    else:
+        xg = (x0 * mask)[:, None]
+    enc = encode_mggnn if encoder == "mggnn" else encode_gunet
+    # residual: scores = spectral prior + learned refinement (the final
+    # head layer is zero-initialized, so training starts from S_e)
+    return xg[:, 0] * mask + enc(params, am, xg, mask)
+
+
+def se_scores(adj, x0, mask):
+    """The S_e baseline: the spectral embedding itself used as ordering
+    scores (paper Table 2 row 'S_e'). Uses the SAME iteration budget as
+    pfm_scores — an earlier revision used a larger fixed budget here, which
+    silently confounded the PFM-vs-S_e comparison (different Fiedler
+    convergence, not training, produced the gap)."""
+    iters = min(SPECTRAL_ITERS, 3 * adj.shape[0])
+    return spectral_embedding(adj, x0, mask, iters=iters)[:, 0]

@@ -1,0 +1,76 @@
+"""AOT export tests: HLO text artifacts parse, have the right entry
+signature, and the manifest is consistent. (Numeric parity of the exported
+computation is asserted on the Rust side — rust/tests/runtime_integration.)
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_export_writes_parseable_hlo(tiny_params):
+    def fn(adj, x0, mask):
+        return (model.pfm_scores(tiny_params, adj, x0, mask),)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.hlo.txt")
+        size = aot.export_scores_fn(fn, 16, path)
+        text = open(path).read()
+        assert size == len(text) > 1000
+        assert "ENTRY" in text
+        assert "HloModule" in text
+        # three f32 inputs at the exported bucket size
+        assert "f32[16,16]" in text
+        assert "f32[16]" in text
+
+
+def test_export_se_variant_needs_no_params():
+    def fn(adj, x0, mask):
+        return (model.se_scores(adj, x0, mask),)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "se.hlo.txt")
+        aot.export_scores_fn(fn, 16, path)
+        assert "ENTRY" in open(path).read()
+
+
+def test_variant_fn_table_covers_all_artifacts(tiny_params):
+    trained = {k: tiny_params for k in
+               ["pfm", "gpce", "udno", "pfm_randinit", "pfm_gunet"]}
+    fns = aot.make_variant_fns(trained)
+    assert set(fns) == {"pfm", "se", "gpce", "udno", "pfm_randinit",
+                        "pfm_gunet"}
+    # each produces a 1-tuple of (n,) scores
+    adj = jnp.zeros((16, 16))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    mask = jnp.ones((16,))
+    for name, fn in fns.items():
+        out = fn(adj, x0, mask)
+        assert isinstance(out, tuple) and len(out) == 1, name
+        assert out[0].shape == (16,), name
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+def test_built_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    manifest = json.load(open(os.path.join(root, "manifest.json")))
+    assert manifest["artifacts"], "manifest lists no artifacts"
+    for art in manifest["artifacts"]:
+        path = os.path.join(root, art["file"])
+        assert os.path.exists(path), art["file"]
+        text = open(path).read()
+        assert len(text) == art["chars"]
+        assert f"f32[{art['n']},{art['n']}]" in text

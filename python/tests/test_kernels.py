@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes and magnitudes with hypothesis. This is the core correctness signal
+for the kernels that end up inside the AOT artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prox, rankdist, ref, sage, sinkhorn
+
+# Shapes: mix of tile-aligned (multiples of 8) and deliberately unaligned
+# sizes (the kernels fall back to tile=1).
+SIZES = st.sampled_from([8, 16, 24, 13, 40, 64])
+FEATS = st.sampled_from([1, 4, 16])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------------------
+# sinkhorn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, seed=SEEDS)
+def test_sinkhorn_step_matches_ref(n, seed):
+    lp = 3.0 * jax.random.normal(_key(seed), (n, n))
+    got = sinkhorn.sinkhorn_step(lp)
+    want = ref.sinkhorn_step_ref(lp)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=SIZES, seed=SEEDS, iters=st.sampled_from([1, 5, 20]))
+def test_sinkhorn_matches_ref(n, seed, iters):
+    lp = jax.random.normal(_key(seed), (n, n))
+    got = sinkhorn.sinkhorn(lp, iters)
+    want = ref.sinkhorn_ref(lp, iters)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sinkhorn_produces_doubly_stochastic():
+    lp = jax.random.normal(_key(0), (32, 32)) * 4.0
+    p = jnp.exp(sinkhorn.sinkhorn(lp, 40))
+    np.testing.assert_allclose(p.sum(axis=0), np.ones(32), atol=1e-3)
+    np.testing.assert_allclose(p.sum(axis=1), np.ones(32), atol=1e-3)
+
+
+def test_gumbel_sinkhorn_approaches_hard_permutation():
+    # widely separated ranks + low temperature → near-binary matrix
+    y = jnp.linspace(-3, 3, 16)
+    p_hat = rankdist.rank_dist(y, 1e-3)
+    log_p = jnp.log(jnp.maximum(p_hat, 0.0) + 1e-20)
+    p = sinkhorn.gumbel_sinkhorn(log_p, _key(1), tau=0.1, n_iters=40,
+                                 noise_scale=1e-3)
+    assert float(jnp.max(p, axis=1).min()) > 0.9
+
+
+def test_sinkhorn_gradient_flows():
+    lp = jax.random.normal(_key(2), (16, 16))
+
+    def f(x):
+        return jnp.sum(jnp.exp(sinkhorn.sinkhorn(x, 5)) ** 2)
+
+    g = jax.grad(f)(lp)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.abs(g).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# sage
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, f=FEATS, seed=SEEDS)
+def test_sage_matches_ref(n, f, seed):
+    k1, k2 = jax.random.split(_key(seed))
+    adj = (jax.random.uniform(k1, (n, n)) > 0.7).astype(jnp.float32)
+    adj = adj * (1.0 - jnp.eye(n))
+    h = jax.random.normal(k2, (n, f))
+    got = sage.sage_aggregate(adj, h)
+    want = ref.sage_aggregate_ref(adj, h)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_sage_empty_rows_aggregate_to_zero():
+    adj = jnp.zeros((8, 8))
+    h = jnp.ones((8, 3))
+    out = sage.sage_aggregate(adj, h)
+    np.testing.assert_allclose(out, np.zeros((8, 3)))
+
+
+def test_sage_gradient_matches_ref_gradient():
+    k1, k2 = jax.random.split(_key(3))
+    adj = (jax.random.uniform(k1, (16, 16)) > 0.5).astype(jnp.float32)
+    h = jax.random.normal(k2, (16, 4))
+
+    g_kernel = jax.grad(lambda x: jnp.sum(sage.sage_aggregate(adj, x) ** 2))(h)
+    g_ref = jax.grad(lambda x: jnp.sum(ref.sage_aggregate_ref(adj, x) ** 2))(h)
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# prox
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, seed=SEEDS, eta=st.sampled_from([0.0, 0.01, 0.3, 2.0]))
+def test_prox_tril_matches_ref(n, seed, eta):
+    l = 2.0 * jax.random.normal(_key(seed), (n, n))
+    got = prox.prox_tril(l, eta)
+    want = ref.prox_tril_ref(l, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=SIZES, seed=SEEDS)
+def test_soft_threshold_matches_ref(n, seed):
+    l = jax.random.normal(_key(seed), (n, n))
+    np.testing.assert_allclose(prox.soft_threshold(l, 0.2),
+                               ref.soft_threshold_ref(l, 0.2),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_prox_shrinks_l1_norm():
+    l = jax.random.normal(_key(4), (24, 24))
+    out = prox.prox_tril(l, 0.1)
+    assert float(jnp.abs(out).sum()) < float(jnp.abs(jnp.tril(l)).sum())
+    # strictly upper triangle zeroed
+    assert float(jnp.abs(jnp.triu(out, 1)).max()) == 0.0
+
+
+def test_prox_zero_eta_is_tril():
+    l = jax.random.normal(_key(5), (16, 16))
+    np.testing.assert_allclose(prox.prox_tril(l, 0.0), jnp.tril(l),
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# rankdist
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=SIZES, seed=SEEDS, sigma=st.sampled_from([1e-3, 1e-2, 0.1]))
+def test_rank_stats_matches_ref(n, seed, sigma):
+    y = jax.random.normal(_key(seed), (n,))
+    mu_k, var_k = rankdist.rank_stats(y, sigma)
+    mu_r, var_r = ref.rank_stats_ref(y, sigma)
+    np.testing.assert_allclose(mu_k, mu_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(var_k, var_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=SIZES, seed=SEEDS)
+def test_rank_dist_matches_ref(n, seed):
+    y = jax.random.normal(_key(seed), (n,))
+    got = rankdist.rank_dist(y, 1e-3)
+    want = ref.rank_dist_ref(y, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_rank_dist_rows_are_distributions():
+    y = jax.random.normal(_key(6), (32,))
+    p = rankdist.rank_dist(y, 1e-3)
+    assert float(p.min()) >= 0.0
+    # interior ranks capture essentially all mass
+    np.testing.assert_allclose(p.sum(axis=1), np.ones(32), atol=2e-2)
+
+
+def test_rank_dist_separated_scores_give_identity_like_rows():
+    # strictly increasing well-separated scores → node i concentrated at
+    # rank i
+    y = jnp.linspace(0, 10, 16)
+    p = rankdist.rank_dist(y, 1e-3)
+    assert float(jnp.diag(p).min()) > 0.99
+
+
+def test_rank_stats_mean_total_is_pairs():
+    # sum of mu over nodes = number of ordered pairs / 2 = n(n-1)/2
+    y = jax.random.normal(_key(7), (24,))
+    mu, _ = rankdist.rank_stats(y, 0.01)
+    np.testing.assert_allclose(float(mu.sum()), 24 * 23 / 2, rtol=1e-3)
+
+
+def test_rank_dist_gradient_flows():
+    y = jax.random.normal(_key(8), (16,))
+
+    def f(x):
+        return jnp.sum(rankdist.rank_dist(x, 0.05) ** 2)
+
+    g = jax.grad(f)(y)
+    assert bool(jnp.all(jnp.isfinite(g)))

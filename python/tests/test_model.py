@@ -1,0 +1,165 @@
+"""L2 model tests: spectral embedding quality, encoder shapes/masking, and
+the differentiable reordering layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, reorder, train
+
+
+def grid_adj(nx, ny):
+    return jnp.asarray(train._grid_laplacian(nx, ny))
+
+
+def pad_to(a, bucket):
+    n = a.shape[0]
+    out = jnp.zeros((bucket, bucket), a.dtype)
+    out = out.at[:n, :n].set(a)
+    mask = jnp.zeros((bucket,), jnp.float32).at[:n].set(1.0)
+    return out, mask
+
+
+# ---------------------------------------------------------------------------
+# spectral embedding
+# ---------------------------------------------------------------------------
+
+
+def test_spectral_embedding_is_fiedler_like():
+    # 2D grid: the embedding's Rayleigh quotient on the normalized
+    # Laplacian must approach λ₂ (power iteration accuracy check)
+    a = np.asarray(grid_adj(8, 4))
+    n = a.shape[0]
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    emb = np.asarray(
+        model.spectral_embedding(jnp.asarray(a), x0, jnp.ones(n))[:, 0])
+    # normalized laplacian
+    w = np.abs(a).astype(np.float64)
+    np.fill_diagonal(w, 0.0)
+    d = w.sum(axis=1)
+    dis = 1.0 / np.sqrt(d)
+    lhat = np.eye(n) - (dis[:, None] * w * dis[None, :])
+    evals = np.linalg.eigvalsh(lhat)
+    lam2 = evals[1]
+    rq = emb @ (lhat @ emb) / (emb @ emb)
+    assert rq < lam2 * 1.3 + 1e-6, f"rayleigh {rq} vs λ₂ {lam2}"
+
+
+def test_spectral_embedding_separates_grid_halves():
+    # on a 2:1 grid the Fiedler sign splits the long axis
+    nx, ny = 8, 4
+    a = np.asarray(grid_adj(nx, ny))
+    n = a.shape[0]
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    emb = np.asarray(
+        model.spectral_embedding(jnp.asarray(a), x0, jnp.ones(n))[:, 0])
+    left = sum(emb[y * nx + x] for x in range(nx // 2) for y in range(ny))
+    right = sum(emb[y * nx + x] for x in range(nx // 2, nx) for y in range(ny))
+    assert left * right < 0, f"halves not separated: {left} vs {right}"
+
+
+def test_spectral_embedding_orthogonal_to_trivial():
+    a, mask = pad_to(grid_adj(6, 6), 40)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (40,))
+    emb = model.spectral_embedding(a, x0, mask)[:, 0]
+    # orthogonal to d^(1/2) on the masked nodes
+    w = jnp.abs(a) * mask[:, None] * mask[None, :]
+    w = w - jnp.diag(jnp.diag(w))
+    d_sqrt = jnp.sqrt(w.sum(axis=1))
+    assert abs(float(jnp.dot(emb, d_sqrt))) < 1e-3
+    # padding entries are zero
+    np.testing.assert_allclose(emb[36:], np.zeros(4), atol=1e-9)
+
+
+def test_spectral_embedding_padding_invariance():
+    # the same matrix in two different buckets gives the same real-node
+    # embedding up to sign
+    a36 = grid_adj(6, 6)
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (64,))
+    a_pad40, m40 = pad_to(a36, 40)
+    a_pad64, m64 = pad_to(a36, 64)
+    e40 = np.asarray(model.spectral_embedding(a_pad40, x0[:40], m40)[:36, 0])
+    e64 = np.asarray(model.spectral_embedding(a_pad64, x0[:64], m64)[:36, 0])
+    # align sign (eigenvector defined up to sign; same x0 prefix makes the
+    # iterations near-identical but allow sign flip for safety)
+    if np.dot(e40, e64) < 0:
+        e64 = -e64
+    np.testing.assert_allclose(e40, e64, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoder", ["mggnn", "gunet"])
+def test_scores_shape_and_padding(encoder):
+    params = model.init_params(jax.random.PRNGKey(0))
+    a, mask = pad_to(grid_adj(5, 5), 32)
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (32,))
+    y = model.pfm_scores(params, a, x0, mask, encoder=encoder)
+    assert y.shape == (32,)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(y[25:], np.zeros(7), atol=1e-9)
+
+
+def test_encoders_differ():
+    params = model.init_params(jax.random.PRNGKey(0))
+    # the final head layer is zero-initialized (residual-from-S_e design),
+    # so untrained encoders coincide; perturb it to compare architectures
+    params["head"][-1]["w"] = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(42), params["head"][-1]["w"].shape)
+    a, mask = pad_to(grid_adj(5, 5), 32)
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (32,))
+    y1 = model.pfm_scores(params, a, x0, mask, encoder="mggnn")
+    y2 = model.pfm_scores(params, a, x0, mask, encoder="gunet")
+    assert float(jnp.abs(y1 - y2).max()) > 1e-6
+
+
+def test_scores_differentiable_wrt_params():
+    params = model.init_params(jax.random.PRNGKey(0))
+    a, mask = pad_to(grid_adj(4, 4), 16)
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (16,))
+
+    def f(p):
+        return jnp.sum(model.pfm_scores(p, a, x0, mask) ** 2)
+
+    g = jax.grad(f)(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+    total = sum(float(jnp.abs(x).sum()) for x in leaves)
+    assert total > 0.0
+
+
+# ---------------------------------------------------------------------------
+# reordering layer
+# ---------------------------------------------------------------------------
+
+
+def test_soft_permutation_is_doubly_stochastic():
+    y = jax.random.normal(jax.random.PRNGKey(6), (24,))
+    p = reorder.soft_permutation(y, jax.random.PRNGKey(7))
+    np.testing.assert_allclose(p.sum(axis=0), np.ones(24), atol=5e-2)
+    np.testing.assert_allclose(p.sum(axis=1), np.ones(24), atol=5e-2)
+    assert float(p.min()) >= 0.0
+
+
+def test_reorder_recovers_hard_permutation_for_separated_scores():
+    # well-separated scores → P_theta ≈ the hard permutation that sorts them
+    y = jnp.asarray([3.0, 0.0, 2.0, 1.0])
+    y_big = jnp.concatenate([y, jnp.arange(4.0, 8.0)])  # n=8 tile friendly
+    p = reorder.soft_permutation(y_big, jax.random.PRNGKey(8),
+                                 noise_scale=1e-4, tau=0.05, n_iters=60)
+    hard = np.argmax(np.asarray(p), axis=1)
+    # row i of P selects the node at rank i: ascending scores
+    expected = np.argsort(np.asarray(y_big), kind="stable")
+    np.testing.assert_array_equal(hard, expected)
+
+
+def test_reorder_conjugation_preserves_symmetry():
+    a, _ = pad_to(grid_adj(4, 4), 16)
+    y = jax.random.normal(jax.random.PRNGKey(9), (16,))
+    p = reorder.soft_permutation(y, jax.random.PRNGKey(10))
+    at = reorder.reorder(a, p)
+    np.testing.assert_allclose(at, at.T, atol=1e-5)

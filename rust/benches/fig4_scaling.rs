@@ -1,0 +1,35 @@
+//! Figure 4 bench: full (order + factor) pipeline across the size sweep
+//! for the key methods — regenerates the wall-clock series behind panels
+//! (b) and (c). `cargo bench --bench fig4_scaling`
+
+use pfm_reorder::coordinator::Method;
+use pfm_reorder::gen::{ProblemClass, TestMatrix};
+use pfm_reorder::harness::runner::evaluate_one;
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+use pfm_reorder::util::timer::Bench;
+
+fn main() {
+    println!("== fig4_scaling ==");
+    let mut rt = PfmRuntime::new("artifacts").expect("runtime");
+    let methods = [
+        Method::Classical(Classical::Amd),
+        Method::Classical(Classical::Metis),
+        Method::Classical(Classical::Fiedler),
+        Method::Learned(Learned::Udno),
+        Method::Learned(Learned::Pfm),
+    ];
+    for &n in &[128usize, 256, 512, 1024] {
+        let tm = TestMatrix {
+            name: format!("fig4_n{n}"),
+            class: ProblemClass::TwoDThreeD,
+            matrix: ProblemClass::TwoDThreeD.generate(n, 0xF16),
+        };
+        for method in methods {
+            let name = format!("pipeline_n{}/{}", n, method.label());
+            Bench::new(&name).warmup(1).iters(3).run(|| {
+                evaluate_one(&tm, method, &mut rt, 1).expect("evaluate")
+            });
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Micro-benchmarks of the L3 hot paths identified in DESIGN.md §Perf:
+//! symbolic analysis, numeric Cholesky, AMD's quotient-graph loop, the
+//! Lanczos Fiedler solve, and the permutation kernel. Hand-rolled harness
+//! (no criterion in the offline crate set) on util::timer::Bench.
+
+use pfm_reorder::factor::{analyze, cholesky_with};
+use pfm_reorder::gen::grid::{laplacian_2d, laplacian_3d};
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm};
+use pfm_reorder::util::timer::Bench;
+
+fn main() {
+    println!("== hotpaths ==");
+    let grid2d = laplacian_2d(64, 64); // n=4096
+    let grid3d = laplacian_3d(14, 14, 14); // n=2744
+    let sp = ProblemClass::Sp.generate(1728, 1);
+
+    Bench::new("symbolic_analyze/2d_n4096").iters(20).run(|| analyze(&grid2d));
+    Bench::new("symbolic_analyze/3d_n2744").iters(20).run(|| analyze(&grid3d));
+
+    let amd_order = amd(&grid2d);
+    let pap = grid2d.permute_sym(&amd_order);
+    let sym = analyze(&pap);
+    Bench::new("numeric_cholesky/amd_2d_n4096")
+        .iters(10)
+        .run(|| cholesky_with(&pap, &sym).unwrap());
+
+    let amd3 = amd(&grid3d);
+    let pap3 = grid3d.permute_sym(&amd3);
+    let sym3 = analyze(&pap3);
+    Bench::new("numeric_cholesky/amd_3d_n2744")
+        .iters(5)
+        .run(|| cholesky_with(&pap3, &sym3).unwrap());
+
+    Bench::new("order_amd/2d_n4096").iters(5).run(|| amd(&grid2d));
+    Bench::new("order_amd/sp_n1728").iters(5).run(|| amd(&sp));
+    Bench::new("order_rcm/2d_n4096").iters(10).run(|| rcm(&grid2d));
+    Bench::new("order_nd/2d_n4096").iters(5).run(|| nested_dissection(&grid2d));
+    Bench::new("order_fiedler/2d_n4096").iters(3).run(|| fiedler_order(&grid2d));
+
+    Bench::new("permute_sym/2d_n4096").iters(20).run(|| grid2d.permute_sym(&amd_order));
+    Bench::new("to_dense_padded/n512").iters(20).run(|| {
+        let a = ProblemClass::TwoDThreeD.generate(484, 3);
+        a.to_dense_padded_f32(512)
+    });
+}

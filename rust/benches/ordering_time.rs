@@ -1,0 +1,34 @@
+//! Ordering-time bench behind paper Table 1 / Figure 4(c): wall time of
+//! each ordering method across matrix sizes. The paper's claim: learned
+//! (score-sort) methods scale near-linearly and stay flat while Fiedler /
+//! Metis ordering time grows super-linearly.
+//! `cargo bench --bench ordering_time`
+
+use pfm_reorder::coordinator::Method;
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+use pfm_reorder::util::timer::Bench;
+
+fn main() {
+    println!("== ordering_time ==");
+    let mut rt = PfmRuntime::new("artifacts").expect("runtime");
+    let methods = [
+        Method::Classical(Classical::Rcm),
+        Method::Classical(Classical::Amd),
+        Method::Classical(Classical::Metis),
+        Method::Classical(Classical::Fiedler),
+        Method::Learned(Learned::Pfm),
+    ];
+    for &n in &[256usize, 512, 1024, 2048] {
+        let a = ProblemClass::TwoDThreeD.generate(n, 0x0DE7);
+        for method in methods {
+            let name = format!("n{}/{}", n, method.label());
+            let iters = if n >= 2048 { 3 } else { 5 };
+            Bench::new(&name).warmup(1).iters(iters).run(|| match method {
+                Method::Classical(c) => c.order(&a),
+                Method::Learned(l) => l.order(&mut rt, &a, 1).expect("order").0,
+            });
+        }
+    }
+}

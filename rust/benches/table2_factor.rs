@@ -1,0 +1,27 @@
+//! End-to-end bench behind paper Table 2: per-method ordering + symbolic +
+//! numeric factorization wall time on one representative matrix per class.
+//! `cargo bench --bench table2_factor`
+
+use pfm_reorder::coordinator::Method;
+use pfm_reorder::gen::{ProblemClass, TestMatrix};
+use pfm_reorder::harness::runner::evaluate_one;
+use pfm_reorder::runtime::PfmRuntime;
+use pfm_reorder::util::timer::Bench;
+
+fn main() {
+    println!("== table2_factor (one matrix/class, n≈512) ==");
+    let mut rt = PfmRuntime::new("artifacts").expect("runtime");
+    for &class in &ProblemClass::ALL {
+        let tm = TestMatrix {
+            name: format!("{}_bench", class.label()),
+            class,
+            matrix: class.generate(512, 0xBE1C),
+        };
+        for method in Method::table2() {
+            let name = format!("{}/{}", class.label(), method.label());
+            Bench::new(&name).warmup(1).iters(5).run(|| {
+                evaluate_one(&tm, method, &mut rt, 1).expect("evaluate")
+            });
+        }
+    }
+}

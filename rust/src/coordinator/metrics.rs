@@ -1,0 +1,130 @@
+//! Service metrics: counters and latency histograms, JSON-exportable.
+//! Lock-coarse (one mutex) — the coordinator serves ordering requests, not
+//! packets; contention is negligible next to the work per request.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::timer::Stats;
+
+#[derive(Default)]
+struct Inner {
+    /// per-method latency samples (seconds)
+    latencies: HashMap<&'static str, Vec<f64>>,
+    /// per-method request counts
+    completed: HashMap<&'static str, usize>,
+    errors: usize,
+    /// batch sizes observed by the network executor
+    batch_sizes: Vec<usize>,
+    fallbacks: usize,
+}
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, method: &'static str, latency: f64, batch: usize, fallback: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.latencies.entry(method).or_default().push(latency);
+        *m.completed.entry(method).or_default() += 1;
+        if batch > 0 {
+            m.batch_sizes.push(batch);
+        }
+        if fallback {
+            m.fallbacks += 1;
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn total_completed(&self) -> usize {
+        self.inner.lock().unwrap().completed.values().sum()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.inner.lock().unwrap().errors
+    }
+
+    pub fn fallbacks(&self) -> usize {
+        self.inner.lock().unwrap().fallbacks
+    }
+
+    /// Latency stats per method.
+    pub fn latency_stats(&self) -> Vec<(&'static str, Stats)> {
+        let m = self.inner.lock().unwrap();
+        let mut out: Vec<(&'static str, Stats)> = m
+            .latencies
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(k, v)| (*k, Stats::from_samples(v.clone())))
+            .collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Mean network batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+    }
+
+    /// Export everything as JSON.
+    pub fn to_json(&self) -> Json {
+        let stats = self.latency_stats();
+        let mut per_method = Json::obj();
+        for (name, s) in stats {
+            per_method = per_method.set(
+                name,
+                Json::obj()
+                    .set("count", s.n)
+                    .set("mean_s", s.mean)
+                    .set("p95_s", s.p95)
+                    .set("max_s", s.max),
+            );
+        }
+        Json::obj()
+            .set("completed", self.total_completed())
+            .set("errors", self.errors())
+            .set("fallbacks", self.fallbacks())
+            .set("mean_batch", self.mean_batch())
+            .set("latency", per_method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record("PFM", 0.01, 4, false);
+        m.record("PFM", 0.02, 4, false);
+        m.record("AMD", 0.005, 0, false);
+        m.record("PFM", 0.015, 2, true);
+        m.record_error();
+
+        assert_eq!(m.total_completed(), 4);
+        assert_eq!(m.errors(), 1);
+        assert_eq!(m.fallbacks(), 1);
+        assert!((m.mean_batch() - 10.0 / 3.0).abs() < 1e-9);
+        let stats = m.latency_stats();
+        assert_eq!(stats.len(), 2);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"completed\":4"));
+        assert!(json.contains("PFM"));
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: an async reordering service with a request router,
+//! classical-ordering worker pool, and a bucket-batched PJRT executor for
+//! the learned methods. See DESIGN.md §Coordinator.
+
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+pub use service::{ReorderService, ServiceConfig};

@@ -1,0 +1,80 @@
+//! Request/response types of the reordering service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::order::Classical;
+use crate::runtime::{Learned, Provenance};
+use crate::sparse::Csr;
+
+/// Any ordering method the service can route.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Classical(Classical),
+    Learned(Learned),
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Classical(c) => c.label(),
+            Method::Learned(l) => l.label(),
+        }
+    }
+
+    /// All methods of the paper's Table 2 (8 rows).
+    pub fn table2() -> Vec<Method> {
+        let mut v = vec![
+            Method::Classical(Classical::Natural),
+            Method::Classical(Classical::Amd),
+            Method::Classical(Classical::Metis),
+            Method::Classical(Classical::Fiedler),
+        ];
+        v.extend(Learned::TABLE2.iter().map(|&l| Method::Learned(l)));
+        v
+    }
+}
+
+/// A reorder request submitted to the coordinator.
+pub struct ReorderRequest {
+    pub id: u64,
+    pub matrix: Csr,
+    pub method: Method,
+    pub seed: u64,
+    pub submitted: Instant,
+    pub respond: mpsc::Sender<ReorderResponse>,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct ReorderResponse {
+    pub id: u64,
+    pub result: Result<ReorderResult, String>,
+}
+
+/// A successful ordering with provenance + timing.
+#[derive(Clone, Debug)]
+pub struct ReorderResult {
+    pub order: Vec<usize>,
+    pub method: &'static str,
+    pub provenance: Option<Provenance>,
+    /// queue wait + compute, seconds
+    pub latency: f64,
+    /// network batch size this request was served in (learned methods)
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_eight_methods() {
+        let methods = Method::table2();
+        assert_eq!(methods.len(), 8);
+        let labels: Vec<_> = methods.iter().map(|m| m.label()).collect();
+        for expect in ["Natural", "AMD", "Metis", "Fiedler", "S_e", "GPCE", "UDNO", "PFM"] {
+            assert!(labels.contains(&expect), "{expect} missing from {labels:?}");
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! The reordering service: router → per-class execution → response.
+//!
+//! Topology (vLLM-router-shaped, scaled to this problem):
+//!
+//! ```text
+//!            submit()                 mpsc
+//!   clients ────────► [dispatcher thread] ──► classical pool (N threads)
+//!                         │
+//!                         └──► [network thread: bucket batcher + PJRT]
+//! ```
+//!
+//! * Classical methods (Natural/RCM/AMD/Metis/Fiedler) are CPU-bound pure
+//!   Rust — they fan out over a worker pool.
+//! * Learned methods need the PJRT executor. The `xla` crate's client is
+//!   not Sync, so one network thread owns the `PfmRuntime` and drains its
+//!   queue in **bucket-batched** order: pending requests are grouped by
+//!   artifact bucket so consecutive executions reuse the same compiled
+//!   executable (the artifacts are single-instance; batching amortizes
+//!   executable lookup and keeps the instruction cache hot — see
+//!   DESIGN.md §Coordinator).
+//! * Backpressure: the submission queue is bounded; `submit` blocks when
+//!   the service is saturated.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+use crate::runtime::{PfmRuntime, Provenance};
+use crate::sparse::Csr;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// classical ordering worker threads
+    pub workers: usize,
+    /// max learned-method requests drained per batch
+    pub max_batch: usize,
+    /// max time the batcher waits to fill a batch
+    pub max_wait: Duration,
+    /// bounded queue capacity (backpressure)
+    pub queue_capacity: usize,
+    /// artifact directory for the PJRT runtime
+    pub artifact_dir: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+            artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
+        }
+    }
+}
+
+/// Handle to a running service. Cloneable; dropping the last handle shuts
+/// the service down (workers drain and exit).
+pub struct ReorderService {
+    tx: mpsc::SyncSender<ReorderRequest>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ReorderService {
+    /// Start dispatcher + workers + network thread.
+    pub fn start(config: ServiceConfig) -> Arc<ReorderService> {
+        let (tx, rx) = mpsc::sync_channel::<ReorderRequest>(config.queue_capacity);
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // classical pool channel
+        let (ctx, crx) = mpsc::channel::<ReorderRequest>();
+        let crx = Arc::new(Mutex::new(crx));
+        // network channel
+        let (ntx, nrx) = mpsc::channel::<ReorderRequest>();
+
+        let mut threads = Vec::new();
+
+        // dispatcher: route by method class
+        {
+            let shutdown = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pfm-dispatch".into())
+                    .spawn(move || {
+                        while let Ok(req) = rx.recv() {
+                            if shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let target = match req.method {
+                                Method::Classical(_) => ctx.send(req),
+                                Method::Learned(_) => ntx.send(req),
+                            };
+                            if target.is_err() {
+                                break; // downstream gone
+                            }
+                        }
+                    })
+                    .expect("spawn dispatcher"),
+            );
+        }
+
+        // classical workers
+        for w in 0..config.workers {
+            let crx = crx.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pfm-worker-{w}"))
+                    .spawn(move || loop {
+                        let req = {
+                            let guard = crx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(req) = req else { break };
+                        let Method::Classical(method) = req.method else {
+                            unreachable!("dispatcher routed learned to classical pool")
+                        };
+                        let order = method.order(&req.matrix);
+                        let latency = req.submitted.elapsed().as_secs_f64();
+                        metrics.record(method.label(), latency, 0, false);
+                        let _ = req.respond.send(ReorderResponse {
+                            id: req.id,
+                            result: Ok(ReorderResult {
+                                order,
+                                method: method.label(),
+                                provenance: None,
+                                latency,
+                                batch_size: 0,
+                            }),
+                        });
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // network thread: bucket batcher + PJRT runtime
+        {
+            let metrics = metrics.clone();
+            let cfg = config.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pfm-network".into())
+                    .spawn(move || network_loop(nrx, cfg, metrics))
+                    .expect("spawn network thread"),
+            );
+        }
+
+        Arc::new(ReorderService {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            shutdown,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    /// Submit a reorder request; returns a receiver for the response.
+    /// Blocks when the queue is full (backpressure).
+    pub fn submit(&self, matrix: Csr, method: Method, seed: u64) -> mpsc::Receiver<ReorderResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = ReorderRequest {
+            id,
+            matrix,
+            method,
+            seed,
+            submitted: Instant::now(),
+            respond: rtx,
+        };
+        if self.tx.send(req).is_err() {
+            // service shut down: respond channel dropped → receiver errors
+        }
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn reorder_blocking(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+    ) -> Result<ReorderResult, String> {
+        let rx = self.submit(matrix, method, seed);
+        match rx.recv() {
+            Ok(resp) => resp.result,
+            Err(_) => Err("service shut down before responding".to_string()),
+        }
+    }
+
+    /// Signal shutdown and join all threads (idempotent).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // dropping tx unblocks dispatcher only when all handles drop; we
+        // instead rely on queue drain: send nothing further. Join what we
+        // can without deadlocking on ourselves.
+        let mut threads = self.threads.lock().unwrap();
+        // Close the pipeline by dropping our sender clone — achieved by
+        // replacing it is not possible (owned); threads exit when channels
+        // disconnect at Drop. Here we only join already-finished threads.
+        threads.retain(|t| !t.is_finished());
+    }
+}
+
+/// Network executor: drains the queue, groups by bucket, executes.
+fn network_loop(
+    rx: mpsc::Receiver<ReorderRequest>,
+    cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut runtime = match PfmRuntime::new(&cfg.artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Without a runtime every learned request fails fast.
+            eprintln!("pfm-network: no PJRT runtime: {e}");
+            while let Ok(req) = rx.recv() {
+                metrics.record_error();
+                let _ = req.respond.send(ReorderResponse {
+                    id: req.id,
+                    result: Err(format!("runtime unavailable: {e}")),
+                });
+            }
+            return;
+        }
+    };
+
+    let mut pending: VecDeque<ReorderRequest> = VecDeque::new();
+    loop {
+        // blocking wait for at least one request
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push_back(r),
+                Err(_) => break, // all senders gone
+            }
+        }
+        // opportunistically fill the batch window
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push_back(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // group by (variant, bucket) so consecutive runs share an executable
+        let batch: Vec<ReorderRequest> = pending.drain(..).collect();
+        let mut groups: Vec<(String, usize, Vec<ReorderRequest>)> = Vec::new();
+        for req in batch {
+            let Method::Learned(l) = req.method else { unreachable!() };
+            let variant = l.variant().to_string();
+            let bucket = runtime
+                .bucket_for(&variant, req.matrix.nrows())
+                .map(Some)
+                .unwrap_or(None);
+            let key_bucket = bucket.unwrap_or(usize::MAX); // MAX = fallback group
+            match groups.iter_mut().find(|(v, b, _)| *v == variant && *b == key_bucket) {
+                Some((_, _, reqs)) => reqs.push(req),
+                None => groups.push((variant, key_bucket, vec![req])),
+            }
+        }
+        for (_variant, _bucket, reqs) in groups {
+            let batch_size = reqs.len();
+            for req in reqs {
+                let Method::Learned(l) = req.method else { unreachable!() };
+                match l.order(&mut runtime, &req.matrix, req.seed) {
+                    Ok((order, prov)) => {
+                        let latency = req.submitted.elapsed().as_secs_f64();
+                        metrics.record(
+                            l.label(),
+                            latency,
+                            batch_size,
+                            prov == Provenance::SpectralFallback,
+                        );
+                        let _ = req.respond.send(ReorderResponse {
+                            id: req.id,
+                            result: Ok(ReorderResult {
+                                order,
+                                method: l.label(),
+                                provenance: Some(prov),
+                                latency,
+                                batch_size,
+                            }),
+                        });
+                    }
+                    Err(e) => {
+                        metrics.record_error();
+                        let _ = req.respond.send(ReorderResponse {
+                            id: req.id,
+                            result: Err(e.to_string()),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::order::Classical;
+    use crate::runtime::Learned;
+    use crate::util::check::check_permutation;
+
+    fn svc() -> Arc<ReorderService> {
+        ReorderService::start(ServiceConfig {
+            workers: 2,
+            artifact_dir: "artifacts".into(),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn classical_requests_roundtrip() {
+        let service = svc();
+        let a = laplacian_2d(8, 8);
+        let res = service
+            .reorder_blocking(a, Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        check_permutation(&res.order).unwrap();
+        assert_eq!(res.method, "AMD");
+        assert!(res.latency >= 0.0);
+        assert_eq!(service.metrics.total_completed(), 1);
+    }
+
+    #[test]
+    fn concurrent_mixed_requests() {
+        let service = svc();
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let a = laplacian_2d(6 + (i % 3), 6);
+            let method = match i % 3 {
+                0 => Method::Classical(Classical::Rcm),
+                1 => Method::Classical(Classical::Fiedler),
+                _ => Method::Learned(Learned::Pfm),
+            };
+            rxs.push((i, a.nrows(), service.submit(a, method, i as u64)));
+        }
+        for (_, n, rx) in rxs {
+            let resp = rx.recv().expect("response");
+            let result = resp.result.expect("ok");
+            assert_eq!(result.order.len(), n);
+            check_permutation(&result.order).unwrap();
+        }
+        assert_eq!(service.metrics.total_completed(), 12);
+    }
+
+    #[test]
+    fn learned_requests_batch() {
+        let service = svc();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let a = laplacian_2d(7, 7);
+            rxs.push(service.submit(a, Method::Learned(Learned::Pfm), i));
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            let res = resp.result.unwrap();
+            check_permutation(&res.order).unwrap();
+        }
+        // batching must have grouped at least some requests
+        assert!(service.metrics.mean_batch() >= 1.0);
+    }
+}

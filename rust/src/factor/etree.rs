@@ -1,0 +1,192 @@
+//! Elimination tree of a sparse symmetric matrix.
+//!
+//! The etree is the dependency skeleton of Cholesky factorization: node j's
+//! parent is the smallest row index i > j with l_ij ≠ 0. Both the symbolic
+//! analysis (fill-in counts) and the numeric up-looking factorization are
+//! driven by it (Liu, "The role of elimination trees in sparse
+//! factorization", 1990).
+
+use crate::sparse::Csr;
+
+/// Sentinel for "no parent" (tree root).
+pub const NONE: usize = usize::MAX;
+
+/// Compute the elimination tree. `parent[j] = NONE` marks a root.
+/// Uses the classic path-compression construction: O(nnz · α(n)).
+pub fn etree(a: &Csr) -> Vec<usize> {
+    let n = a.nrows();
+    let mut parent = vec![NONE; n];
+    let mut ancestor = vec![NONE; n]; // path-compressed ancestors
+    for i in 0..n {
+        let (cols, _) = a.row(i);
+        for &j in cols {
+            if j >= i {
+                break; // only strict lower triangle drives the tree
+            }
+            // follow ancestors of j up to (but below) i, compressing
+            let mut node = j;
+            while node != NONE && node < i {
+                let next = ancestor[node];
+                ancestor[node] = i; // compress
+                if next == NONE {
+                    parent[node] = i;
+                    break;
+                }
+                node = next;
+            }
+        }
+    }
+    parent
+}
+
+/// Postorder traversal of the etree (children before parents). Stable:
+/// children are visited in ascending order. Returns the permutation
+/// `post` with `post[k]` = k-th node in postorder.
+pub fn postorder(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    // build child lists (ascending by construction)
+    let mut head = vec![NONE; n];
+    let mut next = vec![NONE; n];
+    for j in (0..n).rev() {
+        let p = parent[j];
+        if p != NONE {
+            next[j] = head[p];
+            head[p] = j;
+        }
+    }
+    let mut post = Vec::with_capacity(n);
+    let mut stack = Vec::new();
+    for root in 0..n {
+        if parent[root] != NONE {
+            continue;
+        }
+        // iterative DFS emitting postorder
+        stack.push((root, false));
+        while let Some((node, expanded)) = stack.pop() {
+            if expanded {
+                post.push(node);
+                continue;
+            }
+            stack.push((node, true));
+            // push children (reversed so ascending pops first)
+            let mut kids = Vec::new();
+            let mut c = head[node];
+            while c != NONE {
+                kids.push(c);
+                c = next[c];
+            }
+            for &k in kids.iter().rev() {
+                stack.push((k, false));
+            }
+        }
+    }
+    post
+}
+
+/// Depth of each node in the etree (roots at depth 0).
+pub fn depths(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    let mut depth = vec![NONE; n];
+    for mut j in 0..n {
+        // walk up collecting the path, then assign
+        let mut path = Vec::new();
+        while depth[j] == NONE {
+            path.push(j);
+            if parent[j] == NONE {
+                depth[j] = 0;
+                break;
+            }
+            j = parent[j];
+        }
+        let mut d = depth[j];
+        for &p in path.iter().rev() {
+            if depth[p] == NONE {
+                d += 1;
+                depth[p] = d;
+            } else {
+                d = depth[p];
+            }
+        }
+    }
+    depth
+}
+
+/// Height of the etree (longest root-to-leaf path + 1): a proxy for the
+/// parallelism of the triangular solves.
+pub fn height(parent: &[usize]) -> usize {
+    depths(parent).iter().map(|&d| d + 1).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::sparse::Coo;
+
+    /// Arrow matrix pointing down-right: every node couples to the last.
+    fn arrow(n: usize) -> Csr {
+        let mut coo = Coo::square(n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, n - 1, -1.0);
+        }
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn etree_of_arrow_is_star() {
+        let parent = etree(&arrow(5));
+        assert_eq!(parent, vec![4, 4, 4, 4, NONE]);
+    }
+
+    #[test]
+    fn etree_of_tridiagonal_is_path() {
+        let mut coo = Coo::square(5);
+        for i in 0..4 {
+            coo.push_sym(i, i + 1, -1.0);
+        }
+        for i in 0..5 {
+            coo.push(i, i, 2.0);
+        }
+        let parent = etree(&coo.to_csr());
+        assert_eq!(parent, vec![1, 2, 3, 4, NONE]);
+    }
+
+    #[test]
+    fn postorder_children_first() {
+        let a = laplacian_2d(5, 5);
+        let parent = etree(&a);
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 25);
+        // position of each node in the postorder
+        let mut pos = vec![0usize; 25];
+        for (k, &v) in post.iter().enumerate() {
+            pos[v] = k;
+        }
+        for j in 0..25 {
+            if parent[j] != NONE {
+                assert!(pos[j] < pos[parent[j]], "child {j} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn depths_and_height() {
+        let parent = vec![1, 2, NONE]; // path 0→1→2
+        assert_eq!(depths(&parent), vec![2, 1, 0]);
+        assert_eq!(height(&parent), 3);
+    }
+
+    #[test]
+    fn forest_posts_all_roots() {
+        // two separate 2-node trees: 0→1, 2→3
+        let parent = vec![1, NONE, 3, NONE];
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 4);
+        let mut sorted = post.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+}

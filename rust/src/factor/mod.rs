@@ -1,0 +1,12 @@
+//! Factorization substrate: elimination trees, symbolic analysis (the exact
+//! fill-in count — the paper's golden criterion), numeric up-looking
+//! Cholesky, and a packaged direct solver.
+
+pub mod etree;
+pub mod numeric;
+pub mod solver;
+pub mod symbolic;
+
+pub use numeric::{cholesky, cholesky_with, CholFactor, FactorError};
+pub use solver::{DirectSolver, SolveStats};
+pub use symbolic::{analyze, fill_ratio, fill_ratio_of_order, Symbolic};

@@ -1,0 +1,420 @@
+//! SuiteSparse-class workload generators.
+//!
+//! The paper's test set is 148 SuiteSparse matrices grouped into six
+//! application classes. SuiteSparse itself is not available in this
+//! environment (repro substitution — see DESIGN.md), so each class is
+//! replaced by a synthetic generator reproducing its characteristic
+//! sparsity *pattern*, which is what drives fill-in behaviour under
+//! reordering:
+//!
+//! * **SP** (structural)      → 3D stencils with next-nearest couplings
+//! * **CFD**                  → anisotropic 9-point convection–diffusion
+//! * **MRP** (model reduction)→ banded system + dense coupling border (block-arrow)
+//! * **2D3D** (discretized)   → plain 5/7-point Laplacians
+//! * **TP** (thermal)         → heterogeneous-conductivity grids
+//! * **Other**                → Watts–Strogatz & random geometric graphs
+
+use crate::gen::grid;
+use crate::gen::mesh::{self, Geometry};
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Pcg64;
+
+/// The six problem classes of the paper's Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProblemClass {
+    /// Structural problem (44 matrices in the paper's test set).
+    Sp,
+    /// Computational fluid dynamics (25).
+    Cfd,
+    /// Model reduction problem (16).
+    Mrp,
+    /// 2D/3D discretized problem (12).
+    TwoDThreeD,
+    /// Thermal problem (5).
+    Tp,
+    /// Everything else (46).
+    Other,
+}
+
+impl ProblemClass {
+    pub const ALL: [ProblemClass; 6] = [
+        ProblemClass::Cfd,
+        ProblemClass::Mrp,
+        ProblemClass::Sp,
+        ProblemClass::TwoDThreeD,
+        ProblemClass::Tp,
+        ProblemClass::Other,
+    ];
+
+    /// Short label used in tables (matches the paper's column headers).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProblemClass::Cfd => "CFD",
+            ProblemClass::Mrp => "MRP",
+            ProblemClass::Sp => "SP",
+            ProblemClass::TwoDThreeD => "2D3D",
+            ProblemClass::Tp => "TP",
+            ProblemClass::Other => "Other",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<ProblemClass> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "CFD" => ProblemClass::Cfd,
+            "MRP" => ProblemClass::Mrp,
+            "SP" => ProblemClass::Sp,
+            "2D3D" => ProblemClass::TwoDThreeD,
+            "TP" => ProblemClass::Tp,
+            "OTHER" => ProblemClass::Other,
+            _ => return None,
+        })
+    }
+
+    /// Generate one matrix of this class with roughly `n` rows.
+    /// Deterministic in (class, n, seed).
+    pub fn generate(&self, n: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed ^ class_salt(*self));
+        match self {
+            ProblemClass::TwoDThreeD => {
+                if rng.next_f64() < 0.5 {
+                    let side = (n as f64).sqrt().round().max(2.0) as usize;
+                    grid::laplacian_2d(side, side)
+                } else {
+                    let side = (n as f64).cbrt().round().max(2.0) as usize;
+                    grid::laplacian_3d(side, side, side)
+                }
+            }
+            ProblemClass::Cfd => {
+                // elongated channel-like grids with anisotropy
+                let aspect = 1.0 + 3.0 * rng.next_f64();
+                let ny = ((n as f64 / aspect).sqrt().round().max(2.0)) as usize;
+                let nx = (n / ny).max(2);
+                let eps = 10f64.powf(rng.uniform(-2.0, 0.0));
+                grid::cfd_stencil_2d(nx, ny, eps, &mut rng)
+            }
+            ProblemClass::Tp => {
+                // rectangular grids so the TP pattern is not identical to
+                // the square 2D3D Laplacian pattern
+                let aspect = 1.5 + rng.next_f64();
+                let ny = ((n as f64 / aspect).sqrt().round().max(2.0)) as usize;
+                let nx = (n / ny).max(2);
+                let contrast = rng.uniform(1.0, 2.5);
+                grid::thermal_grid_2d(nx, ny, contrast, &mut rng)
+            }
+            ProblemClass::Sp => {
+                let side = (n as f64).cbrt().round().max(2.0) as usize;
+                grid::structural_grid_3d(side, side, side, &mut rng)
+            }
+            ProblemClass::Mrp => block_arrow(n, &mut rng),
+            ProblemClass::Other => {
+                if rng.next_f64() < 0.5 {
+                    watts_strogatz_spd(n, 6, 0.1, &mut rng)
+                } else {
+                    random_geometric_spd(n, &mut rng)
+                }
+            }
+        }
+    }
+}
+
+fn class_salt(c: ProblemClass) -> u64 {
+    match c {
+        ProblemClass::Cfd => 0xC0FD,
+        ProblemClass::Mrp => 0x14B9,
+        ProblemClass::Sp => 0x59A7,
+        ProblemClass::TwoDThreeD => 0x2D3D,
+        ProblemClass::Tp => 0x7E44,
+        ProblemClass::Other => 0x07E2,
+    }
+}
+
+/// Model-reduction-like pattern: a banded interior system (the reduced
+/// dynamics) plus a small set of "port" rows, each coupled to a contiguous
+/// window of the interior and to a few random long-range taps. SuiteSparse
+/// MRP matrices are predominantly banded with moderate port coupling —
+/// ports that touch O(n) of the interior (a pure block-arrow) would make
+/// the class degenerate under every local ordering.
+pub fn block_arrow(n: usize, rng: &mut Pcg64) -> Csr {
+    let ports = (n / 40).clamp(2, 20);
+    let interior = n - ports;
+    let band = 4 + rng.next_below(5);
+    let mut coo = Coo::square(n);
+    let mut diag = vec![1.0f64; n];
+    // banded interior
+    for i in 0..interior {
+        for off in 1..=band {
+            if i + off < interior {
+                let w = 0.5 + rng.next_f64();
+                coo.push_sym(i, i + off, -w / off as f64);
+                diag[i] += w / off as f64;
+                diag[i + off] += w / off as f64;
+            }
+        }
+    }
+    // port coupling: a contiguous interior window + a few random taps
+    let window = (interior / (2 * ports)).max(4);
+    for p in 0..ports {
+        let row = interior + p;
+        let start = (p * interior / ports).min(interior.saturating_sub(window));
+        for col in start..(start + window).min(interior) {
+            let w = 0.1 + 0.4 * rng.next_f64();
+            coo.push_sym(row, col, -w);
+            diag[row] += w;
+            diag[col] += w;
+        }
+        for &col in rng.sample_distinct(interior, 4.min(interior)).iter() {
+            let w = 0.05 + 0.15 * rng.next_f64();
+            coo.push_sym(row, col, -w);
+            diag[row] += w;
+            diag[col] += w;
+        }
+        // port-port chain
+        if p > 0 {
+            let w = 0.2;
+            coo.push_sym(row, interior + p - 1, -w);
+            diag[row] += w;
+            diag[interior + p - 1] += w;
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, *d);
+    }
+    coo.to_csr()
+}
+
+/// Watts–Strogatz small-world graph turned into an SPD graph Laplacian
+/// (+identity). Irregular long-range edges → "Other" class behaviour.
+pub fn watts_strogatz_spd(n: usize, k: usize, beta: f64, rng: &mut Pcg64) -> Csr {
+    assert!(k % 2 == 0 && k < n);
+    // ring lattice with k/2 neighbours either side, then rewire
+    let mut edges: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for i in 0..n {
+        for j in 1..=(k / 2) {
+            let mut u = i;
+            let mut v = (i + j) % n;
+            if rng.next_f64() < beta {
+                // rewire target
+                let mut t = rng.next_below(n);
+                let mut guard = 0;
+                while (t == u || edges.contains(&(u.min(t), u.max(t)))) && guard < 20 {
+                    t = rng.next_below(n);
+                    guard += 1;
+                }
+                v = t;
+            }
+            if u == v {
+                continue;
+            }
+            if u > v {
+                std::mem::swap(&mut u, &mut v);
+            }
+            edges.insert((u, v));
+        }
+    }
+    laplacian_from_edges(n, edges.into_iter(), rng)
+}
+
+/// Random geometric graph (unit square, radius tuned for ~8 mean degree)
+/// as an SPD Laplacian.
+pub fn random_geometric_spd(n: usize, rng: &mut Pcg64) -> Csr {
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let radius = (8.0 / (std::f64::consts::PI * n as f64)).sqrt();
+    let r2 = radius * radius;
+    // cell grid for neighbour search
+    let cells = ((1.0 / radius).floor() as usize).max(1);
+    let mut grid: Vec<Vec<usize>> = vec![Vec::new(); cells * cells];
+    let cell_of = |x: f64, y: f64| {
+        let cx = ((x * cells as f64) as usize).min(cells - 1);
+        let cy = ((y * cells as f64) as usize).min(cells - 1);
+        cy * cells + cx
+    };
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        grid[cell_of(x, y)].push(i);
+    }
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let cx = ((x * cells as f64) as usize).min(cells - 1) as isize;
+        let cy = ((y * cells as f64) as usize).min(cells - 1) as isize;
+        for dy in -1..=1isize {
+            for dx in -1..=1isize {
+                let (nx, ny) = (cx + dx, cy + dy);
+                if nx < 0 || ny < 0 || nx >= cells as isize || ny >= cells as isize {
+                    continue;
+                }
+                for &j in &grid[ny as usize * cells + nx as usize] {
+                    if j <= i {
+                        continue;
+                    }
+                    let (dx, dy) = (pts[j].0 - x, pts[j].1 - y);
+                    if dx * dx + dy * dy <= r2 {
+                        edges.push((i, j));
+                    }
+                }
+            }
+        }
+    }
+    laplacian_from_edges(n, edges.into_iter(), rng)
+}
+
+fn laplacian_from_edges(
+    n: usize,
+    edges: impl Iterator<Item = (usize, usize)>,
+    rng: &mut Pcg64,
+) -> Csr {
+    let mut coo = Coo::square(n);
+    let mut deg = vec![0.0f64; n];
+    for (u, v) in edges {
+        let w = 0.5 + rng.next_f64();
+        coo.push_sym(u, v, -w);
+        deg[u] += w;
+        deg[v] += w;
+    }
+    for (i, d) in deg.iter().enumerate() {
+        coo.push(i, i, d + 1.0);
+    }
+    coo.to_csr()
+}
+
+/// A named test matrix (the synthetic stand-in for one SuiteSparse entry).
+#[derive(Clone, Debug)]
+pub struct TestMatrix {
+    pub name: String,
+    pub class: ProblemClass,
+    pub matrix: Csr,
+}
+
+/// Build a test suite mirroring the paper's class mix at a scaled-down
+/// size. `sizes` are target dimensions; `per_class` matrices per class per
+/// size.
+pub fn test_suite(sizes: &[usize], per_class: usize, seed: u64) -> Vec<TestMatrix> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        for &class in &ProblemClass::ALL {
+            for rep in 0..per_class {
+                let s = seed
+                    .wrapping_mul(0x9e3779b97f4a7c15)
+                    .wrapping_add((n as u64) << 8)
+                    .wrapping_add(rep as u64);
+                let m = class.generate(n, s);
+                out.push(TestMatrix {
+                    name: format!("{}_n{}_r{}", class.label().to_lowercase(), n, rep),
+                    class,
+                    matrix: m,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The training mix of the paper (2D3D ∪ Delaunay ∪ FEM over GradeL /
+/// Hole3 / Hole6): `count` matrices with sizes in [lo, hi].
+pub fn training_suite(count: usize, lo: usize, hi: usize, seed: u64) -> Vec<TestMatrix> {
+    let mut rng = Pcg64::new(seed);
+    let geoms = [Geometry::GradeL, Geometry::Hole3, Geometry::Hole6];
+    let mut out = Vec::new();
+    for i in 0..count {
+        let n = lo + rng.next_below(hi - lo + 1);
+        let kind = i % 3;
+        let (name, matrix) = match kind {
+            0 => {
+                let m = ProblemClass::TwoDThreeD.generate(n, rng.next_u64());
+                (format!("train_2d3d_{i}"), m)
+            }
+            1 => {
+                let g = geoms[rng.next_below(3)];
+                let mesh = mesh::delaunay_mesh(g, n, &mut rng);
+                (format!("train_delaunay_{i}"), mesh::mesh_graph_laplacian(&mesh))
+            }
+            _ => {
+                let g = geoms[rng.next_below(3)];
+                let mesh = mesh::delaunay_mesh(g, n, &mut rng);
+                (format!("train_fem_{i}"), mesh::fem_stiffness(&mesh, 1.0))
+            }
+        };
+        out.push(TestMatrix { name, class: ProblemClass::TwoDThreeD, matrix });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_generate_symmetric_spd_patterns() {
+        for &class in &ProblemClass::ALL {
+            let a = class.generate(200, 77);
+            assert!(a.nrows() >= 100, "{:?} too small: {}", class, a.nrows());
+            assert!(a.is_symmetric(1e-10), "{class:?} not symmetric");
+            // weak dominance suffices: Dirichlet Laplacians have margin 0 on
+            // interior rows but are PD via irreducibility + boundary rows
+            assert!(
+                a.diag_dominance_margin() >= 0.0,
+                "{class:?} not (weakly) diagonally dominant"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for &class in &ProblemClass::ALL {
+            let a = class.generate(150, 5);
+            let b = class.generate(150, 5);
+            assert_eq!(a, b, "{class:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn block_arrow_has_port_border() {
+        let mut rng = Pcg64::new(3);
+        let a = block_arrow(200, &mut rng);
+        let ports = (200 / 40).clamp(2, 20);
+        let interior = 200 - ports;
+        // port rows are denser than interior rows (window + taps vs band)
+        let port_deg = a.off_diag_degree(interior + 1);
+        let int_deg = a.off_diag_degree(10);
+        assert!(
+            port_deg > int_deg,
+            "port {port_deg} vs interior {int_deg}"
+        );
+    }
+
+    #[test]
+    fn watts_strogatz_connected_degree() {
+        let mut rng = Pcg64::new(4);
+        let a = watts_strogatz_spd(100, 6, 0.1, &mut rng);
+        let mean_deg =
+            (0..100).map(|i| a.off_diag_degree(i)).sum::<usize>() as f64 / 100.0;
+        assert!((4.0..8.0).contains(&mean_deg), "mean degree {mean_deg}");
+    }
+
+    #[test]
+    fn suite_covers_all_classes() {
+        let suite = test_suite(&[100, 200], 2, 1);
+        assert_eq!(suite.len(), 2 * 6 * 2);
+        for &class in &ProblemClass::ALL {
+            assert!(suite.iter().any(|t| t.class == class));
+        }
+    }
+
+    #[test]
+    fn training_suite_mixes_kinds() {
+        let ts = training_suite(9, 60, 120, 2);
+        assert_eq!(ts.len(), 9);
+        assert!(ts.iter().any(|t| t.name.contains("2d3d")));
+        assert!(ts.iter().any(|t| t.name.contains("delaunay")));
+        assert!(ts.iter().any(|t| t.name.contains("fem")));
+        for t in &ts {
+            assert!(t.matrix.is_symmetric(1e-10), "{} not symmetric", t.name);
+        }
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for &c in &ProblemClass::ALL {
+            assert_eq!(ProblemClass::from_label(c.label()), Some(c));
+        }
+        assert_eq!(ProblemClass::from_label("nope"), None);
+    }
+}

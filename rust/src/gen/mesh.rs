@@ -1,0 +1,331 @@
+//! Unstructured 2D meshes: Bowyer–Watson Delaunay triangulation over point
+//! clouds sampled inside the three geometries the paper's training set uses
+//! (Gatti et al. 2021): **GradeL** (graded L-shaped domain), **Hole3** and
+//! **Hole6** (plates with 3/6 circular holes). FEM stiffness assembly with
+//! linear (P1) triangle elements turns a mesh into an SPD system matrix.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Pcg64;
+
+/// A 2D point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Triangle as indices into a point array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tri(pub usize, pub usize, pub usize);
+
+/// A triangulated domain.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub points: Vec<Point>,
+    pub tris: Vec<Tri>,
+}
+
+/// The three training geometries of the paper (plus a plain square for
+/// sanity baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Geometry {
+    /// Unit square, uniform density.
+    Square,
+    /// L-shaped domain with density graded toward the re-entrant corner.
+    GradeL,
+    /// Unit square with 3 circular holes.
+    Hole3,
+    /// Unit square with 6 circular holes.
+    Hole6,
+}
+
+impl Geometry {
+    /// Is `p` inside the domain?
+    pub fn contains(&self, p: Point) -> bool {
+        let in_square = (0.0..=1.0).contains(&p.x) && (0.0..=1.0).contains(&p.y);
+        if !in_square {
+            return false;
+        }
+        match self {
+            Geometry::Square => true,
+            Geometry::GradeL => !(p.x > 0.5 && p.y > 0.5), // remove upper-right quadrant
+            Geometry::Hole3 => !Self::in_holes(p, &HOLES3),
+            Geometry::Hole6 => !Self::in_holes(p, &HOLES6),
+        }
+    }
+
+    fn in_holes(p: Point, holes: &[(f64, f64, f64)]) -> bool {
+        holes.iter().any(|&(cx, cy, r)| {
+            let (dx, dy) = (p.x - cx, p.y - cy);
+            dx * dx + dy * dy < r * r
+        })
+    }
+
+    /// Rejection-sample `n` points in the domain. GradeL grades the density
+    /// toward the re-entrant corner at (0.5, 0.5) the way graded FEM meshes
+    /// do.
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> Vec<Point> {
+        let mut pts = Vec::with_capacity(n);
+        while pts.len() < n {
+            let mut p = Point { x: rng.next_f64(), y: rng.next_f64() };
+            if *self == Geometry::GradeL {
+                // pull samples toward the corner: square the distance field
+                let t = rng.next_f64();
+                if t < 0.5 {
+                    p.x = 0.5 + (p.x - 0.5) * rng.next_f64();
+                    p.y = 0.5 + (p.y - 0.5) * rng.next_f64();
+                }
+            }
+            if self.contains(p) {
+                pts.push(p);
+            }
+        }
+        pts
+    }
+}
+
+const HOLES3: [(f64, f64, f64); 3] =
+    [(0.25, 0.25, 0.12), (0.75, 0.35, 0.12), (0.45, 0.75, 0.12)];
+const HOLES6: [(f64, f64, f64); 6] = [
+    (0.2, 0.2, 0.09),
+    (0.5, 0.2, 0.09),
+    (0.8, 0.2, 0.09),
+    (0.2, 0.7, 0.09),
+    (0.5, 0.8, 0.09),
+    (0.8, 0.7, 0.09),
+];
+
+/// Bowyer–Watson incremental Delaunay triangulation. O(n²) worst case,
+/// fine at the n ≤ few-thousand scale the training set uses.
+pub fn delaunay(points: &[Point]) -> Vec<Tri> {
+    assert!(points.len() >= 3, "need at least 3 points");
+    // Super-triangle enclosing all points.
+    let (mut minx, mut miny, mut maxx, mut maxy) =
+        (f64::INFINITY, f64::INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
+    for p in points {
+        minx = minx.min(p.x);
+        miny = miny.min(p.y);
+        maxx = maxx.max(p.x);
+        maxy = maxy.max(p.y);
+    }
+    let d = (maxx - minx).max(maxy - miny).max(1e-9) * 20.0;
+    let cx = (minx + maxx) / 2.0;
+    let cy = (miny + maxy) / 2.0;
+    let mut pts: Vec<Point> = points.to_vec();
+    let s0 = pts.len();
+    pts.push(Point { x: cx - d, y: cy - d });
+    pts.push(Point { x: cx + d, y: cy - d });
+    pts.push(Point { x: cx, y: cy + d });
+
+    let mut tris: Vec<Tri> = vec![Tri(s0, s0 + 1, s0 + 2)];
+    for (pi, p) in points.iter().enumerate() {
+        // find all triangles whose circumcircle contains p
+        let mut bad: Vec<usize> = Vec::new();
+        for (ti, t) in tris.iter().enumerate() {
+            if in_circumcircle(&pts, *t, *p) {
+                bad.push(ti);
+            }
+        }
+        // boundary of the cavity = edges appearing exactly once among bad tris
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for &ti in &bad {
+            let Tri(a, b, c) = tris[ti];
+            for &(u, v) in &[(a, b), (b, c), (c, a)] {
+                let key = (u.min(v), u.max(v));
+                if let Some(pos) = edges.iter().position(|&e| e == key) {
+                    edges.swap_remove(pos); // shared edge → interior, drop
+                } else {
+                    edges.push(key);
+                }
+            }
+        }
+        // remove bad triangles (descending order keeps indices valid)
+        bad.sort_unstable_by(|a, b| b.cmp(a));
+        for ti in bad {
+            tris.swap_remove(ti);
+        }
+        // re-triangulate the cavity
+        for (u, v) in edges {
+            tris.push(make_ccw(&pts, Tri(u, v, pi)));
+        }
+    }
+    // drop triangles touching the super-triangle
+    tris.retain(|&Tri(a, b, c)| a < s0 && b < s0 && c < s0);
+    tris
+}
+
+fn make_ccw(pts: &[Point], t: Tri) -> Tri {
+    if orient2d(pts[t.0], pts[t.1], pts[t.2]) < 0.0 {
+        Tri(t.0, t.2, t.1)
+    } else {
+        t
+    }
+}
+
+/// Twice the signed area of triangle abc (> 0 when counter-clockwise).
+fn orient2d(a: Point, b: Point, c: Point) -> f64 {
+    (b.x - a.x) * (c.y - a.y) - (b.y - a.y) * (c.x - a.x)
+}
+
+/// Is p strictly inside the circumcircle of (CCW) triangle t?
+fn in_circumcircle(pts: &[Point], t: Tri, p: Point) -> bool {
+    let t = make_ccw(pts, t);
+    let (a, b, c) = (pts[t.0], pts[t.1], pts[t.2]);
+    let (ax, ay) = (a.x - p.x, a.y - p.y);
+    let (bx, by) = (b.x - p.x, b.y - p.y);
+    let (cx, cy) = (c.x - p.x, c.y - p.y);
+    let det = (ax * ax + ay * ay) * (bx * cy - cx * by)
+        - (bx * bx + by * by) * (ax * cy - cx * ay)
+        + (cx * cx + cy * cy) * (ax * by - bx * ay);
+    det > 1e-12
+}
+
+/// Generate a Delaunay mesh of `n` interior points in `geom`.
+pub fn delaunay_mesh(geom: Geometry, n: usize, rng: &mut Pcg64) -> Mesh {
+    let points = geom.sample(n, rng);
+    let tris = delaunay(&points);
+    Mesh { points, tris }
+}
+
+/// Assemble the P1 FEM stiffness matrix (Laplace operator) over a mesh.
+/// Each triangle contributes the standard linear-element local stiffness;
+/// a small mass-matrix shift (`shift · area/3` lumped) makes the global
+/// matrix SPD without boundary conditions.
+pub fn fem_stiffness(mesh: &Mesh, shift: f64) -> Csr {
+    let n = mesh.points.len();
+    let mut coo = Coo::square(n);
+    let mut lumped = vec![0.0f64; n];
+    for &Tri(i, j, k) in &mesh.tris {
+        let (p1, p2, p3) = (mesh.points[i], mesh.points[j], mesh.points[k]);
+        let area2 = orient2d(p1, p2, p3).abs(); // 2·area
+        if area2 < 1e-14 {
+            continue; // degenerate sliver
+        }
+        let area = area2 / 2.0;
+        // gradients of the barycentric basis functions
+        let b = [p2.y - p3.y, p3.y - p1.y, p1.y - p2.y];
+        let c = [p3.x - p2.x, p1.x - p3.x, p2.x - p1.x];
+        let ids = [i, j, k];
+        for r in 0..3 {
+            for s in 0..=r {
+                let kij = (b[r] * b[s] + c[r] * c[s]) / (4.0 * area);
+                if r == s {
+                    coo.push(ids[r], ids[r], kij);
+                } else {
+                    coo.push_sym(ids[r], ids[s], kij);
+                }
+            }
+            lumped[ids[r]] += area / 3.0;
+        }
+    }
+    for (i, m) in lumped.iter().enumerate() {
+        // isolated points (not in any retained triangle) still need a pivot
+        coo.push(i, i, shift * m + 1e-9);
+    }
+    coo.to_csr()
+}
+
+/// Graph Laplacian of the mesh edges (unit weights): an alternative
+/// "Delaunay matrix" family used in the paper's training mix.
+pub fn mesh_graph_laplacian(mesh: &Mesh) -> Csr {
+    let n = mesh.points.len();
+    let mut coo = Coo::square(n);
+    let mut deg = vec![0.0f64; n];
+    let mut seen: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for &Tri(a, b, c) in &mesh.tris {
+        for &(u, v) in &[(a, b), (b, c), (c, a)] {
+            let key = (u.min(v), u.max(v));
+            if seen.insert(key) {
+                coo.push_sym(u, v, -1.0);
+                deg[u] += 1.0;
+                deg[v] += 1.0;
+            }
+        }
+    }
+    for (i, d) in deg.iter().enumerate() {
+        coo.push(i, i, d + 1e-3);
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delaunay_square_of_4() {
+        let pts = vec![
+            Point { x: 0.0, y: 0.0 },
+            Point { x: 1.0, y: 0.0 },
+            Point { x: 0.0, y: 1.0 },
+            Point { x: 1.0, y: 1.0 },
+        ];
+        let tris = delaunay(&pts);
+        assert_eq!(tris.len(), 2);
+    }
+
+    #[test]
+    fn delaunay_empty_circumcircle_property() {
+        let mut rng = Pcg64::new(21);
+        let pts: Vec<Point> = (0..60)
+            .map(|_| Point { x: rng.next_f64(), y: rng.next_f64() })
+            .collect();
+        let tris = delaunay(&pts);
+        assert!(!tris.is_empty());
+        // No point lies strictly inside any triangle's circumcircle.
+        for &t in &tris {
+            for (pi, &p) in pts.iter().enumerate() {
+                if pi == t.0 || pi == t.1 || pi == t.2 {
+                    continue;
+                }
+                assert!(
+                    !in_circumcircle(&pts, t, p),
+                    "point {pi} inside circumcircle of {t:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn geometries_respect_holes() {
+        assert!(Geometry::Hole3.contains(Point { x: 0.05, y: 0.05 }));
+        assert!(!Geometry::Hole3.contains(Point { x: 0.25, y: 0.25 }));
+        assert!(!Geometry::GradeL.contains(Point { x: 0.9, y: 0.9 }));
+        assert!(Geometry::GradeL.contains(Point { x: 0.1, y: 0.9 }));
+        assert!(!Geometry::Square.contains(Point { x: 1.5, y: 0.5 }));
+    }
+
+    #[test]
+    fn fem_matrix_is_spd_symmetric() {
+        let mut rng = Pcg64::new(22);
+        let mesh = delaunay_mesh(Geometry::Square, 80, &mut rng);
+        let a = fem_stiffness(&mesh, 1.0);
+        assert_eq!(a.nrows(), 80);
+        assert!(a.is_symmetric(1e-10));
+        // Laplace stiffness + lumped mass must be positive definite:
+        // dense-Cholesky a small one to verify.
+        let d = crate::sparse::Dense::from_rows(&a.to_dense());
+        assert!(d.cholesky().is_ok(), "FEM matrix not SPD");
+    }
+
+    #[test]
+    fn mesh_laplacian_rows_sum_to_shift() {
+        let mut rng = Pcg64::new(23);
+        let mesh = delaunay_mesh(Geometry::Hole6, 120, &mut rng);
+        let a = mesh_graph_laplacian(&mesh);
+        assert!(a.is_symmetric(1e-12));
+        for r in 0..a.nrows() {
+            let (_, vals) = a.row(r);
+            let sum: f64 = vals.iter().sum();
+            assert!((sum - 1e-3).abs() < 1e-9, "row {r} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn mesh_is_deterministic() {
+        let m1 = delaunay_mesh(Geometry::GradeL, 50, &mut Pcg64::new(9));
+        let m2 = delaunay_mesh(Geometry::GradeL, 50, &mut Pcg64::new(9));
+        assert_eq!(m1.points, m2.points);
+        assert_eq!(m1.tris, m2.tris);
+    }
+}

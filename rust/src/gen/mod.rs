@@ -1,0 +1,10 @@
+//! Workload generation: structured grids, unstructured Delaunay/FEM meshes,
+//! and the six SuiteSparse-class synthetic families (see DESIGN.md for the
+//! substitution rationale — the real SuiteSparse collection is not available
+//! in this environment).
+
+pub mod classes;
+pub mod grid;
+pub mod mesh;
+
+pub use classes::{test_suite, training_suite, ProblemClass, TestMatrix};

@@ -1,0 +1,283 @@
+//! Adjacency-structure view of a symmetric sparse matrix.
+//!
+//! Every reordering algorithm in the paper operates on the matrix's
+//! adjacency graph G = (V, E), e_ij ∈ E ⇔ a_ij ≠ 0 (i ≠ j). This module
+//! provides that view in CSR-of-neighbours form plus the traversals the
+//! orderings need: BFS level structures, pseudo-peripheral node search, and
+//! connected components.
+
+use crate::sparse::Csr;
+
+/// Undirected graph in CSR adjacency form (no self-loops, symmetric).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    xadj: Vec<usize>,
+    adjncy: Vec<usize>,
+    /// Optional edge weights, aligned with `adjncy` (used by coarsening).
+    eweights: Vec<f64>,
+    /// Node weights (≥1; >1 after coarsening collapses nodes).
+    vweights: Vec<f64>,
+}
+
+impl Graph {
+    /// Build from the off-diagonal pattern of a symmetric matrix. Edge
+    /// weights are |a_ij|; node weights start at 1.
+    pub fn from_matrix(a: &Csr) -> Graph {
+        assert_eq!(a.nrows(), a.ncols(), "adjacency needs a square matrix");
+        let n = a.nrows();
+        let mut xadj = vec![0usize; n + 1];
+        for r in 0..n {
+            let (cols, _) = a.row(r);
+            xadj[r + 1] = xadj[r] + cols.iter().filter(|&&c| c != r).count();
+        }
+        let mut adjncy = vec![0usize; xadj[n]];
+        let mut eweights = vec![0.0f64; xadj[n]];
+        for r in 0..n {
+            let (cols, vals) = a.row(r);
+            let mut p = xadj[r];
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c != r {
+                    adjncy[p] = c;
+                    eweights[p] = v.abs();
+                    p += 1;
+                }
+            }
+        }
+        Graph { xadj, adjncy, eweights, vweights: vec![1.0; n] }
+    }
+
+    /// Build directly from parts (coarsening).
+    pub fn from_parts(
+        xadj: Vec<usize>,
+        adjncy: Vec<usize>,
+        eweights: Vec<f64>,
+        vweights: Vec<f64>,
+    ) -> Graph {
+        debug_assert_eq!(*xadj.last().unwrap(), adjncy.len());
+        debug_assert_eq!(adjncy.len(), eweights.len());
+        debug_assert_eq!(xadj.len(), vweights.len() + 1);
+        Graph { xadj, adjncy, eweights, vweights }
+    }
+
+    pub fn n(&self) -> usize {
+        self.vweights.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[usize] {
+        &self.adjncy[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    #[inline]
+    pub fn edge_weights(&self, v: usize) -> &[f64] {
+        &self.eweights[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.xadj[v + 1] - self.xadj[v]
+    }
+
+    pub fn vweight(&self, v: usize) -> f64 {
+        self.vweights[v]
+    }
+
+    pub fn total_vweight(&self) -> f64 {
+        self.vweights.iter().sum()
+    }
+
+    /// BFS from `root`, returning (level per node, ordered visit list).
+    /// Unreached nodes get level `usize::MAX` and are absent from the list.
+    pub fn bfs(&self, root: usize) -> (Vec<usize>, Vec<usize>) {
+        let mut level = vec![usize::MAX; self.n()];
+        let mut order = Vec::with_capacity(self.n());
+        let mut queue = std::collections::VecDeque::new();
+        level[root] = 0;
+        queue.push_back(root);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &w in self.neighbors(u) {
+                if level[w] == usize::MAX {
+                    level[w] = level[u] + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        (level, order)
+    }
+
+    /// Level structure rooted at `root`: vector of levels, each a node list.
+    pub fn level_structure(&self, root: usize) -> Vec<Vec<usize>> {
+        let (level, order) = self.bfs(root);
+        let depth = order.iter().map(|&u| level[u]).max().unwrap_or(0);
+        let mut levels = vec![Vec::new(); depth + 1];
+        for &u in &order {
+            levels[level[u]].push(u);
+        }
+        levels
+    }
+
+    /// Pseudo-peripheral node via the George–Liu heuristic: repeat BFS from
+    /// the smallest-degree node of the deepest last level until eccentricity
+    /// stops growing. Used as the CM/RCM start node and the ND region seed.
+    pub fn pseudo_peripheral(&self, start: usize) -> usize {
+        let mut root = start;
+        let mut ecc = 0usize;
+        loop {
+            let levels = self.level_structure(root);
+            let new_ecc = levels.len() - 1;
+            if new_ecc <= ecc && ecc > 0 {
+                return root;
+            }
+            ecc = new_ecc;
+            let last = &levels[new_ecc];
+            // smallest degree in the last level
+            let next = *last
+                .iter()
+                .min_by_key(|&&u| self.degree(u))
+                .expect("non-empty level");
+            if next == root {
+                return root;
+            }
+            root = next;
+        }
+    }
+
+    /// Connected components: (component id per node, component count).
+    pub fn components(&self) -> (Vec<usize>, usize) {
+        let mut comp = vec![usize::MAX; self.n()];
+        let mut count = 0;
+        for s in 0..self.n() {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            let mut stack = vec![s];
+            comp[s] = count;
+            while let Some(u) = stack.pop() {
+                for &w in self.neighbors(u) {
+                    if comp[w] == usize::MAX {
+                        comp[w] = count;
+                        stack.push(w);
+                    }
+                }
+            }
+            count += 1;
+        }
+        (comp, count)
+    }
+
+    /// Induced subgraph over `nodes` (order defines new ids). Returns the
+    /// subgraph and the mapping new-id → old-id.
+    pub fn subgraph(&self, nodes: &[usize]) -> (Graph, Vec<usize>) {
+        let mut old2new = vec![usize::MAX; self.n()];
+        for (newi, &old) in nodes.iter().enumerate() {
+            old2new[old] = newi;
+        }
+        let mut xadj = vec![0usize; nodes.len() + 1];
+        let mut adjncy = Vec::new();
+        let mut eweights = Vec::new();
+        for (newi, &old) in nodes.iter().enumerate() {
+            for (&w, &ew) in self.neighbors(old).iter().zip(self.edge_weights(old)) {
+                if old2new[w] != usize::MAX {
+                    adjncy.push(old2new[w]);
+                    eweights.push(ew);
+                }
+            }
+            xadj[newi + 1] = adjncy.len();
+        }
+        let vweights = nodes.iter().map(|&o| self.vweights[o]).collect();
+        (Graph::from_parts(xadj, adjncy, eweights, vweights), nodes.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+
+    /// Path graph 0-1-2-3-4.
+    fn path5() -> Graph {
+        let mut coo = crate::sparse::Coo::square(5);
+        for i in 0..4 {
+            coo.push_sym(i, i + 1, -1.0);
+        }
+        for i in 0..5 {
+            coo.push(i, i, 2.0);
+        }
+        Graph::from_matrix(&coo.to_csr())
+    }
+
+    #[test]
+    fn from_matrix_strips_diagonal() {
+        let g = path5();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+    }
+
+    #[test]
+    fn bfs_levels() {
+        let g = path5();
+        let (level, order) = g.bfs(0);
+        assert_eq!(level, vec![0, 1, 2, 3, 4]);
+        assert_eq!(order[0], 0);
+        assert_eq!(order.len(), 5);
+    }
+
+    #[test]
+    fn pseudo_peripheral_of_path_is_endpoint() {
+        let g = path5();
+        let p = g.pseudo_peripheral(2);
+        assert!(p == 0 || p == 4, "got {p}");
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_grid() {
+        let g = Graph::from_matrix(&laplacian_2d(7, 7));
+        let p = g.pseudo_peripheral(24); // center
+        // corners are the peripheral nodes of a square grid
+        let corners = [0, 6, 42, 48];
+        assert!(corners.contains(&p), "got {p}");
+    }
+
+    #[test]
+    fn components_split() {
+        // two disjoint edges
+        let mut coo = crate::sparse::Coo::square(4);
+        coo.push_sym(0, 1, -1.0);
+        coo.push_sym(2, 3, -1.0);
+        for i in 0..4 {
+            coo.push(i, i, 2.0);
+        }
+        let g = Graph::from_matrix(&coo.to_csr());
+        let (comp, count) = g.components();
+        assert_eq!(count, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+    }
+
+    #[test]
+    fn subgraph_maps_ids() {
+        let g = path5();
+        let (sub, map) = g.subgraph(&[1, 2, 3]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.num_edges(), 2);
+        assert_eq!(sub.neighbors(1), &[0, 2]); // node 2 in original
+        assert_eq!(map, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn level_structure_partitions_nodes() {
+        let g = Graph::from_matrix(&laplacian_2d(5, 5));
+        let levels = g.level_structure(0);
+        let total: usize = levels.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 25);
+        assert_eq!(levels[0], vec![0]);
+    }
+}

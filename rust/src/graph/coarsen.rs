@@ -1,0 +1,167 @@
+//! Multilevel graph coarsening via heavy-edge matching.
+//!
+//! Two consumers: the METIS-like nested-dissection ordering (coarsen →
+//! bisect → refine) and the harness that mirrors the paper's multigrid
+//! encoder structure on the Rust side. The matching is the Graclus-style
+//! greedy heavy-edge rule: visit nodes in random order, match each
+//! unmatched node with its heaviest unmatched neighbour.
+
+use crate::graph::adjacency::Graph;
+use crate::util::rng::Pcg64;
+
+/// One coarsening step: mapping fine→coarse plus the coarse graph.
+#[derive(Clone, Debug)]
+pub struct CoarseLevel {
+    pub graph: Graph,
+    /// fine node id → coarse node id
+    pub fine_to_coarse: Vec<usize>,
+}
+
+/// Greedy heavy-edge matching; returns fine→coarse map and coarse node
+/// count. Unmatched nodes map alone.
+pub fn heavy_edge_matching(g: &Graph, rng: &mut Pcg64) -> (Vec<usize>, usize) {
+    let n = g.n();
+    let mut matched = vec![usize::MAX; n];
+    let order = rng.permutation(n);
+    let mut coarse = 0usize;
+    for &u in &order {
+        if matched[u] != usize::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbour
+        let mut best: Option<(usize, f64)> = None;
+        for (&v, &w) in g.neighbors(u).iter().zip(g.edge_weights(u)) {
+            if v != u && matched[v] == usize::MAX {
+                match best {
+                    Some((_, bw)) if bw >= w => {}
+                    _ => best = Some((v, w)),
+                }
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                matched[u] = coarse;
+                matched[v] = coarse;
+            }
+            None => {
+                matched[u] = coarse;
+            }
+        }
+        coarse += 1;
+    }
+    (matched, coarse)
+}
+
+/// Contract a graph along a fine→coarse map.
+pub fn contract(g: &Graph, fine_to_coarse: &[usize], coarse_n: usize) -> Graph {
+    let mut vweights = vec![0.0f64; coarse_n];
+    for u in 0..g.n() {
+        vweights[fine_to_coarse[u]] += g.vweight(u);
+    }
+    // accumulate coarse edges in per-node maps
+    let mut maps: Vec<std::collections::BTreeMap<usize, f64>> =
+        vec![std::collections::BTreeMap::new(); coarse_n];
+    for u in 0..g.n() {
+        let cu = fine_to_coarse[u];
+        for (&v, &w) in g.neighbors(u).iter().zip(g.edge_weights(u)) {
+            let cv = fine_to_coarse[v];
+            if cu != cv {
+                *maps[cu].entry(cv).or_insert(0.0) += w;
+            }
+        }
+    }
+    let mut xadj = vec![0usize; coarse_n + 1];
+    let mut adjncy = Vec::new();
+    let mut eweights = Vec::new();
+    for (cu, m) in maps.iter().enumerate() {
+        for (&cv, &w) in m {
+            adjncy.push(cv);
+            eweights.push(w);
+        }
+        xadj[cu + 1] = adjncy.len();
+    }
+    Graph::from_parts(xadj, adjncy, eweights, vweights)
+}
+
+/// Coarsen until ≤ `target_n` nodes or no further contraction possible.
+/// Returns the hierarchy from fine (index 0 = first coarse level) to
+/// coarsest.
+pub fn coarsen_to(g: &Graph, target_n: usize, rng: &mut Pcg64) -> Vec<CoarseLevel> {
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    let mut current = g.clone();
+    while current.n() > target_n {
+        let (map, coarse_n) = heavy_edge_matching(&current, rng);
+        if coarse_n >= current.n() {
+            break; // no contraction achieved (e.g. no edges)
+        }
+        let coarse = contract(&current, &map, coarse_n);
+        levels.push(CoarseLevel { graph: coarse.clone(), fine_to_coarse: map });
+        current = coarse;
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::graph::adjacency::Graph;
+
+    #[test]
+    fn matching_halves_node_count() {
+        let g = Graph::from_matrix(&laplacian_2d(8, 8));
+        let mut rng = Pcg64::new(1);
+        let (map, coarse_n) = heavy_edge_matching(&g, &mut rng);
+        assert!(coarse_n >= 32 && coarse_n < 64, "coarse_n={coarse_n}");
+        assert!(map.iter().all(|&c| c < coarse_n));
+        // each coarse node has 1 or 2 fine nodes
+        let mut counts = vec![0usize; coarse_n];
+        for &c in &map {
+            counts[c] += 1;
+        }
+        assert!(counts.iter().all(|&c| (1..=2).contains(&c)));
+    }
+
+    #[test]
+    fn contract_preserves_total_vweight() {
+        let g = Graph::from_matrix(&laplacian_2d(6, 6));
+        let mut rng = Pcg64::new(2);
+        let (map, coarse_n) = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &map, coarse_n);
+        assert!((c.total_vweight() - g.total_vweight()).abs() < 1e-12);
+        // coarse graph symmetric: u in N(v) iff v in N(u)
+        for u in 0..c.n() {
+            for &v in c.neighbors(u) {
+                assert!(c.neighbors(v).contains(&u));
+            }
+        }
+    }
+
+    #[test]
+    fn coarsen_reaches_target() {
+        let g = Graph::from_matrix(&laplacian_2d(16, 16));
+        let mut rng = Pcg64::new(3);
+        let levels = coarsen_to(&g, 10, &mut rng);
+        assert!(!levels.is_empty());
+        assert!(levels.last().unwrap().graph.n() <= 16, "didn't coarsen enough");
+        // strictly decreasing sizes
+        let mut prev = g.n();
+        for l in &levels {
+            assert!(l.graph.n() < prev);
+            prev = l.graph.n();
+        }
+    }
+
+    #[test]
+    fn coarsen_handles_edgeless_graph() {
+        // isolated nodes: matching can't contract; must terminate
+        let mut coo = crate::sparse::Coo::square(5);
+        for i in 0..5 {
+            coo.push(i, i, 1.0);
+        }
+        let g = Graph::from_matrix(&coo.to_csr());
+        let mut rng = Pcg64::new(4);
+        let levels = coarsen_to(&g, 2, &mut rng);
+        assert!(levels.is_empty());
+    }
+}

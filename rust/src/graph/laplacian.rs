@@ -1,0 +1,306 @@
+//! Graph Laplacian construction and a Lanczos eigensolver for the Fiedler
+//! vector (second-smallest eigenvector), the basis of the spectral ordering
+//! baseline and the reference for the network's spectral embedding.
+
+use crate::graph::adjacency::Graph;
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Pcg64;
+
+/// Combinatorial Laplacian L = D − A of a graph (unit edge weights).
+pub fn laplacian(g: &Graph) -> Csr {
+    let n = g.n();
+    let mut coo = Coo::square(n);
+    for u in 0..n {
+        let deg = g.degree(u) as f64;
+        coo.push(u, u, deg);
+        for &v in g.neighbors(u) {
+            coo.push(u, v, -1.0);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Normalized Laplacian L̂ = I − D^{-1/2} A D^{-1/2}.
+pub fn normalized_laplacian(g: &Graph) -> Csr {
+    let n = g.n();
+    let dinv_sqrt: Vec<f64> = (0..n)
+        .map(|u| {
+            let d = g.degree(u) as f64;
+            if d > 0.0 {
+                1.0 / d.sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut coo = Coo::square(n);
+    for u in 0..n {
+        coo.push(u, u, 1.0);
+        for &v in g.neighbors(u) {
+            coo.push(u, v, -dinv_sqrt[u] * dinv_sqrt[v]);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Fiedler vector via Lanczos iteration on the Laplacian, deflating the
+/// constant vector (the known nullspace for a connected graph).
+///
+/// Returns the approximate second-smallest eigenvector. Deterministic for a
+/// given seed. `iters` Lanczos steps with full reorthogonalization — at the
+/// few-thousand-node scale this is exact enough for ordering purposes.
+pub fn fiedler_vector(g: &Graph, iters: usize, seed: u64) -> Vec<f64> {
+    let n = g.n();
+    assert!(n >= 2);
+    let lap = laplacian(g);
+    let m = iters.min(n - 1).max(2);
+
+    // Lanczos on L with starting vector orthogonal to 1.
+    let mut rng = Pcg64::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    project_out_constant(&mut v);
+    normalize(&mut v);
+
+    let mut vs: Vec<Vec<f64>> = vec![v.clone()];
+    let mut alphas: Vec<f64> = Vec::with_capacity(m);
+    let mut betas: Vec<f64> = Vec::with_capacity(m);
+
+    let mut w_prev: Option<Vec<f64>> = None;
+    for j in 0..m {
+        let mut w = lap.matvec(&vs[j]);
+        let alpha = dot(&w, &vs[j]);
+        alphas.push(alpha);
+        for (wi, vi) in w.iter_mut().zip(&vs[j]) {
+            *wi -= alpha * vi;
+        }
+        if let Some(prev) = &w_prev {
+            let beta_prev = *betas.last().unwrap();
+            for (wi, pi) in w.iter_mut().zip(prev) {
+                *wi -= beta_prev * pi;
+            }
+        }
+        // full reorthogonalization (stability over speed; n is small)
+        project_out_constant(&mut w);
+        for vk in &vs {
+            let c = dot(&w, vk);
+            for (wi, vi) in w.iter_mut().zip(vk) {
+                *wi -= c * vi;
+            }
+        }
+        let beta = norm(&w);
+        if beta < 1e-12 {
+            break;
+        }
+        betas.push(beta);
+        for wi in w.iter_mut() {
+            *wi /= beta;
+        }
+        w_prev = Some(vs[j].clone());
+        vs.push(w);
+        if vs.len() > m {
+            break;
+        }
+    }
+
+    // smallest eigenpair of the tridiagonal (alphas, betas) via dense
+    // symmetric QL-free approach: build dense tridiag and use Jacobi.
+    let k = alphas.len();
+    let mut t = vec![0.0f64; k * k];
+    for i in 0..k {
+        t[i * k + i] = alphas[i];
+        if i + 1 < k && i < betas.len() {
+            t[i * k + i + 1] = betas[i];
+            t[(i + 1) * k + i] = betas[i];
+        }
+    }
+    let (evals, evecs) = jacobi_eigen(&mut t, k);
+    // smallest eigenvalue of L restricted to 1⊥ ≈ λ₂
+    let mut idx: Vec<usize> = (0..k).collect();
+    idx.sort_by(|&a, &b| evals[a].partial_cmp(&evals[b]).unwrap());
+    let target = idx[0];
+
+    // Ritz vector = V · y
+    let mut fied = vec![0.0f64; n];
+    for (j, vj) in vs.iter().take(k).enumerate() {
+        let y = evecs[j * k + target];
+        for (fi, vi) in fied.iter_mut().zip(vj) {
+            *fi += y * vi;
+        }
+    }
+    project_out_constant(&mut fied);
+    normalize(&mut fied);
+    fied
+}
+
+/// Rayleigh quotient vᵀLv / vᵀv for testing convergence.
+pub fn rayleigh(lap: &Csr, v: &[f64]) -> f64 {
+    let lv = lap.matvec(v);
+    dot(v, &lv) / dot(v, v).max(1e-300)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+fn normalize(a: &mut [f64]) {
+    let nm = norm(a);
+    if nm > 1e-300 {
+        for x in a.iter_mut() {
+            *x /= nm;
+        }
+    }
+}
+
+fn project_out_constant(a: &mut [f64]) {
+    let mean = a.iter().sum::<f64>() / a.len() as f64;
+    for x in a.iter_mut() {
+        *x -= mean;
+    }
+}
+
+/// Cyclic Jacobi eigen-decomposition for small dense symmetric matrices
+/// (row-major `t`, size k). Returns (eigenvalues, eigenvectors column-major
+/// in a row-major buffer: evecs[i*k + j] = component i of eigenvector j).
+pub fn jacobi_eigen(t: &mut [f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut v = vec![0.0f64; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                off += t[i * k + j] * t[i * k + j];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = t[p * k + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = t[p * k + p];
+                let aqq = t[q * k + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let sign = if theta >= 0.0 { 1.0 } else { -1.0 };
+                let tt = sign / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (tt * tt + 1.0).sqrt();
+                let s = tt * c;
+                // rotate rows/cols p,q of t
+                for i in 0..k {
+                    let tip = t[i * k + p];
+                    let tiq = t[i * k + q];
+                    t[i * k + p] = c * tip - s * tiq;
+                    t[i * k + q] = s * tip + c * tiq;
+                }
+                for i in 0..k {
+                    let tpi = t[p * k + i];
+                    let tqi = t[q * k + i];
+                    t[p * k + i] = c * tpi - s * tqi;
+                    t[q * k + i] = s * tpi + c * tqi;
+                }
+                for i in 0..k {
+                    let vip = v[i * k + p];
+                    let viq = v[i * k + q];
+                    v[i * k + p] = c * vip - s * viq;
+                    v[i * k + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let evals: Vec<f64> = (0..k).map(|i| t[i * k + i]).collect();
+    (evals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::graph::adjacency::Graph;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut coo = Coo::square(n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, i + 1, -1.0);
+        }
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+        }
+        Graph::from_matrix(&coo.to_csr())
+    }
+
+    #[test]
+    fn laplacian_rows_sum_zero() {
+        let g = path_graph(6);
+        let lap = laplacian(&g);
+        for r in 0..6 {
+            let (_, vals) = lap.row(r);
+            assert!((vals.iter().sum::<f64>()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn jacobi_on_2x2() {
+        let mut t = vec![2.0, 1.0, 1.0, 2.0];
+        let (evals, _) = jacobi_eigen(&mut t, 2);
+        let mut e = evals.clone();
+        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((e[0] - 1.0).abs() < 1e-10);
+        assert!((e[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fiedler_of_path_is_monotone() {
+        // The Fiedler vector of a path graph is a (co)sine ramp — strictly
+        // monotone along the path, so sorting by it recovers the path order.
+        let g = path_graph(20);
+        let f = fiedler_vector(&g, 15, 1);
+        let increasing = f.windows(2).all(|w| w[0] < w[1]);
+        let decreasing = f.windows(2).all(|w| w[0] > w[1]);
+        assert!(increasing || decreasing, "fiedler not monotone: {f:?}");
+    }
+
+    #[test]
+    fn fiedler_rayleigh_close_to_lambda2() {
+        // For a path P_n, λ₂ = 2(1 − cos(π/n)).
+        let n = 16;
+        let g = path_graph(n);
+        let lap = laplacian(&g);
+        let f = fiedler_vector(&g, 14, 2);
+        let lam2 = 2.0 * (1.0 - (std::f64::consts::PI / n as f64).cos());
+        let rq = rayleigh(&lap, &f);
+        assert!(
+            (rq - lam2).abs() < 0.05 * lam2 + 1e-9,
+            "rayleigh {rq} vs λ₂ {lam2}"
+        );
+    }
+
+    #[test]
+    fn fiedler_separates_grid() {
+        // On a 2:1 rectangle the Fiedler vector splits the long axis:
+        // columns 0..nx/2 mostly one sign, the rest the other.
+        let a = laplacian_2d(16, 8);
+        let g = Graph::from_matrix(&a);
+        let f = fiedler_vector(&g, 30, 3);
+        let left: f64 = (0..8).map(|x| (0..8).map(|y| f[y * 16 + x]).sum::<f64>()).sum();
+        let right: f64 =
+            (8..16).map(|x| (0..8).map(|y| f[y * 16 + x]).sum::<f64>()).sum();
+        assert!(left * right < 0.0, "halves not separated: {left} vs {right}");
+    }
+
+    #[test]
+    fn normalized_laplacian_diag_is_one() {
+        let g = path_graph(5);
+        let nl = normalized_laplacian(&g);
+        for i in 0..5 {
+            assert!((nl.get(i, i) - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Graph substrate: adjacency views, traversals, Laplacians, the Lanczos
+//! Fiedler solver, and multilevel coarsening. Everything the ordering
+//! algorithms and the spectral baseline need.
+
+pub mod adjacency;
+pub mod coarsen;
+pub mod laplacian;
+
+pub use adjacency::Graph;
+pub use laplacian::{fiedler_vector, laplacian, normalized_laplacian};

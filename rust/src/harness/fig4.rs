@@ -1,0 +1,105 @@
+//! Figure 4: performance variation along matrix size — (a) fill-in ratio,
+//! (b) LU factorization time, (c) ordering time, for each method over size
+//! groups. This is the scalability claim of the paper: graph-theoretic
+//! methods' ordering time blows up with n while GNN-score methods stay
+//! flat.
+
+use crate::coordinator::Method;
+use crate::gen::test_suite;
+use crate::harness::runner::{evaluate_suite, mean_where, to_csv, Record};
+use crate::runtime::PfmRuntime;
+
+/// Configuration for the Figure 4 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig4Config {
+    /// size groups (the paper uses five)
+    pub sizes: Vec<usize>,
+    pub per_class: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config {
+            sizes: vec![128, 256, 512, 1024, 2048],
+            per_class: 1,
+            seed: 0xF164,
+        }
+    }
+}
+
+/// Run the sweep. Returns (records, markdown).
+pub fn run(cfg: &Fig4Config, rt: &mut PfmRuntime) -> (Vec<Record>, String) {
+    let suite = test_suite(&cfg.sizes, cfg.per_class, cfg.seed);
+    let methods = Method::table2();
+    let records = evaluate_suite(&suite, &methods, rt, cfg.seed);
+    let md = render(&records, &methods, &cfg.sizes);
+    (records, md)
+}
+
+/// Size-group mean of a metric for one method. Groups by *target* size:
+/// generated matrices land within ±30% of the target, so group = nearest
+/// configured size.
+fn group_of(n: usize, sizes: &[usize]) -> usize {
+    *sizes
+        .iter()
+        .min_by_key(|&&s| (s as i64 - n as i64).unsigned_abs())
+        .unwrap()
+}
+
+/// Markdown render: three series blocks (a/b/c), rows = methods, columns =
+/// size groups.
+pub fn render(records: &[Record], methods: &[Method], sizes: &[usize]) -> String {
+    let mut md = String::new();
+    let panels: [(&str, Box<dyn Fn(&Record) -> f64>); 3] = [
+        ("Figure 4(a) — fill-in ratio", Box::new(|r: &Record| r.fill_ratio)),
+        ("Figure 4(b) — factorization time (ms)", Box::new(|r: &Record| r.factor_time * 1e3)),
+        ("Figure 4(c) — ordering time (ms)", Box::new(|r: &Record| r.ordering_time * 1e3)),
+    ];
+    for (title, proj) in panels {
+        md.push_str(&format!("## {title}\n\n| Method |"));
+        for s in sizes {
+            md.push_str(&format!(" n≈{s} |"));
+        }
+        md.push_str("\n|---|");
+        for _ in sizes {
+            md.push_str("---|");
+        }
+        md.push('\n');
+        for m in methods {
+            md.push_str(&format!("| {} |", m.label()));
+            for &s in sizes {
+                let v = mean_where(
+                    records,
+                    |r| r.method == m.label() && group_of(r.n, sizes) == s,
+                    &proj,
+                );
+                md.push_str(&format!(" {} |", v.map_or("-".into(), |x| format!("{x:.2}"))));
+            }
+            md.push('\n');
+        }
+        md.push('\n');
+    }
+    md
+}
+
+/// Write outputs.
+pub fn write_outputs(records: &[Record], md: &str, out_dir: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/fig4.csv"), to_csv(records))?;
+    std::fs::write(format!("{out_dir}/fig4.md"), md)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_assignment() {
+        let sizes = [128, 256, 512];
+        assert_eq!(group_of(130, &sizes), 128);
+        assert_eq!(group_of(200, &sizes), 256);
+        assert_eq!(group_of(1000, &sizes), 512);
+    }
+}

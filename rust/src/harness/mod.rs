@@ -1,0 +1,17 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section on the synthetic SuiteSparse-class suites.
+//!
+//! * [`table1`] — ordering-time scaling (paper Table 1's complexity claims)
+//! * [`table2`] — fill-in ratio + factorization time, 8 methods × 6 classes
+//! * [`table3`] — ablation (spectral embedding / encoder / loss)
+//! * [`fig4`]   — fill ratio, LU time, ordering time vs matrix size
+//!
+//! All emit markdown (paper-shaped rows) plus CSV for downstream plotting.
+
+pub mod fig4;
+pub mod runner;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use runner::{evaluate_suite, Record};

@@ -1,0 +1,172 @@
+//! Shared measurement loop: (matrix, method) → fill ratio + timings.
+
+use std::time::Instant;
+
+use crate::coordinator::Method;
+use crate::factor::{analyze, cholesky_with, fill_ratio};
+use crate::gen::{ProblemClass, TestMatrix};
+use crate::runtime::{PfmRuntime, Provenance};
+
+/// One (matrix, method) measurement — a row fragment of every table.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub method: &'static str,
+    pub class: ProblemClass,
+    pub matrix: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub fill_ratio: f64,
+    pub lnnz: usize,
+    /// seconds to compute the permutation
+    pub ordering_time: f64,
+    /// seconds for numeric Cholesky of PAPᵀ (the paper's "LU time")
+    pub factor_time: f64,
+    pub provenance: Option<Provenance>,
+}
+
+/// Evaluate `methods` × `matrices`. Learned methods run through the PJRT
+/// runtime (spectral fallback above the largest bucket, recorded in
+/// provenance). Factorization failures (non-SPD after roundoff) surface as
+/// `None` records and are skipped with a warning — they do not abort the
+/// sweep.
+pub fn evaluate_suite(
+    matrices: &[TestMatrix],
+    methods: &[Method],
+    rt: &mut PfmRuntime,
+    seed: u64,
+) -> Vec<Record> {
+    let mut out = Vec::with_capacity(matrices.len() * methods.len());
+    for tm in matrices {
+        for &method in methods {
+            match evaluate_one(tm, method, rt, seed) {
+                Ok(rec) => out.push(rec),
+                Err(e) => eprintln!(
+                    "warn: {} on {} failed: {e} (skipped)",
+                    method.label(),
+                    tm.name
+                ),
+            }
+        }
+    }
+    out
+}
+
+/// Measure one (matrix, method) pair.
+pub fn evaluate_one(
+    tm: &TestMatrix,
+    method: Method,
+    rt: &mut PfmRuntime,
+    seed: u64,
+) -> Result<Record, String> {
+    let a = &tm.matrix;
+    let t0 = Instant::now();
+    let (order, provenance) = match method {
+        Method::Classical(c) => (c.order(a), None),
+        Method::Learned(l) => {
+            let (o, p) = l.order(rt, a, seed).map_err(|e| e.to_string())?;
+            (o, Some(p))
+        }
+    };
+    let ordering_time = t0.elapsed().as_secs_f64();
+
+    let pap = a.permute_sym(&order);
+    let sym = analyze(&pap);
+    let fr = fill_ratio(&pap, &sym);
+
+    let t1 = Instant::now();
+    cholesky_with(&pap, &sym).map_err(|e| e.to_string())?;
+    let factor_time = t1.elapsed().as_secs_f64();
+
+    Ok(Record {
+        method: method.label(),
+        class: tm.class,
+        matrix: tm.name.clone(),
+        n: a.nrows(),
+        nnz: a.nnz(),
+        fill_ratio: fr,
+        lnnz: sym.lnnz,
+        ordering_time,
+        factor_time,
+        provenance,
+    })
+}
+
+/// Mean of a projection over records matching a filter.
+pub fn mean_where(
+    records: &[Record],
+    f: impl Fn(&Record) -> bool,
+    proj: impl Fn(&Record) -> f64,
+) -> Option<f64> {
+    let vals: Vec<f64> = records.iter().filter(|r| f(r)).map(proj).collect();
+    if vals.is_empty() {
+        None
+    } else {
+        Some(vals.iter().sum::<f64>() / vals.len() as f64)
+    }
+}
+
+/// CSV emitter (all records, one row each).
+pub fn to_csv(records: &[Record]) -> String {
+    let mut s = String::from(
+        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,provenance\n",
+    );
+    for r in records {
+        s.push_str(&format!(
+            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{}\n",
+            r.method,
+            r.class.label(),
+            r.matrix,
+            r.n,
+            r.nnz,
+            r.fill_ratio,
+            r.lnnz,
+            r.ordering_time,
+            r.factor_time,
+            match r.provenance {
+                Some(Provenance::Network) => "network",
+                Some(Provenance::SpectralFallback) => "fallback",
+                None => "classical",
+            }
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::test_suite;
+    use crate::order::Classical;
+
+    #[test]
+    fn evaluates_classical_suite() {
+        let suite = test_suite(&[100], 1, 3);
+        let mut rt = PfmRuntime::new("nonexistent-dir-ok").unwrap();
+        let methods = [
+            Method::Classical(Classical::Natural),
+            Method::Classical(Classical::Amd),
+        ];
+        let recs = evaluate_suite(&suite, &methods, &mut rt, 1);
+        assert_eq!(recs.len(), suite.len() * 2);
+        for r in &recs {
+            assert!(r.fill_ratio >= 0.0, "{:?}", r);
+            assert!(r.factor_time >= 0.0);
+            assert!(r.lnnz >= r.nnz / 2);
+        }
+        // AMD must beat Natural on average
+        let nat = mean_where(&recs, |r| r.method == "Natural", |r| r.fill_ratio).unwrap();
+        let amd = mean_where(&recs, |r| r.method == "AMD", |r| r.fill_ratio).unwrap();
+        assert!(amd < nat, "amd {amd} vs natural {nat}");
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let suite = test_suite(&[80], 1, 4);
+        let mut rt = PfmRuntime::new("nonexistent-dir-ok2").unwrap();
+        let recs =
+            evaluate_suite(&suite, &[Method::Classical(Classical::Rcm)], &mut rt, 1);
+        let csv = to_csv(&recs);
+        assert_eq!(csv.lines().count(), recs.len() + 1);
+        assert!(csv.starts_with("method,class"));
+    }
+}

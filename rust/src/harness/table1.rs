@@ -1,0 +1,121 @@
+//! Table 1: empirical scaling of ordering time, validating the paper's
+//! complexity table — AMD O(|E|·|V|)-ish, Metis O(|E|log|V|), Spectral
+//! O(|V|³) worst case (Lanczos in practice super-linear), GNN methods
+//! O(GNN) ≈ near-linear in the dense-panel work per bucket.
+//!
+//! We fit log(time) = α·log(n) + c per method over a size sweep of 2D3D
+//! matrices and report α (the empirical exponent) plus the raw times.
+
+use crate::coordinator::Method;
+use crate::gen::{ProblemClass, TestMatrix};
+use crate::harness::runner::{evaluate_suite, mean_where, Record};
+use crate::runtime::PfmRuntime;
+
+/// Configuration for the scaling sweep.
+#[derive(Clone, Debug)]
+pub struct Table1Config {
+    pub sizes: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Table1Config { sizes: vec![128, 256, 512, 1024, 2048], seed: 0x7AB1E1 }
+    }
+}
+
+/// Least-squares slope of y over x.
+pub fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den.max(1e-300)
+}
+
+/// Run the sweep and fit exponents. Returns (records, markdown).
+pub fn run(cfg: &Table1Config, rt: &mut PfmRuntime) -> (Vec<Record>, String) {
+    let suite: Vec<TestMatrix> = cfg
+        .sizes
+        .iter()
+        .map(|&n| TestMatrix {
+            name: format!("2d3d_n{n}"),
+            class: ProblemClass::TwoDThreeD,
+            matrix: ProblemClass::TwoDThreeD.generate(n, cfg.seed),
+        })
+        .collect();
+    let methods = Method::table2();
+    let records = evaluate_suite(&suite, &methods, rt, cfg.seed);
+    let md = render(&records, &methods, &cfg.sizes);
+    (records, md)
+}
+
+/// Markdown: ordering time per size + fitted exponent per method.
+pub fn render(records: &[Record], methods: &[Method], sizes: &[usize]) -> String {
+    let mut md = String::new();
+    md.push_str("## Table 1 — ordering-time scaling (empirical exponent α in t ∝ n^α)\n\n");
+    md.push_str("| Method |");
+    for s in sizes {
+        md.push_str(&format!(" n={s} (ms) |"));
+    }
+    md.push_str(" α |\n|---|");
+    for _ in 0..(sizes.len() + 1) {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    for m in methods {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        md.push_str(&format!("| {} |", m.label()));
+        for &s in sizes {
+            let t = mean_where(
+                records,
+                |r| r.method == m.label() && r.n.abs_diff(s) <= s / 2,
+                |r| r.ordering_time,
+            );
+            match t {
+                Some(t) if t > 0.0 => {
+                    md.push_str(&format!(" {:.2} |", t * 1e3));
+                    xs.push((s as f64).ln());
+                    ys.push(t.ln());
+                }
+                _ => md.push_str(" - |"),
+            }
+        }
+        let alpha = if xs.len() >= 2 { format!("{:.2}", slope(&xs, &ys)) } else { "-".into() };
+        md.push_str(&format!(" {alpha} |\n"));
+    }
+    md.push_str(
+        "\nPaper's complexity classes: AMD O(|E||V|), Metis O(|E|log|V|), \
+         Spectral O(|V|³) worst case, UDNO/PFM O(GNN) (high parallelizability).\n",
+    );
+    md
+}
+
+/// Write outputs.
+pub fn write_outputs(records: &[Record], md: &str, out_dir: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(
+        format!("{out_dir}/table1.csv"),
+        crate::harness::runner::to_csv(records),
+    )?;
+    std::fs::write(format!("{out_dir}/table1.md"), md)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_fits_lines() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((slope(&xs, &ys) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,178 @@
+//! Table 2: performance comparison across ordering methods on the
+//! SuiteSparse-class test suite — fill-in ratio and LU factorization time,
+//! one column per problem class plus "All".
+
+use crate::coordinator::Method;
+use crate::gen::{test_suite, ProblemClass};
+use crate::harness::runner::{evaluate_suite, mean_where, to_csv, Record};
+use crate::runtime::PfmRuntime;
+
+/// Configuration for the Table 2 run.
+#[derive(Clone, Debug)]
+pub struct Table2Config {
+    pub sizes: Vec<usize>,
+    pub per_class: usize,
+    pub seed: u64,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        // Laptop-scale stand-in for the paper's 10k–1M SuiteSparse subset
+        // (see DESIGN.md §Substitutions): relative method behaviour is the
+        // reproduction target, not absolute nnz.
+        Table2Config { sizes: vec![256, 512, 1024], per_class: 2, seed: 0x7AB2E2 }
+    }
+}
+
+/// Run the full Table 2 experiment. Returns (records, markdown).
+pub fn run(cfg: &Table2Config, rt: &mut PfmRuntime) -> (Vec<Record>, String) {
+    let suite = test_suite(&cfg.sizes, cfg.per_class, cfg.seed);
+    let methods = Method::table2();
+    let records = evaluate_suite(&suite, &methods, rt, cfg.seed);
+    let md = render(&records, &methods);
+    (records, md)
+}
+
+/// Render the paper-shaped markdown table: per-class fill ratio and factor
+/// time, plus the All aggregate and a summary block comparing PFM to the
+/// best baseline (the paper's headline numbers).
+pub fn render(records: &[Record], methods: &[Method]) -> String {
+    let classes = ProblemClass::ALL;
+    let mut md = String::new();
+    md.push_str("## Table 2 — fill-in ratio / factorization time (ms)\n\n");
+    md.push_str("| Method |");
+    for c in classes {
+        md.push_str(&format!(" {} FR | {} ms |", c.label(), c.label()));
+    }
+    md.push_str(" All FR | All ms |\n|---|");
+    for _ in 0..(classes.len() * 2 + 2) {
+        md.push_str("---|");
+    }
+    md.push('\n');
+
+    for m in methods {
+        md.push_str(&format!("| {} |", m.label()));
+        for c in classes {
+            let fr = mean_where(records, |r| r.method == m.label() && r.class == c, |r| r.fill_ratio);
+            let ft = mean_where(
+                records,
+                |r| r.method == m.label() && r.class == c,
+                |r| r.factor_time * 1e3,
+            );
+            md.push_str(&format!(
+                " {} | {} |",
+                fr.map_or("-".into(), |v| format!("{v:.2}")),
+                ft.map_or("-".into(), |v| format!("{v:.1}")),
+            ));
+        }
+        let fr = mean_where(records, |r| r.method == m.label(), |r| r.fill_ratio);
+        let ft = mean_where(records, |r| r.method == m.label(), |r| r.factor_time * 1e3);
+        md.push_str(&format!(
+            " {} | {} |\n",
+            fr.map_or("-".into(), |v| format!("{v:.2}")),
+            ft.map_or("-".into(), |v| format!("{v:.1}")),
+        ));
+    }
+
+    // headline summary: PFM vs best non-PFM baseline on the All aggregate
+    let pfm_fr = mean_where(records, |r| r.method == "PFM", |r| r.fill_ratio);
+    let pfm_ft = mean_where(records, |r| r.method == "PFM", |r| r.factor_time);
+    let mut best_base_fr: Option<(&str, f64)> = None;
+    let mut best_base_ft: Option<(&str, f64)> = None;
+    for m in methods {
+        if m.label() == "PFM" || m.label() == "Natural" {
+            continue;
+        }
+        if let Some(v) = mean_where(records, |r| r.method == m.label(), |r| r.fill_ratio) {
+            if best_base_fr.map_or(true, |(_, b)| v < b) {
+                best_base_fr = Some((m.label(), v));
+            }
+        }
+        if let Some(v) = mean_where(records, |r| r.method == m.label(), |r| r.factor_time) {
+            if best_base_ft.map_or(true, |(_, b)| v < b) {
+                best_base_ft = Some((m.label(), v));
+            }
+        }
+    }
+    if let (Some(pfr), Some((bn, bfr)), Some(pft), Some((tn, bft))) =
+        (pfm_fr, best_base_fr, pfm_ft, best_base_ft)
+    {
+        md.push_str(&format!(
+            "\n**Headline**: PFM fill ratio {pfr:.2} vs best baseline {bn} {bfr:.2} \
+             ({:+.1}%); PFM factor time {:.1} ms vs best baseline {tn} {:.1} ms ({:+.1}%).\n",
+            (pfr / bfr - 1.0) * 100.0,
+            pft * 1e3,
+            bft * 1e3,
+            (pft / bft - 1.0) * 100.0,
+        ));
+    }
+    md
+}
+
+/// Write records + markdown to the results directory.
+pub fn write_outputs(records: &[Record], md: &str, out_dir: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/table2.csv"), to_csv(records))?;
+    std::fs::write(format!("{out_dir}/table2.md"), md)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::Classical;
+
+    #[test]
+    fn renders_shape() {
+        // tiny synthetic records to exercise the renderer
+        let records = vec![
+            Record {
+                method: "Natural",
+                class: ProblemClass::Sp,
+                matrix: "m1".into(),
+                n: 100,
+                nnz: 500,
+                fill_ratio: 10.0,
+                lnnz: 600,
+                ordering_time: 0.0,
+                factor_time: 0.01,
+                provenance: None,
+            },
+            Record {
+                method: "PFM",
+                class: ProblemClass::Sp,
+                matrix: "m1".into(),
+                n: 100,
+                nnz: 500,
+                fill_ratio: 2.0,
+                lnnz: 300,
+                ordering_time: 0.001,
+                factor_time: 0.002,
+                provenance: None,
+            },
+            Record {
+                method: "AMD",
+                class: ProblemClass::Sp,
+                matrix: "m1".into(),
+                n: 100,
+                nnz: 500,
+                fill_ratio: 3.0,
+                lnnz: 350,
+                ordering_time: 0.0005,
+                factor_time: 0.004,
+                provenance: None,
+            },
+        ];
+        let methods = vec![
+            Method::Classical(Classical::Natural),
+            Method::Classical(Classical::Amd),
+            Method::Learned(crate::runtime::Learned::Pfm),
+        ];
+        let md = render(&records, &methods);
+        assert!(md.contains("| Natural |"));
+        assert!(md.contains("| PFM |"));
+        assert!(md.contains("**Headline**"));
+        // PFM FR 2.0 vs AMD 3.0 → −33.3%
+        assert!(md.contains("-33.3%"), "{md}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Table 3: ablation study of PFM on the SP and CFD suites.
+//!
+//! Rows (matching the paper):
+//!   S_e                      — spectral embedding scores alone
+//!   randinit+MgGNN+FactLoss  — no spectral embedding
+//!   S_e+MgGNN+PCE            — pairwise-cross-entropy loss (GPCE)
+//!   S_e+MgGNN+UDNO           — expected-envelope loss
+//!   S_e+GUnet+PFM            — GraphUnet-lite encoder
+//!   S_e+MgGNN+FactLoss       — full PFM (the proposed method)
+
+use crate::coordinator::Method;
+use crate::gen::{ProblemClass, TestMatrix};
+use crate::harness::runner::{evaluate_suite, mean_where, to_csv, Record};
+use crate::runtime::{Learned, PfmRuntime};
+
+/// The ablation variants, in the paper's row order, with paper-style
+/// labels.
+pub fn ablation_rows() -> Vec<(Learned, &'static str)> {
+    vec![
+        (Learned::Se, "S_e"),
+        (Learned::PfmRandinit, "randinit+MgGNN+FactLoss"),
+        (Learned::Gpce, "S_e+MgGNN+PCE"),
+        (Learned::Udno, "S_e+MgGNN+UDNO"),
+        (Learned::PfmGunet, "S_e+GUnet+PFM"),
+        (Learned::Pfm, "S_e+MgGNN+FactLoss"),
+    ]
+}
+
+/// Configuration for the Table 3 run.
+#[derive(Clone, Debug)]
+pub struct Table3Config {
+    pub sizes: Vec<usize>,
+    pub per_class: usize,
+    pub seed: u64,
+}
+
+impl Default for Table3Config {
+    fn default() -> Self {
+        Table3Config { sizes: vec![256, 512], per_class: 3, seed: 0x7AB3E3 }
+    }
+}
+
+/// Build the SP + CFD suite the paper's ablation uses.
+pub fn ablation_suite(cfg: &Table3Config) -> Vec<TestMatrix> {
+    let mut suite = Vec::new();
+    for &n in &cfg.sizes {
+        for &class in &[ProblemClass::Sp, ProblemClass::Cfd] {
+            for rep in 0..cfg.per_class {
+                let s = cfg
+                    .seed
+                    .wrapping_mul(0x9e3779b97f4a7c15)
+                    .wrapping_add((n as u64) << 8)
+                    .wrapping_add(rep as u64);
+                suite.push(TestMatrix {
+                    name: format!("{}_n{}_r{}", class.label().to_lowercase(), n, rep),
+                    class,
+                    matrix: class.generate(n, s),
+                });
+            }
+        }
+    }
+    suite
+}
+
+/// Run the ablation. Returns (records, markdown).
+pub fn run(cfg: &Table3Config, rt: &mut PfmRuntime) -> (Vec<Record>, String) {
+    let suite = ablation_suite(cfg);
+    let methods: Vec<Method> =
+        ablation_rows().iter().map(|&(l, _)| Method::Learned(l)).collect();
+    let records = evaluate_suite(&suite, &methods, rt, cfg.seed);
+    let md = render(&records);
+    (records, md)
+}
+
+/// Markdown render: fill ratio per SP / CFD / SP+CFD (the paper's columns).
+pub fn render(records: &[Record]) -> String {
+    let mut md = String::new();
+    md.push_str("## Table 3 — ablation (fill-in ratio)\n\n");
+    md.push_str("| Variant | SP | CFD | SP+CFD |\n|---|---|---|---|\n");
+    for (l, label) in ablation_rows() {
+        let sp = mean_where(
+            records,
+            |r| r.method == l.label() && r.class == ProblemClass::Sp,
+            |r| r.fill_ratio,
+        );
+        let cfd = mean_where(
+            records,
+            |r| r.method == l.label() && r.class == ProblemClass::Cfd,
+            |r| r.fill_ratio,
+        );
+        let both = mean_where(records, |r| r.method == l.label(), |r| r.fill_ratio);
+        md.push_str(&format!(
+            "| {label} | {} | {} | {} |\n",
+            sp.map_or("-".into(), |v| format!("{v:.2}")),
+            cfd.map_or("-".into(), |v| format!("{v:.2}")),
+            both.map_or("-".into(), |v| format!("{v:.2}")),
+        ));
+    }
+    md
+}
+
+/// Write outputs.
+pub fn write_outputs(records: &[Record], md: &str, out_dir: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(format!("{out_dir}/table3.csv"), to_csv(records))?;
+    std::fs::write(format!("{out_dir}/table3.md"), md)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_sp_and_cfd() {
+        let cfg = Table3Config { sizes: vec![100], per_class: 1, seed: 1 };
+        let suite = ablation_suite(&cfg);
+        assert_eq!(suite.len(), 2);
+        assert!(suite.iter().any(|t| t.class == ProblemClass::Sp));
+        assert!(suite.iter().any(|t| t.class == ProblemClass::Cfd));
+    }
+
+    #[test]
+    fn rows_match_paper_count() {
+        assert_eq!(ablation_rows().len(), 6);
+    }
+}

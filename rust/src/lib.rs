@@ -1,0 +1,24 @@
+//! # pfm-reorder
+//!
+//! Reproduction of **"Factorization-in-Loop: Proximal Fill-in Minimization
+//! for Sparse Matrix Reordering"** (AAAI 2026). A three-layer system:
+//!
+//! * **L3 (this crate)** — sparse-matrix substrates, baseline reordering
+//!   algorithms, symbolic + numeric Cholesky, a PJRT runtime that executes
+//!   the AOT-compiled PFM network, and an async reordering service.
+//! * **L2 (python/compile)** — the PFM reordering network in JAX, trained
+//!   with ADMM + proximal gradient at build time.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the network's hot
+//!   spots (Sinkhorn normalization, SAGE aggregation, soft-threshold).
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+pub mod coordinator;
+pub mod factor;
+pub mod gen;
+pub mod harness;
+pub mod graph;
+pub mod order;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

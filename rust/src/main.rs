@@ -1,0 +1,270 @@
+//! `pfm-reorder` CLI: experiment drivers (table1/table2/table3/fig4), a
+//! one-shot `order` command, and the `serve` demo loop.
+//!
+//! No clap in the offline crate set — arguments are parsed by hand; every
+//! subcommand documents itself via `pfm-reorder help`.
+
+use std::process::ExitCode;
+
+use pfm_reorder::coordinator::{Method, ReorderService, ServiceConfig};
+use pfm_reorder::factor::fill_ratio_of_order;
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::harness::{fig4, table1, table2, table3};
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+use pfm_reorder::sparse::io::read_matrix_market;
+
+const USAGE: &str = "\
+pfm-reorder — Factorization-in-Loop / Proximal Fill-in Minimization (AAAI'26 reproduction)
+
+USAGE:
+    pfm-reorder <COMMAND> [OPTIONS]
+
+COMMANDS:
+    table1                 ordering-time scaling sweep (paper Table 1)
+    table2                 fill-in + factor-time comparison (paper Table 2)
+    table3                 ablation study (paper Table 3)
+    fig4                   size sweep for fill/LU/ordering time (paper Fig. 4)
+    order <file.mtx>       reorder one MatrixMarket matrix and report fill
+    serve                  run the reordering service demo (batching stats)
+    help                   this message
+
+COMMON OPTIONS:
+    --artifacts <dir>      artifact directory  [default: artifacts]
+    --out <dir>            results directory   [default: results]
+    --sizes <a,b,c>        override matrix sizes
+    --per-class <k>        matrices per class per size
+    --seed <s>             RNG seed
+    --method <name>        (order) Natural|RCM|AMD|Metis|Fiedler|Se|GPCE|UDNO|PFM
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let opts = Opts::parse(&args[1..]);
+    let result = match cmd.as_str() {
+        "table1" => cmd_table1(&opts),
+        "table2" => cmd_table2(&opts),
+        "table3" => cmd_table3(&opts),
+        "fig4" => cmd_fig4(&opts),
+        "order" => cmd_order(&opts),
+        "serve" => cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Hand-rolled option bag.
+struct Opts {
+    artifacts: String,
+    out: String,
+    sizes: Option<Vec<usize>>,
+    per_class: Option<usize>,
+    seed: Option<u64>,
+    method: Option<String>,
+    positional: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Opts {
+        let mut o = Opts {
+            artifacts: "artifacts".into(),
+            out: "results".into(),
+            sizes: None,
+            per_class: None,
+            seed: None,
+            method: None,
+            positional: Vec::new(),
+        };
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--artifacts" => o.artifacts = it.next().cloned().unwrap_or_default(),
+                "--out" => o.out = it.next().cloned().unwrap_or_default(),
+                "--sizes" => {
+                    o.sizes = it.next().map(|s| {
+                        s.split(',').filter_map(|t| t.trim().parse().ok()).collect()
+                    })
+                }
+                "--per-class" => o.per_class = it.next().and_then(|s| s.parse().ok()),
+                "--seed" => o.seed = it.next().and_then(|s| s.parse().ok()),
+                "--method" => o.method = it.next().cloned(),
+                other => o.positional.push(other.to_string()),
+            }
+        }
+        o
+    }
+
+    fn runtime(&self) -> Result<PfmRuntime, String> {
+        PfmRuntime::new(&self.artifacts).map_err(|e| e.to_string())
+    }
+}
+
+fn cmd_table1(o: &Opts) -> Result<(), String> {
+    let mut cfg = table1::Table1Config::default();
+    if let Some(s) = &o.sizes {
+        cfg.sizes = s.clone();
+    }
+    if let Some(s) = o.seed {
+        cfg.seed = s;
+    }
+    let mut rt = o.runtime()?;
+    let (records, md) = table1::run(&cfg, &mut rt);
+    table1::write_outputs(&records, &md, &o.out).map_err(|e| e.to_string())?;
+    println!("{md}");
+    println!("({} records -> {}/table1.csv)", records.len(), o.out);
+    Ok(())
+}
+
+fn cmd_table2(o: &Opts) -> Result<(), String> {
+    let mut cfg = table2::Table2Config::default();
+    if let Some(s) = &o.sizes {
+        cfg.sizes = s.clone();
+    }
+    if let Some(k) = o.per_class {
+        cfg.per_class = k;
+    }
+    if let Some(s) = o.seed {
+        cfg.seed = s;
+    }
+    let mut rt = o.runtime()?;
+    let (records, md) = table2::run(&cfg, &mut rt);
+    table2::write_outputs(&records, &md, &o.out).map_err(|e| e.to_string())?;
+    println!("{md}");
+    println!("({} records -> {}/table2.csv)", records.len(), o.out);
+    Ok(())
+}
+
+fn cmd_table3(o: &Opts) -> Result<(), String> {
+    let mut cfg = table3::Table3Config::default();
+    if let Some(s) = &o.sizes {
+        cfg.sizes = s.clone();
+    }
+    if let Some(k) = o.per_class {
+        cfg.per_class = k;
+    }
+    if let Some(s) = o.seed {
+        cfg.seed = s;
+    }
+    let mut rt = o.runtime()?;
+    let (records, md) = table3::run(&cfg, &mut rt);
+    table3::write_outputs(&records, &md, &o.out).map_err(|e| e.to_string())?;
+    println!("{md}");
+    println!("({} records -> {}/table3.csv)", records.len(), o.out);
+    Ok(())
+}
+
+fn cmd_fig4(o: &Opts) -> Result<(), String> {
+    let mut cfg = fig4::Fig4Config::default();
+    if let Some(s) = &o.sizes {
+        cfg.sizes = s.clone();
+    }
+    if let Some(k) = o.per_class {
+        cfg.per_class = k;
+    }
+    if let Some(s) = o.seed {
+        cfg.seed = s;
+    }
+    let mut rt = o.runtime()?;
+    let (records, md) = fig4::run(&cfg, &mut rt);
+    fig4::write_outputs(&records, &md, &o.out).map_err(|e| e.to_string())?;
+    println!("{md}");
+    println!("({} records -> {}/fig4.csv)", records.len(), o.out);
+    Ok(())
+}
+
+fn parse_method(name: &str) -> Result<Method, String> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "natural" => Method::Classical(Classical::Natural),
+        "rcm" => Method::Classical(Classical::Rcm),
+        "amd" => Method::Classical(Classical::Amd),
+        "metis" | "nd" => Method::Classical(Classical::Metis),
+        "fiedler" | "spectral" => Method::Classical(Classical::Fiedler),
+        "se" | "s_e" => Method::Learned(Learned::Se),
+        "gpce" => Method::Learned(Learned::Gpce),
+        "udno" => Method::Learned(Learned::Udno),
+        "pfm" => Method::Learned(Learned::Pfm),
+        other => return Err(format!("unknown method `{other}`")),
+    })
+}
+
+fn cmd_order(o: &Opts) -> Result<(), String> {
+    let path = o
+        .positional
+        .first()
+        .ok_or("usage: pfm-reorder order <file.mtx> [--method PFM]")?;
+    let a = read_matrix_market(path).map_err(|e| e.to_string())?;
+    let a = if a.is_symmetric(1e-10) { a } else { a.symmetrize() };
+    let method = parse_method(o.method.as_deref().unwrap_or("pfm"))?;
+    let mut rt = o.runtime()?;
+    let t0 = std::time::Instant::now();
+    let order = match method {
+        Method::Classical(c) => c.order(&a),
+        Method::Learned(l) => {
+            l.order(&mut rt, &a, o.seed.unwrap_or(42)).map_err(|e| e.to_string())?.0
+        }
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    let natural = fill_ratio_of_order(&a, &(0..a.nrows()).collect::<Vec<_>>());
+    let reordered = fill_ratio_of_order(&a, &order);
+    println!(
+        "matrix {}x{} nnz={} | {}: fill ratio {:.3} (natural {:.3}) ordering {:.1} ms",
+        a.nrows(),
+        a.ncols(),
+        a.nnz(),
+        method.label(),
+        reordered,
+        natural,
+        dt * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(o: &Opts) -> Result<(), String> {
+    let service = ReorderService::start(ServiceConfig {
+        artifact_dir: o.artifacts.clone(),
+        ..Default::default()
+    });
+    // demo load: a burst of mixed requests over all classes
+    let sizes = o.sizes.clone().unwrap_or_else(|| vec![100, 200, 400]);
+    let seed = o.seed.unwrap_or(7);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut count = 0u64;
+    for &n in &sizes {
+        for &class in &ProblemClass::ALL {
+            let a = class.generate(n, seed ^ n as u64);
+            for &m in &[
+                Method::Learned(Learned::Pfm),
+                Method::Classical(Classical::Amd),
+            ] {
+                rxs.push(service.submit(a.clone(), m, seed + count));
+                count += 1;
+            }
+        }
+    }
+    for rx in rxs {
+        let resp = rx.recv().map_err(|e| e.to_string())?;
+        resp.result?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {count} requests in {wall:.2}s ({:.1} req/s)",
+        count as f64 / wall
+    );
+    println!("metrics: {}", service.metrics.to_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Matrix reordering algorithms: every baseline row of the paper's Table 2
+//! plus the score-sorting inference path shared by all learned methods
+//! (S_e, GPCE, UDNO, PFM).
+
+pub mod amd;
+pub mod nd;
+pub mod rcm;
+pub mod score;
+pub mod spectral;
+
+pub use amd::amd;
+pub use nd::{nested_dissection, nested_dissection_with};
+pub use rcm::{cm, rcm};
+pub use score::{order_from_scores, order_from_scores_f32, ranks_from_scores};
+pub use spectral::{fiedler_order, fiedler_order_with};
+
+use crate::sparse::Csr;
+
+/// The classical (non-learned) ordering methods, i.e. everything computable
+/// without network artifacts. Learned methods are provided by
+/// `runtime::pfm` (they need a compiled HLO artifact).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Classical {
+    /// No reordering (identity).
+    Natural,
+    /// Reverse Cuthill–McKee.
+    Rcm,
+    /// Approximate minimum degree.
+    Amd,
+    /// Multilevel nested dissection (METIS-class).
+    Metis,
+    /// Fiedler-vector spectral ordering.
+    Fiedler,
+}
+
+impl Classical {
+    pub const ALL: [Classical; 5] = [
+        Classical::Natural,
+        Classical::Rcm,
+        Classical::Amd,
+        Classical::Metis,
+        Classical::Fiedler,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Classical::Natural => "Natural",
+            Classical::Rcm => "RCM",
+            Classical::Amd => "AMD",
+            Classical::Metis => "Metis",
+            Classical::Fiedler => "Fiedler",
+        }
+    }
+
+    /// Compute the elimination order for `a`.
+    pub fn order(&self, a: &Csr) -> Vec<usize> {
+        match self {
+            Classical::Natural => (0..a.nrows()).collect(),
+            Classical::Rcm => rcm(a),
+            Classical::Amd => amd(a),
+            Classical::Metis => nested_dissection(a),
+            Classical::Fiedler => fiedler_order(a),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::util::check::check_permutation;
+
+    #[test]
+    fn all_classical_methods_produce_permutations() {
+        let a = laplacian_2d(10, 9);
+        for m in Classical::ALL {
+            let order = m.order(&a);
+            check_permutation(&order)
+                .unwrap_or_else(|e| panic!("{}: {e}", m.label()));
+        }
+    }
+
+    #[test]
+    fn natural_is_identity() {
+        let a = laplacian_2d(4, 4);
+        assert_eq!(Classical::Natural.order(&a), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fill_ranking_matches_paper_shape() {
+        // Paper Table 2 shape: Natural ≫ {AMD, Metis, Fiedler} on 2D3D.
+        use crate::factor::fill_ratio_of_order;
+        let a = laplacian_2d(20, 20);
+        let fill = |m: Classical| fill_ratio_of_order(&a, &m.order(&a));
+        let nat = fill(Classical::Natural);
+        for m in [Classical::Amd, Classical::Metis, Classical::Fiedler] {
+            let f = fill(m);
+            assert!(f < nat, "{} fill {f} not below natural {nat}", m.label());
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Score-based ordering: the inference path of every learned method in the
+//! paper (S_e, GPCE, UDNO, PFM). A network predicts one scalar per node;
+//! the permutation is the argsort. "For inference, it is easy and fast to
+//! derive the permutation from sorting algorithms" (paper §Reordering
+//! Network).
+
+/// Argsort of node scores (ascending; ties broken by node index so the
+/// result is deterministic). `order[k]` = node eliminated k-th.
+pub fn order_from_scores(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&i, &j| {
+        scores[i]
+            .partial_cmp(&scores[j])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(i.cmp(&j))
+    });
+    idx
+}
+
+/// f32 variant (network outputs are f32).
+pub fn order_from_scores_f32(scores: &[f32]) -> Vec<usize> {
+    let s: Vec<f64> = scores.iter().map(|&x| x as f64).collect();
+    order_from_scores(&s)
+}
+
+/// Rank of each node under a score vector: `rank[u]` = position of u.
+pub fn ranks_from_scores(scores: &[f64]) -> Vec<usize> {
+    let order = order_from_scores(scores);
+    let mut rank = vec![0usize; scores.len()];
+    for (k, &u) in order.iter().enumerate() {
+        rank[u] = k;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check_permutation;
+
+    #[test]
+    fn sorts_ascending() {
+        let order = order_from_scores(&[3.0, 1.0, 2.0]);
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ties_broken_by_index() {
+        let order = order_from_scores(&[1.0, 1.0, 0.5, 1.0]);
+        assert_eq!(order, vec![2, 0, 1, 3]);
+    }
+
+    #[test]
+    fn handles_nan_without_panicking() {
+        let order = order_from_scores(&[f64::NAN, 1.0, 0.0]);
+        check_permutation(&order).unwrap();
+    }
+
+    #[test]
+    fn ranks_invert_order() {
+        let scores = [0.3, -1.0, 2.0, 0.1];
+        let order = order_from_scores(&scores);
+        let rank = ranks_from_scores(&scores);
+        for (k, &u) in order.iter().enumerate() {
+            assert_eq!(rank[u], k);
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let s32 = [0.5f32, -0.25, 7.5, 0.0];
+        let s64: Vec<f64> = s32.iter().map(|&x| x as f64).collect();
+        assert_eq!(order_from_scores_f32(&s32), order_from_scores(&s64));
+    }
+}

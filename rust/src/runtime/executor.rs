@@ -1,0 +1,214 @@
+//! PJRT execution of AOT-compiled PFM artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`. One compiled executable
+//! per (variant, bucket); the registry picks the smallest bucket that fits
+//! a request and the executor pads/unpads around the fixed-shape artifact.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::sparse::Csr;
+use crate::util::rng::Pcg64;
+
+/// Error type for runtime operations.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("no artifact bucket fits matrix of size {n} (max bucket {max})")]
+    NoBucket { n: usize, max: usize },
+    #[error("artifact dir {0} has no artifacts for variant {1}")]
+    NoArtifacts(PathBuf, String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled score network for one fixed bucket size.
+pub struct BucketExecutable {
+    pub bucket: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BucketExecutable {
+    /// Run the network on a padded dense panel. `adj` is row-major
+    /// `bucket×bucket`, `x0`/`mask` length `bucket`. Returns `bucket`
+    /// scores (padding scores included; caller slices).
+    pub fn run(&self, adj: &[f32], x0: &[f32], mask: &[f32]) -> Result<Vec<f32>, RuntimeError> {
+        let b = self.bucket;
+        assert_eq!(adj.len(), b * b);
+        assert_eq!(x0.len(), b);
+        assert_eq!(mask.len(), b);
+        let a_lit = xla::Literal::vec1(adj).reshape(&[b as i64, b as i64])?;
+        let x_lit = xla::Literal::vec1(x0);
+        let m_lit = xla::Literal::vec1(mask);
+        let result = self.exe.execute::<xla::Literal>(&[a_lit, x_lit, m_lit])?[0][0]
+            .to_literal_sync()?;
+        // lowered with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Registry of compiled executables: variant → sorted bucket list.
+pub struct PfmRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    compiled: HashMap<(String, usize), Arc<BucketExecutable>>,
+    /// buckets available per variant (sorted ascending)
+    available: HashMap<String, Vec<usize>>,
+}
+
+impl PfmRuntime {
+    /// Scan `artifact_dir` for `<variant>_n<bucket>.hlo.txt` files and set
+    /// up a CPU PJRT client. Compilation is lazy (first use per bucket).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let mut available: HashMap<String, Vec<usize>> = HashMap::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir)? {
+                let name = entry?.file_name().to_string_lossy().to_string();
+                if let Some((variant, bucket)) = parse_artifact_name(&name) {
+                    available.entry(variant).or_default().push(bucket);
+                }
+            }
+        }
+        for buckets in available.values_mut() {
+            buckets.sort_unstable();
+            buckets.dedup();
+        }
+        Ok(PfmRuntime { client, artifact_dir: dir, compiled: HashMap::new(), available })
+    }
+
+    /// Variants discovered in the artifact directory.
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.available.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Buckets available for a variant.
+    pub fn buckets(&self, variant: &str) -> &[usize] {
+        self.available.get(variant).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Does any artifact cover matrices of size n for this variant?
+    pub fn covers(&self, variant: &str, n: usize) -> bool {
+        self.buckets(variant).iter().any(|&b| b >= n)
+    }
+
+    /// Smallest bucket ≥ n for the variant.
+    pub fn bucket_for(&self, variant: &str, n: usize) -> Result<usize, RuntimeError> {
+        let buckets = self.buckets(variant);
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or(RuntimeError::NoBucket { n, max: buckets.last().copied().unwrap_or(0) })
+    }
+
+    /// Get (compiling if needed) the executable for (variant, bucket).
+    pub fn executable(
+        &mut self,
+        variant: &str,
+        bucket: usize,
+    ) -> Result<Arc<BucketExecutable>, RuntimeError> {
+        let key = (variant.to_string(), bucket);
+        if let Some(exe) = self.compiled.get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_dir.join(format!("{variant}_n{bucket}.hlo.txt"));
+        if !path.exists() {
+            return Err(RuntimeError::NoArtifacts(self.artifact_dir.clone(), variant.into()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let wrapped = Arc::new(BucketExecutable { bucket, exe });
+        self.compiled.insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Full inference path: pad the matrix into the smallest covering
+    /// bucket, run the network, return scores for the real nodes only.
+    pub fn scores(
+        &mut self,
+        variant: &str,
+        a: &Csr,
+        seed: u64,
+    ) -> Result<Vec<f32>, RuntimeError> {
+        let n = a.nrows();
+        let bucket = self.bucket_for(variant, n)?;
+        let exe = self.executable(variant, bucket)?;
+        let adj = a.to_dense_padded_f32(bucket);
+        let mut rng = Pcg64::new(seed);
+        let x0: Vec<f32> = (0..bucket).map(|_| rng.next_gaussian() as f32).collect();
+        let mut mask = vec![0.0f32; bucket];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        let mut scores = exe.run(&adj, &x0, &mask)?;
+        scores.truncate(n);
+        Ok(scores)
+    }
+}
+
+/// Parse `<variant>_n<bucket>.hlo.txt` → (variant, bucket).
+pub fn parse_artifact_name(name: &str) -> Option<(String, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let idx = stem.rfind("_n")?;
+    let bucket: usize = stem[idx + 2..].parse().ok()?;
+    Some((stem[..idx].to_string(), bucket))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(parse_artifact_name("pfm_n64.hlo.txt"), Some(("pfm".into(), 64)));
+        assert_eq!(
+            parse_artifact_name("pfm_randinit_n128.hlo.txt"),
+            Some(("pfm_randinit".into(), 128))
+        );
+        assert_eq!(parse_artifact_name("manifest.json"), None);
+        assert_eq!(parse_artifact_name("pfm_nXY.hlo.txt"), None);
+    }
+
+    #[test]
+    fn registry_scans_empty_dir() {
+        let dir = std::env::temp_dir().join(format!("pfm_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = PfmRuntime::new(&dir).unwrap();
+        assert!(rt.variants().is_empty());
+        assert!(!rt.covers("pfm", 10));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bucket_selection_logic() {
+        let dir = std::env::temp_dir().join(format!("pfm_rt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // fake artifact files (never compiled in this test)
+        for b in [64usize, 128, 256] {
+            std::fs::write(dir.join(format!("pfm_n{b}.hlo.txt")), "stub").unwrap();
+        }
+        let rt = PfmRuntime::new(&dir).unwrap();
+        assert_eq!(rt.buckets("pfm"), &[64, 128, 256]);
+        assert_eq!(rt.bucket_for("pfm", 10).unwrap(), 64);
+        assert_eq!(rt.bucket_for("pfm", 64).unwrap(), 64);
+        assert_eq!(rt.bucket_for("pfm", 65).unwrap(), 128);
+        assert!(rt.bucket_for("pfm", 300).is_err());
+        assert!(rt.bucket_for("udno", 10).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 ↔ L2 bridge: load AOT-compiled HLO artifacts and execute them on the
+//! PJRT CPU client. Python never runs at request time — the artifacts under
+//! `artifacts/` are the only thing the coordinator needs.
+
+pub mod executor;
+pub mod pfm_order;
+
+pub use executor::{parse_artifact_name, BucketExecutable, PfmRuntime, RuntimeError};
+pub use pfm_order::{Learned, Provenance};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,147 @@
+//! Coordinate-format sparse matrix builder.
+//!
+//! COO is the assembly format: generators and Matrix Market readers push
+//! `(row, col, value)` triplets, duplicates summed on conversion to CSR.
+
+use crate::sparse::csr::Csr;
+
+/// Coordinate-format sparse matrix (assembly only; convert to [`Csr`] for
+/// computation).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    nrows: usize,
+    ncols: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    /// Empty n×n builder.
+    pub fn square(n: usize) -> Coo {
+        Coo { nrows: n, ncols: n, entries: Vec::new() }
+    }
+
+    /// Empty rectangular builder.
+    pub fn new(nrows: usize, ncols: usize) -> Coo {
+        Coo { nrows, ncols, entries: Vec::new() }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of (possibly duplicate) stored triplets.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Push a triplet. Duplicates are summed at conversion time.
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.nrows && col < self.ncols, "({row},{col}) out of bounds");
+        self.entries.push((row, col, val));
+    }
+
+    /// Push `val` at (row, col) and (col, row) (off-diagonal symmetric pair);
+    /// pushes once if row == col.
+    #[inline]
+    pub fn push_sym(&mut self, row: usize, col: usize, val: f64) {
+        self.push(row, col, val);
+        if row != col {
+            self.push(col, row, val);
+        }
+    }
+
+    /// Access raw triplets (for tests / IO).
+    pub fn entries(&self) -> &[(usize, usize, f64)] {
+        &self.entries
+    }
+
+    /// Convert to CSR: sort triplets, sum duplicates, drop explicit zeros
+    /// produced by cancellation only if `drop_zeros` (structural zeros from
+    /// input are preserved by default — fill-in analysis is pattern-based).
+    pub fn to_csr(&self) -> Csr {
+        let mut trip = self.entries.clone();
+        // STABLE sort: duplicate (row, col) triplets must accumulate in
+        // insertion order so mirrored cells of a symmetric assembly sum in
+        // the same order and land on bit-identical values
+        trip.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; self.nrows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(trip.len());
+        let mut data: Vec<f64> = Vec::with_capacity(trip.len());
+        let mut prev: Option<(usize, usize)> = None;
+        for &(r, c, v) in &trip {
+            if prev == Some((r, c)) {
+                *data.last_mut().unwrap() += v; // duplicate triplet → sum
+            } else {
+                indices.push(c);
+                data.push(v);
+                indptr[r + 1] += 1;
+                prev = Some((r, c));
+            }
+        }
+        for i in 0..self.nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr::from_parts(self.nrows, self.ncols, indptr, indices, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_convert() {
+        let mut c = Coo::square(3);
+        c.push(0, 0, 2.0);
+        c.push(1, 2, 3.0);
+        c.push(2, 1, 3.0);
+        c.push(1, 1, 4.0);
+        let a = c.to_csr();
+        assert_eq!(a.nrows(), 3);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.get(1, 2), 3.0);
+        assert_eq!(a.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut c = Coo::square(2);
+        c.push(0, 1, 1.0);
+        c.push(0, 1, 2.5);
+        c.push(0, 0, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 1), 3.5);
+    }
+
+    #[test]
+    fn push_sym_mirrors() {
+        let mut c = Coo::square(3);
+        c.push_sym(0, 2, 5.0);
+        c.push_sym(1, 1, 7.0);
+        let a = c.to_csr();
+        assert_eq!(a.get(0, 2), 5.0);
+        assert_eq!(a.get(2, 0), 5.0);
+        assert_eq!(a.get(1, 1), 7.0);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut c = Coo::square(4);
+        c.push(3, 3, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.row(0).0.len(), 0);
+        assert_eq!(a.row(3).0, &[3]);
+    }
+}

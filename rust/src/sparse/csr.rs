@@ -1,0 +1,356 @@
+//! Compressed sparse row matrix — the workhorse format for every layer of
+//! the system: orderings read its pattern, the factorizer consumes it, the
+//! coordinator densifies it for the PFM network.
+
+use crate::sparse::coo::Coo;
+
+/// Compressed sparse row matrix with sorted column indices per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from raw parts. Column indices must be sorted and in range;
+    /// validated in debug builds.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Csr {
+        debug_assert_eq!(indptr.len(), nrows + 1);
+        debug_assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        debug_assert_eq!(indices.len(), data.len());
+        #[cfg(debug_assertions)]
+        for r in 0..nrows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                debug_assert!(w[0] < w[1], "row {r}: unsorted/duplicate columns");
+            }
+            if let Some(&last) = row.last() {
+                debug_assert!(last < ncols, "row {r}: column out of range");
+            }
+        }
+        Csr { nrows, ncols, indptr, indices, data }
+    }
+
+    /// n×n identity.
+    pub fn identity(n: usize) -> Csr {
+        Csr::from_parts(n, n, (0..=n).collect(), (0..n).collect(), vec![1.0; n])
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// (column indices, values) of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// Value at (r, c); zero if not stored. O(log nnz(row)).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Structural degree of row r excluding the diagonal.
+    pub fn off_diag_degree(&self, r: usize) -> usize {
+        let (cols, _) = self.row(r);
+        cols.iter().filter(|&&c| c != r).count()
+    }
+
+    /// Transpose (also converts CSR→CSC views).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut pos = counts;
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0f64; self.nnz()];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let p = pos[c];
+                indices[p] = r;
+                data[p] = v;
+                pos[c] += 1;
+            }
+        }
+        Csr::from_parts(self.ncols, self.nrows, indptr, indices, data)
+    }
+
+    /// Pattern-and-value symmetry check (|a_ij − a_ji| ≤ tol·max(1,|a_ij|)).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.indptr != self.indptr || t.indices != self.indices {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&t.data)
+            .all(|(a, b)| (a - b).abs() <= tol * 1.0_f64.max(a.abs()))
+    }
+
+    /// Symmetrize: (A + Aᵀ)/2 on the union pattern.
+    pub fn symmetrize(&self) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        let mut coo = Coo::square(self.nrows);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(r, c, v / 2.0);
+                coo.push(c, r, v / 2.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// y = A·x (dense vector).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Symmetric permutation B = P A Pᵀ where `order[k]` is the original
+    /// index placed at position k (i.e. B[i][j] = A[order[i]][order[j]]).
+    pub fn permute_sym(&self, order: &[usize]) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(order.len(), self.nrows);
+        let n = self.nrows;
+        // inverse: old index -> new position
+        let mut inv = vec![usize::MAX; n];
+        for (newi, &old) in order.iter().enumerate() {
+            assert!(old < n && inv[old] == usize::MAX, "order is not a permutation");
+            inv[old] = newi;
+        }
+        let mut indptr = vec![0usize; n + 1];
+        for newr in 0..n {
+            indptr[newr + 1] = indptr[newr] + (self.indptr[order[newr] + 1] - self.indptr[order[newr]]);
+        }
+        let nnz = self.nnz();
+        let mut indices = vec![0usize; nnz];
+        let mut data = vec![0.0f64; nnz];
+        // scratch reused per row to sort (new_col, val) pairs
+        let mut rowbuf: Vec<(usize, f64)> = Vec::new();
+        for newr in 0..n {
+            let oldr = order[newr];
+            let (cols, vals) = self.row(oldr);
+            rowbuf.clear();
+            rowbuf.extend(cols.iter().zip(vals).map(|(&c, &v)| (inv[c], v)));
+            rowbuf.sort_unstable_by_key(|&(c, _)| c);
+            let s = indptr[newr];
+            for (k, &(c, v)) in rowbuf.iter().enumerate() {
+                indices[s + k] = c;
+                data[s + k] = v;
+            }
+        }
+        Csr::from_parts(n, n, indptr, indices, data)
+    }
+
+    /// Dense copy (small matrices only — tests, network input panels).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[r][c] = v;
+            }
+        }
+        d
+    }
+
+    /// Flattened row-major dense f32 copy, zero-padded to `pad` columns/rows
+    /// (PFM network input; `pad >= n`).
+    pub fn to_dense_padded_f32(&self, pad: usize) -> Vec<f32> {
+        assert!(pad >= self.nrows.max(self.ncols));
+        let mut d = vec![0.0f32; pad * pad];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[r * pad + c] = v as f32;
+            }
+        }
+        d
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ii| scale-free diagonal-dominance margin: min_i (|a_ii| - Σ_{j≠i}|a_ij|).
+    pub fn diag_dominance_margin(&self) -> f64 {
+        let mut margin = f64::INFINITY;
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c == r {
+                    diag = v.abs();
+                } else {
+                    off += v.abs();
+                }
+            }
+            margin = margin.min(diag - off);
+        }
+        margin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        // [2 1 0]
+        // [1 3 0]
+        // [0 0 4]
+        let mut c = Coo::square(3);
+        c.push(0, 0, 2.0);
+        c.push_sym(0, 1, 1.0);
+        c.push(1, 1, 3.0);
+        c.push(2, 2, 4.0);
+        c.to_csr()
+    }
+
+    #[test]
+    fn get_and_row() {
+        let a = example();
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 0), 1.0);
+        assert_eq!(a.get(2, 0), 0.0);
+        assert_eq!(a.row(1).0, &[0, 1]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = example();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn symmetry_checks() {
+        let a = example();
+        assert!(a.is_symmetric(1e-12));
+        let mut c = Coo::square(2);
+        c.push(0, 1, 1.0);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 1.0);
+        assert!(!c.to_csr().is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut c = Coo::square(3);
+        c.push(0, 1, 2.0);
+        c.push(1, 2, 4.0);
+        for i in 0..3 {
+            c.push(i, i, 5.0);
+        }
+        let s = c.to_csr().symmetrize();
+        assert!(s.is_symmetric(1e-12));
+        assert_eq!(s.get(0, 1), 1.0);
+        assert_eq!(s.get(1, 0), 1.0);
+        assert_eq!(s.get(2, 2), 5.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = example();
+        let y = a.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![4.0, 7.0, 12.0]);
+    }
+
+    #[test]
+    fn permute_sym_reorders() {
+        let a = example();
+        // order [2,0,1]: new0=old2, new1=old0, new2=old1
+        let b = a.permute_sym(&[2, 0, 1]);
+        assert_eq!(b.get(0, 0), 4.0);
+        assert_eq!(b.get(1, 1), 2.0);
+        assert_eq!(b.get(1, 2), 1.0);
+        assert_eq!(b.get(2, 1), 1.0);
+        assert!(b.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let a = example();
+        assert_eq!(a.permute_sym(&[0, 1, 2]), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn permute_rejects_invalid() {
+        example().permute_sym(&[0, 0, 1]);
+    }
+
+    #[test]
+    fn dense_padded() {
+        let a = example();
+        let d = a.to_dense_padded_f32(4);
+        assert_eq!(d.len(), 16);
+        assert_eq!(d[0], 2.0);
+        assert_eq!(d[1], 1.0);
+        assert_eq!(d[15], 0.0);
+        assert_eq!(d[2 * 4 + 2], 4.0);
+    }
+
+    #[test]
+    fn dominance_margin() {
+        let a = example();
+        // rows: 2-1=1, 3-1=2, 4-0=4 → min 1
+        assert_eq!(a.diag_dominance_margin(), 1.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Small dense-matrix reference kernels.
+//!
+//! Used only by tests and tiny reference computations (dense Cholesky as an
+//! oracle for the sparse factorizer, dense eigen-iteration checks for the
+//! Lanczos module). Row-major `Vec<f64>` with explicit dimension — not a
+//! performance path.
+
+/// Row-major dense square matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zeros(n: usize) -> Dense {
+        Dense { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Dense {
+        let n = rows.len();
+        let mut d = Dense::zeros(n);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), n);
+            d.a[i * n..(i + 1) * n].copy_from_slice(row);
+        }
+        d
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    /// Dense Cholesky A = L·Lᵀ. Returns lower-triangular L (including the
+    /// diagonal). Errors if the matrix is not positive definite.
+    pub fn cholesky(&self) -> Result<Dense, String> {
+        let n = self.n;
+        let mut l = Dense::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(format!("not SPD: pivot {s} at column {i}"));
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Count entries of the lower triangle (incl. diagonal) with |x| > tol.
+    pub fn tril_nnz(&self, tol: f64) -> usize {
+        let mut count = 0;
+        for i in 0..self.n {
+            for j in 0..=i {
+                if self.get(i, j).abs() > tol {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        (0..self.n)
+            .map(|i| (0..self.n).map(|j| self.get(i, j) * x[j]).sum())
+            .collect()
+    }
+
+    /// Solve L·y = b (forward substitution), L lower-triangular.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for j in 0..i {
+                let lij = self.get(i, j);
+                y[i] -= lij * y[j];
+            }
+            y[i] /= self.get(i, i);
+        }
+        y
+    }
+
+    /// Solve Lᵀ·x = y (backward substitution using the stored lower factor).
+    pub fn solve_lower_transpose(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = y.to_vec();
+        for i in (0..n).rev() {
+            for j in (i + 1)..n {
+                x[i] -= self.get(j, i) * x[j];
+            }
+            x[i] /= self.get(i, i);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_vec_close;
+
+    fn spd3() -> Dense {
+        Dense::from_rows(&[
+            vec![4.0, 2.0, 0.0],
+            vec![2.0, 5.0, 1.0],
+            vec![0.0, 1.0, 3.0],
+        ])
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        // check L Lᵀ = A
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.get(i, k) * l.get(j, k);
+                }
+                assert!((s - a.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        // upper triangle of L is zero
+        assert_eq!(l.get(0, 1), 0.0);
+        assert_eq!(l.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Dense::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(m.cholesky().is_err());
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let b = vec![1.0, 2.0, 3.0];
+        let y = l.solve_lower(&b);
+        let x = l.solve_lower_transpose(&y);
+        assert_vec_close(&a.matvec(&x), &b, 1e-12);
+    }
+
+    #[test]
+    fn tril_nnz_counts() {
+        let a = spd3();
+        assert_eq!(a.tril_nnz(0.0), 5); // 3 diagonal + (1,0) + (2,1)
+    }
+}

@@ -1,0 +1,221 @@
+//! Matrix Market exchange-format I/O.
+//!
+//! Supports the subset covering SuiteSparse matrices the paper evaluates on:
+//! `matrix coordinate real {general|symmetric}` and
+//! `matrix coordinate pattern {general|symmetric}` (pattern entries get
+//! value 1.0). Symmetric files store the lower triangle; the reader mirrors
+//! it. Writers emit `symmetric` when the matrix is numerically symmetric.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+
+/// Errors from Matrix Market parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum MmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad MatrixMarket header: {0}")]
+    Header(String),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Field {
+    Real,
+    Pattern,
+    Integer,
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Read a Matrix Market file into CSR.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<Csr, MmError> {
+    let file = std::fs::File::open(path)?;
+    read_matrix_market_from(std::io::BufReader::new(file))
+}
+
+/// Read Matrix Market content from any reader.
+pub fn read_matrix_market_from(reader: impl BufRead) -> Result<Csr, MmError> {
+    let mut lines = reader.lines().enumerate();
+
+    // header line
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| MmError::Header("empty file".into()))?;
+    let header = header?;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_lowercase()).collect();
+    if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" || h[2] != "coordinate" {
+        return Err(MmError::Header(format!("unsupported header: {header}")));
+    }
+    let field = match h[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        f => return Err(MmError::Header(format!("unsupported field type: {f}"))),
+    };
+    let symmetry = match h[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        s => return Err(MmError::Header(format!("unsupported symmetry: {s}"))),
+    };
+
+    // size line (skipping comments)
+    let mut size_line = None;
+    for (lineno, line) in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some((lineno, t.to_string()));
+        break;
+    }
+    let (lineno, size_line) =
+        size_line.ok_or_else(|| MmError::Header("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| MmError::Parse { line: lineno + 1, msg: e.to_string() })?;
+    if dims.len() != 3 {
+        return Err(MmError::Parse { line: lineno + 1, msg: "size line needs 3 fields".into() });
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(nrows, ncols);
+    let mut seen = 0usize;
+    for (lineno, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let parse_idx = |s: Option<&str>, lineno: usize| -> Result<usize, MmError> {
+            s.ok_or(MmError::Parse { line: lineno + 1, msg: "missing index".into() })?
+                .parse::<usize>()
+                .map_err(|e| MmError::Parse { line: lineno + 1, msg: e.to_string() })
+        };
+        let r = parse_idx(it.next(), lineno)? - 1; // 1-based in the format
+        let c = parse_idx(it.next(), lineno)? - 1;
+        let v = match field {
+            Field::Pattern => 1.0,
+            Field::Real | Field::Integer => it
+                .next()
+                .ok_or(MmError::Parse { line: lineno + 1, msg: "missing value".into() })?
+                .parse::<f64>()
+                .map_err(|e| MmError::Parse { line: lineno + 1, msg: e.to_string() })?,
+        };
+        if r >= nrows || c >= ncols {
+            return Err(MmError::Parse {
+                line: lineno + 1,
+                msg: format!("index ({},{}) out of bounds {}x{}", r + 1, c + 1, nrows, ncols),
+            });
+        }
+        match symmetry {
+            Symmetry::General => coo.push(r, c, v),
+            Symmetry::Symmetric => coo.push_sym(r, c, v),
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(MmError::Parse {
+            line: 0,
+            msg: format!("expected {nnz} entries, found {seen}"),
+        });
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write a CSR matrix in Matrix Market format. Symmetric matrices are
+/// stored as `symmetric` (lower triangle only).
+pub fn write_matrix_market(path: impl AsRef<Path>, a: &Csr) -> Result<(), MmError> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    // exact equality: symmetric storage drops the upper triangle, so a
+    // 1-ulp asymmetry would not survive the roundtrip
+    let symmetric = a.nrows() == a.ncols() && a.is_symmetric(0.0);
+    let sym = if symmetric { "symmetric" } else { "general" };
+    writeln!(w, "%%MatrixMarket matrix coordinate real {sym}")?;
+    writeln!(w, "% generated by pfm-reorder")?;
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+    for r in 0..a.nrows() {
+        let (cols, vals) = a.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            if !symmetric || c <= r {
+                entries.push((r, c, v));
+            }
+        }
+    }
+    writeln!(w, "{} {} {}", a.nrows(), a.ncols(), entries.len())?;
+    for (r, c, v) in entries {
+        writeln!(w, "{} {} {:.17e}", r + 1, c + 1, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn sym_example() -> Csr {
+        let mut c = Coo::square(3);
+        c.push(0, 0, 2.0);
+        c.push_sym(0, 1, -1.0);
+        c.push(1, 1, 2.0);
+        c.push(2, 2, 1.5);
+        c.to_csr()
+    }
+
+    #[test]
+    fn roundtrip_symmetric() {
+        let a = sym_example();
+        let dir = std::env::temp_dir().join(format!("pfm_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sym.mtx");
+        write_matrix_market(&path, &a).unwrap();
+        let b = read_matrix_market(&path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reads_general_and_pattern() {
+        let content = "%%MatrixMarket matrix coordinate real general\n% c\n2 2 3\n1 1 1.0\n1 2 2.0\n2 2 3.0\n";
+        let a = read_matrix_market_from(content.as_bytes()).unwrap();
+        assert_eq!(a.get(0, 1), 2.0);
+        assert_eq!(a.get(1, 0), 0.0);
+
+        let content = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 2\n1 1\n2 1\n";
+        let a = read_matrix_market_from(content.as_bytes()).unwrap();
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 0), 1.0);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_matrix_market_from("%%MatrixMarket tensor x y z\n".as_bytes()).is_err());
+        assert!(read_matrix_market_from(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 0\n".as_bytes()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_and_count_mismatch() {
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market_from(oob.as_bytes()).is_err());
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(short.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: COO assembly, CSR compute format, dense
+//! reference kernels, and Matrix Market I/O.
+//!
+//! Every experiment in the paper operates on sparse symmetric matrices;
+//! this module is the foundation the graph, ordering, and factorization
+//! layers build on.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod io;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;

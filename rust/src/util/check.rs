@@ -1,0 +1,118 @@
+//! Mini property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset the test suite needs: run a property over many deterministic
+//! random cases and, on failure, report the seed that reproduces it.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` over `cases` deterministic random instances. `prop` gets a
+/// fresh RNG per case; return `Err(msg)` to fail. Panics with the failing
+/// case's seed so `forall_seeded(seed..seed+1, ..)` reproduces it.
+pub fn forall(cases: u64, prop: impl Fn(&mut Pcg64) -> Result<(), String>) {
+    forall_seeded(0..cases, prop)
+}
+
+/// Same as [`forall`] but over an explicit seed range (for reproducing).
+pub fn forall_seeded(
+    seeds: std::ops::Range<u64>,
+    prop: impl Fn(&mut Pcg64) -> Result<(), String>,
+) {
+    for seed in seeds {
+        let mut rng = Pcg64::new(0x9e37_79b9 ^ seed.wrapping_mul(0x85eb_ca6b));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case seed={seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two floats are close in absolute + relative terms.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-9)
+    };
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol): (f64, f64, f64) = ($a as f64, $b as f64, $tol as f64);
+        let scale = 1.0_f64.max(a.abs()).max(b.abs());
+        assert!(
+            (a - b).abs() <= tol * scale,
+            "assert_close failed: {} vs {} (tol {}, scale {})",
+            a,
+            b,
+            tol,
+            scale
+        );
+    }};
+}
+
+/// Assert that a slice of floats matches another within tolerance.
+pub fn assert_vec_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_vec_close failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Validate that `perm` is a permutation of 0..n. Returns an error message
+/// describing the violation if not.
+pub fn check_permutation(perm: &[usize]) -> Result<(), String> {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for (pos, &p) in perm.iter().enumerate() {
+        if p >= n {
+            return Err(format!("perm[{pos}]={p} out of range (n={n})"));
+        }
+        if seen[p] {
+            return Err(format!("perm value {p} duplicated (second at pos {pos})"));
+        }
+        seen[p] = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(25, |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x={x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(5, |rng| {
+            if rng.next_f64() < 2.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_macro() {
+        assert_close!(1.0, 1.0 + 1e-12);
+        assert_close!(1e9, 1e9 * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn permutation_check() {
+        assert!(check_permutation(&[2, 0, 1]).is_ok());
+        assert!(check_permutation(&[0, 0, 1]).is_err());
+        assert!(check_permutation(&[0, 3, 1]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utility substrate: deterministic RNG, timing/benchmark
+//! helpers, a mini property-testing harness, and a JSON writer. These stand
+//! in for `rand`, `criterion`, `proptest`, and `serde_json`, which are not
+//! available in the offline crate set.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,160 @@
+//! Wall-clock timing helpers and a small statistics toolkit used by the
+//! benchmark harness (no `criterion` in the offline crate set, so the
+//! benches under `rust/benches/` are hand-rolled on top of this module).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once, returning (result, elapsed seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Summary statistics over repeated timings.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            max: xs[n - 1],
+            median: xs[n / 2],
+            p95: xs[((n as f64 * 0.95) as usize).min(n - 1)],
+        }
+    }
+}
+
+/// Benchmark runner: warms up, then measures `iters` runs of `f`.
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup: 2, iters: 10 }
+    }
+
+    pub fn warmup(mut self, w: usize) -> Self {
+        self.warmup = w;
+        self
+    }
+
+    pub fn iters(mut self, i: usize) -> Self {
+        self.iters = i;
+        self
+    }
+
+    /// Run the benchmark, printing a criterion-style one-line summary and
+    /// returning the stats.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Stats::from_samples(samples);
+        println!(
+            "{:<44} time: [{} {} {}]  (n={})",
+            self.name,
+            fmt_duration(s.min),
+            fmt_duration(s.median),
+            fmt_duration(s.max),
+            s.n
+        );
+        s
+    }
+}
+
+/// Human format for a duration in seconds.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// A simple deadline helper for bounded loops in services/tests.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    end: Instant,
+}
+
+impl Deadline {
+    pub fn in_duration(d: Duration) -> Deadline {
+        Deadline { end: Instant::now() + d }
+    }
+
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.end
+    }
+
+    pub fn remaining(&self) -> Duration {
+        self.end.saturating_duration_since(Instant::now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with(" ms"));
+        assert!(fmt_duration(2.5e-6).ends_with(" µs"));
+        assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::in_duration(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based invariants over the whole substrate, on the in-repo
+//! mini-proptest harness (`util::check::forall`). Each property runs over
+//! dozens of deterministic random instances; failures report the seed.
+
+use pfm_reorder::factor::{analyze, cholesky_with, fill_ratio_of_order};
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::graph::Graph;
+use pfm_reorder::order::{amd, nested_dissection_with, order_from_scores, rcm, Classical};
+use pfm_reorder::sparse::{Coo, Csr, Dense};
+use pfm_reorder::util::check::{check_permutation, forall};
+use pfm_reorder::util::rng::Pcg64;
+
+/// Random sparse SPD matrix (diagonally dominant).
+fn random_spd(rng: &mut Pcg64) -> Csr {
+    let n = 10 + rng.next_below(60);
+    let mut coo = Coo::square(n);
+    let mut diag = vec![1.0; n];
+    let edges = n + rng.next_below(3 * n);
+    for _ in 0..edges {
+        let i = rng.next_below(n);
+        let j = rng.next_below(n);
+        if i == j {
+            continue;
+        }
+        let w = 0.1 + rng.next_f64();
+        coo.push_sym(i, j, -w);
+        diag[i] += w;
+        diag[j] += w;
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, *d + 0.25);
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_permute_sym_preserves_symmetry_and_values() {
+    forall(40, |rng| {
+        let a = random_spd(rng);
+        let order = rng.permutation(a.nrows());
+        let b = a.permute_sym(&order);
+        if !b.is_symmetric(1e-12) {
+            return Err("PAPᵀ not symmetric".into());
+        }
+        if b.nnz() != a.nnz() {
+            return Err(format!("nnz changed: {} -> {}", a.nnz(), b.nnz()));
+        }
+        // spot-check entries: B[i][j] == A[order[i]][order[j]]
+        for _ in 0..10 {
+            let i = rng.next_below(a.nrows());
+            let j = rng.next_below(a.nrows());
+            if (b.get(i, j) - a.get(order[i], order[j])).abs() > 1e-14 {
+                return Err(format!("entry mismatch at ({i},{j})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_permutation_roundtrip_identity() {
+    forall(25, |rng| {
+        let a = random_spd(rng);
+        let order = rng.permutation(a.nrows());
+        let mut inv = vec![0usize; order.len()];
+        for (k, &o) in order.iter().enumerate() {
+            inv[o] = k;
+        }
+        let b = a.permute_sym(&order).permute_sym(&inv);
+        if b != a {
+            return Err("permute(order) then permute(inv) != id".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symbolic_matches_dense_oracle() {
+    forall(30, |rng| {
+        let a = random_spd(rng);
+        let sym = analyze(&a);
+        let dense = Dense::from_rows(&a.to_dense())
+            .cholesky()
+            .map_err(|e| format!("dense chol: {e}"))?;
+        let oracle = dense.tril_nnz(1e-11);
+        if sym.lnnz != oracle {
+            return Err(format!("symbolic lnnz {} vs dense {}", sym.lnnz, oracle));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_numeric_factor_structural_nnz_equals_symbolic() {
+    forall(30, |rng| {
+        let a = random_spd(rng);
+        let sym = analyze(&a);
+        let f = cholesky_with(&a, &sym).map_err(|e| e.to_string())?;
+        if f.lnnz() != sym.lnnz {
+            return Err(format!("numeric {} vs symbolic {}", f.lnnz(), sym.lnnz));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_residual_small() {
+    forall(25, |rng| {
+        let a = random_spd(rng);
+        let n = a.nrows();
+        let f = pfm_reorder::factor::cholesky(&a).map_err(|e| e.to_string())?;
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = f.solve(&b);
+        let err: f64 = x
+            .iter()
+            .zip(&xt)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt();
+        if err > 1e-6 {
+            return Err(format!("solve error {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_orderings_are_permutations_on_all_classes() {
+    forall(18, |rng| {
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let n = 60 + rng.next_below(120);
+        let a = class.generate(n, rng.next_u64());
+        for m in Classical::ALL {
+            let order = m.order(&a);
+            check_permutation(&order)
+                .map_err(|e| format!("{} on {:?}: {e}", m.label(), class))?;
+            if order.len() != a.nrows() {
+                return Err(format!("{}: wrong length", m.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fill_ratio_invariant_under_relabeling() {
+    // fill of (relabeled matrix, composed order) equals fill of
+    // (original, order): fill ratio is permutation-equivariant
+    forall(15, |rng| {
+        let a = random_spd(rng);
+        let n = a.nrows();
+        let order = rng.permutation(n);
+        let fill_a = fill_ratio_of_order(&a, &order);
+
+        let relabel = rng.permutation(n);
+        let b = a.permute_sym(&relabel);
+        // B's node k is A's node relabel[k]; the same physical elimination
+        // sequence in B coordinates:
+        let mut pos_in_relabel = vec![0usize; n];
+        for (k, &r) in relabel.iter().enumerate() {
+            pos_in_relabel[r] = k;
+        }
+        let order_b: Vec<usize> = order.iter().map(|&o| pos_in_relabel[o]).collect();
+        let fill_b = fill_ratio_of_order(&b, &order_b);
+        if (fill_a - fill_b).abs() > 1e-12 {
+            return Err(format!("fill not equivariant: {fill_a} vs {fill_b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_amd_never_much_worse_than_natural() {
+    forall(15, |rng| {
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let a = class.generate(80 + rng.next_below(200), rng.next_u64());
+        let n = a.nrows();
+        let nat = fill_ratio_of_order(&a, &(0..n).collect::<Vec<_>>());
+        let amd_fill = fill_ratio_of_order(&a, &amd(&a));
+        if amd_fill > nat * 1.3 + 0.5 {
+            return Err(format!("amd {amd_fill} much worse than natural {nat} on {class:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rcm_reduces_bandwidth() {
+    use pfm_reorder::order::rcm::bandwidth;
+    forall(15, |rng| {
+        let a = random_spd(rng);
+        let n = a.nrows();
+        let shuffled = a.permute_sym(&rng.permutation(n));
+        let before = bandwidth(&shuffled, &(0..n).collect::<Vec<_>>());
+        let after = bandwidth(&shuffled, &rcm(&shuffled));
+        if after > before {
+            return Err(format!("rcm bandwidth {after} > natural {before}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nd_deterministic_and_valid() {
+    forall(10, |rng| {
+        let a = ProblemClass::TwoDThreeD.generate(150 + rng.next_below(200), rng.next_u64());
+        let seed = rng.next_u64();
+        let o1 = nested_dissection_with(&a, seed);
+        let o2 = nested_dissection_with(&a, seed);
+        if o1 != o2 {
+            return Err("nd not deterministic per seed".into());
+        }
+        check_permutation(&o1)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_score_ordering_is_stable_sort() {
+    forall(30, |rng| {
+        let n = 5 + rng.next_below(100);
+        let scores: Vec<f64> = (0..n).map(|_| (rng.next_below(10) as f64)).collect();
+        let order = order_from_scores(&scores);
+        check_permutation(&order)?;
+        // stability: equal scores keep index order; overall ascending
+        for w in order.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if scores[a] == scores[b] && a > b {
+                return Err(format!("unstable tie: {a} before {b}"));
+            }
+            if scores[a] > scores[b] {
+                return Err("not ascending".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_components_partition_nodes() {
+    forall(20, |rng| {
+        let a = random_spd(rng);
+        let g = Graph::from_matrix(&a);
+        let (comp, count) = g.components();
+        if comp.iter().any(|&c| c >= count) {
+            return Err("component id out of range".into());
+        }
+        // edges never cross components
+        for u in 0..g.n() {
+            for &v in g.neighbors(u) {
+                if comp[u] != comp[v] {
+                    return Err(format!("edge {u}-{v} crosses components"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrix_market_roundtrip() {
+    use pfm_reorder::sparse::io::{read_matrix_market, write_matrix_market};
+    forall(10, |rng| {
+        let a = random_spd(rng);
+        let dir = std::env::temp_dir().join(format!(
+            "pfm_prop_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join("m.mtx");
+        write_matrix_market(&path, &a).map_err(|e| e.to_string())?;
+        let b = read_matrix_market(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_dir_all(&dir).ok();
+        if a != b {
+            return Err("matrix market roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}

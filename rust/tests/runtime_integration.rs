@@ -1,0 +1,96 @@
+//! Integration: load real AOT artifacts through the PJRT CPU client and
+//! verify the full inference path — the critical L3↔L2↔L1 composition
+//! check. Skipped (with a message) when `make artifacts` hasn't run.
+
+use pfm_reorder::factor::fill_ratio_of_order;
+use pfm_reorder::gen::grid::laplacian_2d;
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::order::{order_from_scores_f32, Classical};
+use pfm_reorder::runtime::{Learned, PfmRuntime, Provenance};
+use pfm_reorder::util::check::check_permutation;
+
+fn runtime() -> Option<PfmRuntime> {
+    let rt = PfmRuntime::new("artifacts").expect("PJRT client");
+    if rt.variants().is_empty() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn pfm_artifact_executes_and_orders() {
+    let Some(mut rt) = runtime() else { return };
+    let a = laplacian_2d(7, 7); // n=49 → bucket 64
+    let scores = rt.scores("pfm", &a, 42).expect("network run");
+    assert_eq!(scores.len(), 49);
+    assert!(scores.iter().all(|s| s.is_finite()), "non-finite scores");
+    // scores must not be constant (the network must discriminate nodes)
+    let min = scores.iter().cloned().fold(f32::INFINITY, f32::min);
+    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!(max - min > 1e-9, "constant scores: {min}..{max}");
+    let order = order_from_scores_f32(&scores);
+    check_permutation(&order).unwrap();
+}
+
+#[test]
+fn all_variants_execute_on_bucket64() {
+    let Some(mut rt) = runtime() else { return };
+    let a = ProblemClass::TwoDThreeD.generate(49, 7);
+    for variant in ["pfm", "se", "gpce", "udno", "pfm_randinit", "pfm_gunet"] {
+        let scores = rt.scores(variant, &a, 1).unwrap_or_else(|e| panic!("{variant}: {e}"));
+        assert_eq!(scores.len(), a.nrows(), "{variant}");
+        assert!(scores.iter().all(|s| s.is_finite()), "{variant}: non-finite");
+    }
+}
+
+#[test]
+fn network_provenance_and_fallback() {
+    let Some(mut rt) = runtime() else { return };
+    let small = laplacian_2d(6, 6);
+    let (order, prov) = Learned::Pfm.order(&mut rt, &small, 3).unwrap();
+    assert_eq!(prov, Provenance::Network);
+    check_permutation(&order).unwrap();
+
+    // way above the largest bucket → spectral fallback
+    let big = laplacian_2d(40, 40); // n=1600 > 512
+    let (order, prov) = Learned::Pfm.order(&mut rt, &big, 3).unwrap();
+    assert_eq!(prov, Provenance::SpectralFallback);
+    check_permutation(&order).unwrap();
+}
+
+#[test]
+fn se_artifact_matches_rust_spectral_quality() {
+    // The S_e artifact (power-iteration Fiedler in the network) and the
+    // Rust Lanczos Fiedler ordering should land in the same fill-ratio
+    // ballpark on a grid — they estimate the same vector.
+    let Some(mut rt) = runtime() else { return };
+    let a = laplacian_2d(8, 8);
+    let (order_net, prov) = Learned::Se.order(&mut rt, &a, 5).unwrap();
+    assert_eq!(prov, Provenance::Network);
+    let fill_net = fill_ratio_of_order(&a, &order_net);
+    let fill_rust = fill_ratio_of_order(&a, &Classical::Fiedler.order(&a));
+    assert!(
+        fill_net <= fill_rust * 1.5 + 0.5,
+        "network spectral {fill_net} vs rust lanczos {fill_rust}"
+    );
+}
+
+#[test]
+fn pfm_scores_deterministic_per_seed() {
+    let Some(mut rt) = runtime() else { return };
+    let a = laplacian_2d(6, 6);
+    let s1 = rt.scores("pfm", &a, 9).unwrap();
+    let s2 = rt.scores("pfm", &a, 9).unwrap();
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn larger_bucket_also_works() {
+    let Some(mut rt) = runtime() else { return };
+    let a = ProblemClass::TwoDThreeD.generate(100, 3); // bucket 128
+    let scores = rt.scores("pfm", &a, 11).unwrap();
+    assert_eq!(scores.len(), a.nrows());
+    let order = order_from_scores_f32(&scores);
+    check_permutation(&order).unwrap();
+}

@@ -1,0 +1,146 @@
+//! System-level integration: the coordinator service under load, failure
+//! injection, and cross-layer consistency between the service path and the
+//! direct API path.
+
+use std::sync::Arc;
+
+use pfm_reorder::coordinator::{Method, ReorderService, ServiceConfig};
+use pfm_reorder::factor::{fill_ratio_of_order, DirectSolver};
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::order::Classical;
+use pfm_reorder::runtime::{Learned, PfmRuntime};
+use pfm_reorder::util::check::check_permutation;
+use pfm_reorder::util::rng::Pcg64;
+
+fn service() -> Arc<ReorderService> {
+    ReorderService::start(ServiceConfig {
+        workers: 3,
+        artifact_dir: "artifacts".into(),
+        ..Default::default()
+    })
+}
+
+#[test]
+fn service_and_direct_api_agree_on_classical_orders() {
+    let svc = service();
+    let a = ProblemClass::Sp.generate(216, 5);
+    for method in [Classical::Rcm, Classical::Amd, Classical::Metis] {
+        let via_service = svc
+            .reorder_blocking(a.clone(), Method::Classical(method), 1)
+            .unwrap();
+        let direct = method.order(&a);
+        assert_eq!(via_service.order, direct, "{}", method.label());
+    }
+}
+
+#[test]
+fn service_survives_burst_larger_than_queue_window() {
+    let svc = service();
+    let mut rxs = Vec::new();
+    // 60 mixed requests, more than max_batch and worker count
+    for i in 0..60u64 {
+        let class = ProblemClass::ALL[(i % 6) as usize];
+        let a = class.generate(80 + (i % 5) as usize * 30, i);
+        let m = if i % 2 == 0 {
+            Method::Learned(Learned::Pfm)
+        } else {
+            Method::Classical(Classical::Amd)
+        };
+        rxs.push((a.nrows(), svc.submit(a, m, i)));
+    }
+    for (n, rx) in rxs {
+        let resp = rx.recv().expect("service response");
+        let res = resp.result.expect("ok result");
+        assert_eq!(res.order.len(), n);
+        check_permutation(&res.order).unwrap();
+    }
+    assert_eq!(svc.metrics.total_completed(), 60);
+    assert_eq!(svc.metrics.errors(), 0);
+}
+
+#[test]
+fn learned_method_without_artifacts_falls_back_not_fails() {
+    // failure injection: empty artifact dir → spectral fallback, not error
+    let dir = std::env::temp_dir().join(format!("pfm_noart_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let svc = ReorderService::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: dir.to_string_lossy().to_string(),
+        ..Default::default()
+    });
+    let a = ProblemClass::TwoDThreeD.generate(100, 1);
+    let res = svc
+        .reorder_blocking(a, Method::Learned(Learned::Pfm), 1)
+        .expect("fallback result");
+    check_permutation(&res.order).unwrap();
+    assert_eq!(svc.metrics.fallbacks(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_artifact_reports_error_gracefully() {
+    // failure injection: garbage HLO file → the request errors, the
+    // service keeps serving other requests
+    let dir = std::env::temp_dir().join(format!("pfm_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("pfm_n64.hlo.txt"), "this is not hlo").unwrap();
+    let svc = ReorderService::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: dir.to_string_lossy().to_string(),
+        ..Default::default()
+    });
+    let a = ProblemClass::TwoDThreeD.generate(49, 1);
+    let res = svc.reorder_blocking(a, Method::Learned(Learned::Pfm), 1);
+    assert!(res.is_err(), "corrupt artifact must surface as request error");
+    // service still alive for classical work
+    let b = ProblemClass::TwoDThreeD.generate(49, 2);
+    let ok = svc
+        .reorder_blocking(b, Method::Classical(Classical::Amd), 1)
+        .unwrap();
+    check_permutation(&ok.order).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_pipeline_order_factor_solve_all_methods() {
+    // the complete downstream workflow on a mid-size FEM-like system
+    let a = ProblemClass::Cfd.generate(300, 9);
+    let n = a.nrows();
+    let mut rng = Pcg64::new(10);
+    let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    let b = a.matvec(&xt);
+
+    let mut rt = PfmRuntime::new("artifacts").unwrap();
+    for method in Method::table2() {
+        let order = match method {
+            Method::Classical(c) => c.order(&a),
+            Method::Learned(l) => l.order(&mut rt, &a, 1).unwrap().0,
+        };
+        let solver = DirectSolver::prepare(&a, order, 0.0)
+            .unwrap_or_else(|e| panic!("{}: {e}", method.label()));
+        let x = solver.solve(&b);
+        let resid = DirectSolver::residual(&a, &x, &b);
+        assert!(
+            resid < 1e-8,
+            "{}: residual {resid}",
+            method.label()
+        );
+    }
+}
+
+#[test]
+fn reordering_improves_over_shuffled_natural_everywhere() {
+    // sanity across classes: AMD ordering never loses to a random shuffle
+    let mut rng = Pcg64::new(77);
+    for &class in &ProblemClass::ALL {
+        let a = class.generate(200, 3);
+        let n = a.nrows();
+        let shuffled = fill_ratio_of_order(&a, &rng.permutation(n));
+        let ordered = fill_ratio_of_order(&a, &Classical::Amd.order(&a));
+        assert!(
+            ordered <= shuffled + 1e-9,
+            "{:?}: amd {ordered} vs shuffled {shuffled}",
+            class
+        );
+    }
+}
