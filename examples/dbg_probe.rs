@@ -1,3 +1,9 @@
+//! Debug probe for a single HLO artifact. Uses the PJRT compatibility
+//! layer: with the offline stub it exits with the backend-unavailable
+//! error; with the real `xla` crate linked it executes the artifact.
+
+use pfm_reorder::runtime::xla_compat as xla;
+
 fn main() {
     let path = std::env::args().nth(1).unwrap();
     let n = 16usize;

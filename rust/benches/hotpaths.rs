@@ -1,46 +1,131 @@
 //! Micro-benchmarks of the L3 hot paths identified in DESIGN.md §Perf:
-//! symbolic analysis, numeric Cholesky, AMD's quotient-graph loop, the
-//! Lanczos Fiedler solve, and the permutation kernel. Hand-rolled harness
-//! (no criterion in the offline crate set) on util::timer::Bench.
+//! symbolic analysis, both numeric Cholesky kernels (scalar up-looking vs
+//! blocked supernodal), AMD's quotient-graph loop, the Lanczos Fiedler
+//! solve, and the permutation kernel. Hand-rolled harness (no criterion in
+//! the offline crate set) on util::timer::Bench.
+//!
+//! Emits `BENCH_hotpaths.json` (name → ns/iter, median) in the CWD — the
+//! machine-readable perf baseline future PRs compare against. Set
+//! `HOTPATHS_SMOKE=1` for a low-iteration CI smoke run.
 
-use pfm_reorder::factor::{analyze, cholesky_with};
+use std::sync::Arc;
+
+use pfm_reorder::factor::supernodal::{self, SupernodalSymbolic};
+use pfm_reorder::factor::{
+    analyze, cholesky_with_ws, fundamental_supernodes, refactor_into, FactorWorkspace,
+};
 use pfm_reorder::gen::grid::{laplacian_2d, laplacian_3d};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm};
-use pfm_reorder::util::timer::Bench;
+use pfm_reorder::util::json::Json;
+use pfm_reorder::util::timer::{Bench, Stats};
+
+/// Run one benchmark and record it under the same name used for display —
+/// a single name literal per benchmark keeps the printed output and the
+/// JSON baseline keys in lockstep.
+fn bench<T>(
+    results: &mut Vec<(String, Stats)>,
+    name: &str,
+    warm: usize,
+    iters: usize,
+    f: impl FnMut() -> T,
+) -> Stats {
+    let s = Bench::new(name).warmup(warm).iters(iters).run(f);
+    results.push((name.to_string(), s.clone()));
+    s
+}
 
 fn main() {
-    println!("== hotpaths ==");
+    let smoke = std::env::var("HOTPATHS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let it = |n: usize| if smoke { 1 } else { n };
+    let warm = usize::from(!smoke);
+    println!("== hotpaths{} ==", if smoke { " (smoke)" } else { "" });
+
+    let mut results: Vec<(String, Stats)> = Vec::new();
+
     let grid2d = laplacian_2d(64, 64); // n=4096
     let grid3d = laplacian_3d(14, 14, 14); // n=2744
     let sp = ProblemClass::Sp.generate(1728, 1);
 
-    Bench::new("symbolic_analyze/2d_n4096").iters(20).run(|| analyze(&grid2d));
-    Bench::new("symbolic_analyze/3d_n2744").iters(20).run(|| analyze(&grid3d));
+    bench(&mut results, "symbolic_analyze/2d_n4096", warm, it(20), || analyze(&grid2d));
+    bench(&mut results, "symbolic_analyze/3d_n2744", warm, it(20), || analyze(&grid3d));
+
+    // --- the headline comparison: up-looking vs supernodal under AMD ---
+    let mut ws = FactorWorkspace::new();
 
     let amd_order = amd(&grid2d);
     let pap = grid2d.permute_sym(&amd_order);
     let sym = analyze(&pap);
-    Bench::new("numeric_cholesky/amd_2d_n4096")
-        .iters(10)
-        .run(|| cholesky_with(&pap, &sym).unwrap());
+    let sn2 = Arc::new(SupernodalSymbolic::build(&pap, &sym, fundamental_supernodes(&sym)));
+    bench(&mut results, "numeric_cholesky/uplooking_amd_2d_n4096", warm, it(10), || {
+        cholesky_with_ws(&pap, &sym, &mut ws).unwrap()
+    });
+    bench(&mut results, "numeric_cholesky/supernodal_amd_2d_n4096", warm, it(10), || {
+        supernodal::factorize(&pap, sn2.clone(), &mut ws).unwrap()
+    });
 
     let amd3 = amd(&grid3d);
     let pap3 = grid3d.permute_sym(&amd3);
     let sym3 = analyze(&pap3);
-    Bench::new("numeric_cholesky/amd_3d_n2744")
-        .iters(5)
-        .run(|| cholesky_with(&pap3, &sym3).unwrap());
+    let sn3 = Arc::new(SupernodalSymbolic::build(&pap3, &sym3, fundamental_supernodes(&sym3)));
+    println!(
+        "  (3d AMD structure: {} supernodes, avg width {:.2})",
+        sn3.nsuper(),
+        sn3.avg_width()
+    );
+    let up3 = bench(&mut results, "numeric_cholesky/uplooking_amd_3d_n2744", warm, it(5), || {
+        cholesky_with_ws(&pap3, &sym3, &mut ws).unwrap()
+    });
+    let sn3s =
+        bench(&mut results, "numeric_cholesky/supernodal_amd_3d_n2744", warm, it(5), || {
+            supernodal::factorize(&pap3, sn3.clone(), &mut ws).unwrap()
+        });
+    let speedup_3d = up3.median / sn3s.median.max(1e-12);
+    println!("  supernodal speedup on amd_3d_n2744: {speedup_3d:.2}×  (target ≥ 1.5×)");
 
-    Bench::new("order_amd/2d_n4096").iters(5).run(|| amd(&grid2d));
-    Bench::new("order_amd/sp_n1728").iters(5).run(|| amd(&sp));
-    Bench::new("order_rcm/2d_n4096").iters(10).run(|| rcm(&grid2d));
-    Bench::new("order_nd/2d_n4096").iters(5).run(|| nested_dissection(&grid2d));
-    Bench::new("order_fiedler/2d_n4096").iters(3).run(|| fiedler_order(&grid2d));
+    // steady-state refactorization (allocation-free serving path)
+    let mut up_factor = cholesky_with_ws(&pap3, &sym3, &mut ws).unwrap();
+    bench(&mut results, "refactor/uplooking_amd_3d_n2744", warm, it(5), || {
+        refactor_into(&pap3, &sym3, &mut up_factor, &mut ws).unwrap()
+    });
+    let mut sn_factor = supernodal::factorize(&pap3, sn3.clone(), &mut ws).unwrap();
+    let grows_before = ws.grow_events();
+    bench(&mut results, "refactor/supernodal_amd_3d_n2744", warm, it(5), || {
+        sn_factor.refactor(&pap3, &mut ws).unwrap()
+    });
+    assert_eq!(
+        ws.grow_events(),
+        grows_before,
+        "steady-state refactorization must not allocate scratch"
+    );
 
-    Bench::new("permute_sym/2d_n4096").iters(20).run(|| grid2d.permute_sym(&amd_order));
-    Bench::new("to_dense_padded/n512").iters(20).run(|| {
+    bench(&mut results, "order_amd/2d_n4096", warm, it(5), || amd(&grid2d));
+    bench(&mut results, "order_amd/sp_n1728", warm, it(5), || amd(&sp));
+    bench(&mut results, "order_rcm/2d_n4096", warm, it(10), || rcm(&grid2d));
+    bench(&mut results, "order_nd/2d_n4096", warm, it(5), || nested_dissection(&grid2d));
+    bench(&mut results, "order_fiedler/2d_n4096", warm, it(3), || fiedler_order(&grid2d));
+
+    bench(&mut results, "permute_sym/2d_n4096", warm, it(20), || {
+        grid2d.permute_sym(&amd_order)
+    });
+    bench(&mut results, "to_dense_padded/n512", warm, it(20), || {
         let a = ProblemClass::TwoDThreeD.generate(484, 3);
         a.to_dense_padded_f32(512)
     });
+
+    // --- machine-readable baseline: name → ns/iter (median) ---
+    let mut ns_per_iter = Json::obj();
+    for (name, s) in &results {
+        ns_per_iter = ns_per_iter.set(name, s.median * 1e9);
+    }
+    let out = Json::obj()
+        .set("bench", "hotpaths")
+        .set("smoke", smoke)
+        .set("supernodal_speedup_amd_3d_n2744", speedup_3d)
+        .set("ns_per_iter", ns_per_iter);
+    let path = "BENCH_hotpaths.json";
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
 }

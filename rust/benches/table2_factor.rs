@@ -1,16 +1,28 @@
 //! End-to-end bench behind paper Table 2: per-method ordering + symbolic +
 //! numeric factorization wall time on one representative matrix per class.
-//! `cargo bench --bench table2_factor`
+//! Uses a shared `FactorContext`, so repeated iterations measure the
+//! serving steady state (symbolic cache warm, scratch reused) and the
+//! kernel (supernodal vs up-looking) is chosen per pattern exactly as the
+//! harness/solver would. A direct kernel-vs-kernel pair on the 3D class
+//! closes the loop. `cargo bench --bench table2_factor`
+
+use std::sync::Arc;
 
 use pfm_reorder::coordinator::Method;
+use pfm_reorder::factor::supernodal::{self, SupernodalSymbolic};
+use pfm_reorder::factor::{
+    analyze, cholesky_with_ws, fundamental_supernodes, FactorContext, FactorWorkspace,
+};
 use pfm_reorder::gen::{ProblemClass, TestMatrix};
-use pfm_reorder::harness::runner::evaluate_one;
+use pfm_reorder::harness::runner::evaluate_one_with;
+use pfm_reorder::order::amd;
 use pfm_reorder::runtime::PfmRuntime;
 use pfm_reorder::util::timer::Bench;
 
 fn main() {
     println!("== table2_factor (one matrix/class, n≈512) ==");
     let mut rt = PfmRuntime::new("artifacts").expect("runtime");
+    let mut ctx = FactorContext::new();
     for &class in &ProblemClass::ALL {
         let tm = TestMatrix {
             name: format!("{}_bench", class.label()),
@@ -20,8 +32,29 @@ fn main() {
         for method in Method::table2() {
             let name = format!("{}/{}", class.label(), method.label());
             Bench::new(&name).warmup(1).iters(5).run(|| {
-                evaluate_one(&tm, method, &mut rt, 1).expect("evaluate")
+                evaluate_one_with(&tm, method, &mut rt, 1, &mut ctx).expect("evaluate")
             });
         }
     }
+    println!(
+        "(symbolic cache after sweep: {} hits / {} misses)",
+        ctx.cache.hits(),
+        ctx.cache.misses()
+    );
+
+    // kernel-vs-kernel on the fill-heavy 3D class under AMD
+    let a = ProblemClass::TwoDThreeD.generate(1000, 0xBE1C);
+    let pap = a.permute_sym(&amd(&a));
+    let sym = analyze(&pap);
+    let ssym = Arc::new(SupernodalSymbolic::build(&pap, &sym, fundamental_supernodes(&sym)));
+    let mut ws = FactorWorkspace::new();
+    let up = Bench::new("kernel/uplooking_2d3d_n1000")
+        .warmup(1)
+        .iters(10)
+        .run(|| cholesky_with_ws(&pap, &sym, &mut ws).unwrap());
+    let sn = Bench::new("kernel/supernodal_2d3d_n1000")
+        .warmup(1)
+        .iters(10)
+        .run(|| supernodal::factorize(&pap, ssym.clone(), &mut ws).unwrap());
+    println!("kernel speedup (2d3d n=1000, AMD): {:.2}×", up.median / sn.median.max(1e-12));
 }

@@ -18,6 +18,10 @@ struct Inner {
     /// batch sizes observed by the network executor
     batch_sizes: Vec<usize>,
     fallbacks: usize,
+    /// symbolic-cache outcomes for fill evaluations (serving steady state:
+    /// hits ≫ misses)
+    symbolic_hits: usize,
+    symbolic_misses: usize,
 }
 
 /// Shared metrics sink.
@@ -57,6 +61,24 @@ impl Metrics {
 
     pub fn fallbacks(&self) -> usize {
         self.inner.lock().unwrap().fallbacks
+    }
+
+    /// Record one symbolic-cache lookup outcome (fill evaluation path).
+    pub fn record_symbolic(&self, hit: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if hit {
+            m.symbolic_hits += 1;
+        } else {
+            m.symbolic_misses += 1;
+        }
+    }
+
+    pub fn symbolic_hits(&self) -> usize {
+        self.inner.lock().unwrap().symbolic_hits
+    }
+
+    pub fn symbolic_misses(&self) -> usize {
+        self.inner.lock().unwrap().symbolic_misses
     }
 
     /// Latency stats per method.
@@ -100,6 +122,8 @@ impl Metrics {
             .set("errors", self.errors())
             .set("fallbacks", self.fallbacks())
             .set("mean_batch", self.mean_batch())
+            .set("symbolic_cache_hits", self.symbolic_hits())
+            .set("symbolic_cache_misses", self.symbolic_misses())
             .set("latency", per_method)
     }
 }

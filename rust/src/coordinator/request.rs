@@ -41,6 +41,9 @@ pub struct ReorderRequest {
     pub matrix: Csr,
     pub method: Method,
     pub seed: u64,
+    /// also evaluate the fill ratio of the computed ordering (served from
+    /// the worker's pattern-keyed symbolic cache in the steady state)
+    pub eval_fill: bool,
     pub submitted: Instant,
     pub respond: mpsc::Sender<ReorderResponse>,
 }
@@ -62,6 +65,8 @@ pub struct ReorderResult {
     pub latency: f64,
     /// network batch size this request was served in (learned methods)
     pub batch_size: usize,
+    /// fill ratio of the ordering (only when requested via `eval_fill`)
+    pub fill_ratio: Option<f64>,
 }
 
 #[cfg(test)]

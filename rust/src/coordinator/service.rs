@@ -28,6 +28,8 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+use crate::factor::symbolic::fill_ratio;
+use crate::factor::FactorContext;
 use crate::runtime::{PfmRuntime, Provenance};
 use crate::sparse::Csr;
 
@@ -92,7 +94,14 @@ impl ReorderService {
                     .spawn(move || {
                         while let Ok(req) = rx.recv() {
                             if shutdown.load(Ordering::Relaxed) {
-                                break;
+                                // an already-received request must not be
+                                // dropped silently: tell the caller and
+                                // keep draining until the senders go away
+                                let _ = req.respond.send(ReorderResponse {
+                                    id: req.id,
+                                    result: Err("service shutting down".to_string()),
+                                });
+                                continue;
                             }
                             let target = match req.method {
                                 Method::Classical(_) => ctx.send(req),
@@ -107,35 +116,49 @@ impl ReorderService {
             );
         }
 
-        // classical workers
+        // classical workers — each owns a FactorContext so fill
+        // evaluations reuse scratch and hit the symbolic cache when the
+        // same pattern repeats (the serving steady state)
         for w in 0..config.workers {
             let crx = crx.clone();
             let metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pfm-worker-{w}"))
-                    .spawn(move || loop {
-                        let req = {
-                            let guard = crx.lock().unwrap();
-                            guard.recv()
-                        };
-                        let Ok(req) = req else { break };
-                        let Method::Classical(method) = req.method else {
-                            unreachable!("dispatcher routed learned to classical pool")
-                        };
-                        let order = method.order(&req.matrix);
-                        let latency = req.submitted.elapsed().as_secs_f64();
-                        metrics.record(method.label(), latency, 0, false);
-                        let _ = req.respond.send(ReorderResponse {
-                            id: req.id,
-                            result: Ok(ReorderResult {
-                                order,
-                                method: method.label(),
-                                provenance: None,
-                                latency,
-                                batch_size: 0,
-                            }),
-                        });
+                    .spawn(move || {
+                        let mut fctx = FactorContext::new();
+                        loop {
+                            let req = {
+                                let guard = crx.lock().unwrap();
+                                guard.recv()
+                            };
+                            let Ok(req) = req else { break };
+                            let Method::Classical(method) = req.method else {
+                                unreachable!("dispatcher routed learned to classical pool")
+                            };
+                            let order = method.order(&req.matrix);
+                            // latency = queue wait + ordering compute; the
+                            // optional fill evaluation is bookkeeping and
+                            // must not skew method-vs-method latencies
+                            let latency = req.submitted.elapsed().as_secs_f64();
+                            let fill = if req.eval_fill {
+                                Some(eval_fill(&req.matrix, &order, &mut fctx, &metrics))
+                            } else {
+                                None
+                            };
+                            metrics.record(method.label(), latency, 0, false);
+                            let _ = req.respond.send(ReorderResponse {
+                                id: req.id,
+                                result: Ok(ReorderResult {
+                                    order,
+                                    method: method.label(),
+                                    provenance: None,
+                                    latency,
+                                    batch_size: 0,
+                                    fill_ratio: fill,
+                                }),
+                            });
+                        }
                     })
                     .expect("spawn worker"),
             );
@@ -165,6 +188,18 @@ impl ReorderService {
     /// Submit a reorder request; returns a receiver for the response.
     /// Blocks when the queue is full (backpressure).
     pub fn submit(&self, matrix: Csr, method: Method, seed: u64) -> mpsc::Receiver<ReorderResponse> {
+        self.submit_with_fill(matrix, method, seed, false)
+    }
+
+    /// Like [`submit`](Self::submit), optionally asking the worker to also
+    /// evaluate the ordering's fill ratio (cached symbolic analysis).
+    pub fn submit_with_fill(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+    ) -> mpsc::Receiver<ReorderResponse> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = ReorderRequest {
@@ -172,6 +207,7 @@ impl ReorderService {
             matrix,
             method,
             seed,
+            eval_fill,
             submitted: Instant::now(),
             respond: rtx,
         };
@@ -195,6 +231,20 @@ impl ReorderService {
         }
     }
 
+    /// Convenience: submit with fill evaluation and wait.
+    pub fn reorder_blocking_with_fill(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+    ) -> Result<ReorderResult, String> {
+        let rx = self.submit_with_fill(matrix, method, seed, true);
+        match rx.recv() {
+            Ok(resp) => resp.result,
+            Err(_) => Err("service shut down before responding".to_string()),
+        }
+    }
+
     /// Signal shutdown and join all threads (idempotent).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
@@ -207,6 +257,16 @@ impl ReorderService {
         // disconnect at Drop. Here we only join already-finished threads.
         threads.retain(|t| !t.is_finished());
     }
+}
+
+/// Evaluate the fill ratio of `order` on `a` through a worker-local
+/// symbolic cache; records the hit/miss in the service metrics.
+fn eval_fill(a: &Csr, order: &[usize], fctx: &mut FactorContext, metrics: &Metrics) -> f64 {
+    let pap = a.permute_sym(order);
+    let hits_before = fctx.cache.hits();
+    let analysis = fctx.cache.analyze(&pap);
+    metrics.record_symbolic(fctx.cache.hits() > hits_before);
+    fill_ratio(&pap, &analysis.sym)
 }
 
 /// Network executor: drains the queue, groups by bucket, executes.
@@ -232,6 +292,7 @@ fn network_loop(
     };
 
     let mut pending: VecDeque<ReorderRequest> = VecDeque::new();
+    let mut fctx = FactorContext::new();
     loop {
         // blocking wait for at least one request
         if pending.is_empty() {
@@ -275,7 +336,13 @@ fn network_loop(
                 let Method::Learned(l) = req.method else { unreachable!() };
                 match l.order(&mut runtime, &req.matrix, req.seed) {
                     Ok((order, prov)) => {
+                        // latency before fill evaluation (see worker note)
                         let latency = req.submitted.elapsed().as_secs_f64();
+                        let fill = if req.eval_fill {
+                            Some(eval_fill(&req.matrix, &order, &mut fctx, &metrics))
+                        } else {
+                            None
+                        };
                         metrics.record(
                             l.label(),
                             latency,
@@ -290,6 +357,7 @@ fn network_loop(
                                 provenance: Some(prov),
                                 latency,
                                 batch_size,
+                                fill_ratio: fill,
                             }),
                         });
                     }
@@ -355,6 +423,29 @@ mod tests {
             check_permutation(&result.order).unwrap();
         }
         assert_eq!(service.metrics.total_completed(), 12);
+    }
+
+    #[test]
+    fn fill_evaluation_hits_symbolic_cache() {
+        let service = svc();
+        let a = laplacian_2d(9, 9);
+        let r1 = service
+            .reorder_blocking_with_fill(a.clone(), Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        let f1 = r1.fill_ratio.expect("fill requested");
+        assert!(f1 >= 0.0);
+        // identical matrix + method → identical permuted pattern → cache hit
+        let r2 = service
+            .reorder_blocking_with_fill(a, Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        assert_eq!(r2.fill_ratio, Some(f1));
+        assert_eq!(
+            service.metrics.symbolic_hits() + service.metrics.symbolic_misses(),
+            2
+        );
+        // both requests may land on different workers (separate caches), so
+        // only assert at least one analysis happened and none were lost
+        assert!(service.metrics.symbolic_misses() >= 1);
     }
 
     #[test]

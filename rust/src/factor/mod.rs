@@ -1,12 +1,66 @@
-//! Factorization substrate: elimination trees, symbolic analysis (the exact
-//! fill-in count — the paper's golden criterion), numeric up-looking
-//! Cholesky, and a packaged direct solver.
+//! Factorization substrate — the hottest layer in the repo: the benchmark
+//! harness times numeric Cholesky under every candidate ordering, so every
+//! Table 2 / Fig 4 number is a measurement of this module.
+//!
+//! # Architecture
+//!
+//! ```text
+//!               Csr (permuted PAPᵀ)
+//!                      │
+//!            symbolic::analyze            etree + exact row/col counts
+//!                      │                  (Gilbert–Ng–Peyton, O(nnz(L)))
+//!          ┌───────────┴──────────────┐
+//!          │ fundamental_supernodes   │   partition columns into panels
+//!          │ + supernodal::profitable │   (flop-weighted width heuristic)
+//!          └───────┬─────────┬────────┘
+//!        wide panels│         │chains/trees (e.g. tridiagonal)
+//!                   ▼         ▼
+//!      supernodal::factorize  numeric::cholesky_with_ws
+//!      (blocked, right-       (scalar, up-looking)
+//!       looking panels)               │
+//!                   │                 │
+//!            SupernodalFactor    CholFactor
+//!                   └── to_chol() ────┘      identical row-compressed L
+//! ```
+//!
+//! **Two numeric kernels, one factor.** `numeric` is the scalar up-looking
+//! kernel (row-by-row sparse triangular solves with indexed gathers).
+//! `supernodal` stores runs of columns with identical sub-diagonal pattern
+//! as dense column-major panels and factors them with a small dense
+//! Cholesky + blocked triangular solve + rank-k scatter updates — all
+//! contiguous inner loops. Both produce the same L (verified entrywise to
+//! 1e-12 in `tests/proptests.rs`); `SupernodalFactor::to_chol()` converts
+//! to the row-compressed layout so downstream consumers never care which
+//! kernel ran.
+//!
+//! **Fallback.** Supernodes of width 1 (chains, trees, tridiagonal) make
+//! panel bookkeeping pure overhead, so `supernodal::profitable` gates the
+//! blocked kernel on the *flop-weighted* mean supernode width ≥ 2 (and
+//! n ≥ 48). The solver and harness layers consult it via
+//! [`SymbolicCache::analyze`], which returns `ssym: None` for fallback
+//! patterns.
+//!
+//! **Workspace / cache lifecycle (the serving steady state).** Repeated
+//! factorization of matrices whose pattern doesn't change — the
+//! coordinator's steady state — is allocation-free end to end:
+//! [`FactorWorkspace`] owns all O(n) scratch and only ever grows (its
+//! `grow_events` counter lets tests assert "zero re-allocations"), the
+//! pattern-keyed [`SymbolicCache`] skips symbolic analysis entirely on a
+//! hit, and `numeric::refactor_into` / `SupernodalFactor::refactor`
+//! rewrite the factor's values in place. See DESIGN.md §Factor for the
+//! measured effect.
 
 pub mod etree;
 pub mod numeric;
 pub mod solver;
+pub mod supernodal;
 pub mod symbolic;
+pub mod workspace;
 
-pub use numeric::{cholesky, cholesky_with, CholFactor, FactorError};
-pub use solver::{DirectSolver, SolveStats};
-pub use symbolic::{analyze, fill_ratio, fill_ratio_of_order, Symbolic};
+pub use numeric::{cholesky, cholesky_with, cholesky_with_ws, refactor_into, CholFactor, FactorError};
+pub use solver::{DirectSolver, FactorKind, SolveStats};
+pub use supernodal::{SupernodalFactor, SupernodalSymbolic};
+pub use symbolic::{
+    analyze, factor_flops, fill_ratio, fill_ratio_of_order, fundamental_supernodes, Symbolic,
+};
+pub use workspace::{FactorContext, FactorWorkspace, PatternAnalysis, SymbolicCache};

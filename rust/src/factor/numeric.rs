@@ -6,6 +6,7 @@
 
 use crate::factor::etree::NONE;
 use crate::factor::symbolic::{analyze, Symbolic};
+use crate::factor::workspace::FactorWorkspace;
 use crate::sparse::Csr;
 
 /// Lower-triangular Cholesky factor stored row-compressed (columns sorted
@@ -19,13 +20,26 @@ pub struct CholFactor {
 }
 
 /// Factorization failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FactorError {
-    #[error("matrix is not positive definite: pivot {pivot} at row {row}")]
     NotPositiveDefinite { row: usize, pivot: f64 },
-    #[error("matrix is not square: {nrows}x{ncols}")]
     NotSquare { nrows: usize, ncols: usize },
 }
+
+impl std::fmt::Display for FactorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FactorError::NotPositiveDefinite { row, pivot } => {
+                write!(f, "matrix is not positive definite: pivot {pivot} at row {row}")
+            }
+            FactorError::NotSquare { nrows, ncols } => {
+                write!(f, "matrix is not square: {nrows}x{ncols}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FactorError {}
 
 impl CholFactor {
     pub fn n(&self) -> usize {
@@ -102,6 +116,20 @@ impl CholFactor {
             self.data.clone(),
         )
     }
+
+    /// Assemble from raw row-compressed parts (used by the supernodal
+    /// kernel's `to_chol` conversion). Caller guarantees the layout
+    /// invariants: sorted columns, diagonal last per row.
+    pub(crate) fn from_parts_unchecked(
+        n: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        data: Vec<f64>,
+    ) -> CholFactor {
+        debug_assert_eq!(indptr.len(), n + 1);
+        debug_assert_eq!(indices.len(), data.len());
+        CholFactor { n, indptr, indices, data }
+    }
 }
 
 /// Up-looking sparse Cholesky: A = L·Lᵀ.
@@ -114,24 +142,70 @@ pub fn cholesky(a: &Csr) -> Result<CholFactor, FactorError> {
 }
 
 /// Up-looking numeric factorization with a precomputed symbolic analysis.
+/// Allocates a throwaway workspace; long-lived callers should hold a
+/// [`FactorWorkspace`] and use [`cholesky_with_ws`] instead.
 pub fn cholesky_with(a: &Csr, sym: &Symbolic) -> Result<CholFactor, FactorError> {
+    cholesky_with_ws(a, sym, &mut FactorWorkspace::new())
+}
+
+/// Up-looking numeric factorization with caller-owned scratch buffers.
+/// Repeated calls with same-size (or smaller) matrices perform zero
+/// scratch allocations (the factor's own storage is still fresh; use
+/// [`refactor_into`] to reuse that too).
+pub fn cholesky_with_ws(
+    a: &Csr,
+    sym: &Symbolic,
+    ws: &mut FactorWorkspace,
+) -> Result<CholFactor, FactorError> {
+    let mut indptr = Vec::new();
+    let mut indices = Vec::new();
+    let mut data = Vec::new();
+    factor_core(a, sym, &mut indptr, &mut indices, &mut data, ws)?;
+    Ok(CholFactor { n: a.nrows(), indptr, indices, data })
+}
+
+/// Numeric re-factorization in place: `f` must come from a previous
+/// factorization of a matrix with the same sparsity pattern as `a`. The
+/// factor's buffers are reused (no allocation), so the serving steady
+/// state — same pattern, new values — touches the allocator not at all.
+pub fn refactor_into(
+    a: &Csr,
+    sym: &Symbolic,
+    f: &mut CholFactor,
+    ws: &mut FactorWorkspace,
+) -> Result<(), FactorError> {
+    assert_eq!(f.n, a.nrows(), "refactor_into: factor/matrix size mismatch");
+    let CholFactor { indptr, indices, data, .. } = f;
+    factor_core(a, sym, indptr, indices, data, ws)
+}
+
+/// Shared numeric core writing into caller-owned factor storage. The
+/// output vectors are cleared and resized (capacity is reused when the
+/// caller passes previously-filled buffers of the same pattern).
+fn factor_core(
+    a: &Csr,
+    sym: &Symbolic,
+    indptr: &mut Vec<usize>,
+    indices: &mut Vec<usize>,
+    data: &mut Vec<f64>,
+    ws: &mut FactorWorkspace,
+) -> Result<(), FactorError> {
     if a.nrows() != a.ncols() {
         return Err(FactorError::NotSquare { nrows: a.nrows(), ncols: a.ncols() });
     }
     let n = a.nrows();
-    let mut indptr = vec![0usize; n + 1];
+    ws.acquire(n);
+    let (x, mark, pattern) = ws.uplooking_buffers();
+    indptr.clear();
+    indptr.resize(n + 1, 0);
     for i in 0..n {
         indptr[i + 1] = indptr[i] + sym.row_nnz[i];
     }
     let lnnz = indptr[n];
-    let mut indices = vec![0usize; lnnz];
-    let mut data = vec![0.0f64; lnnz];
-    // column heads: for the dot products we need, per column j, the rows
-    // already written with a nonzero in j. Up-looking avoids storing that by
-    // using a dense scratch x and traversing row patterns.
-    let mut x = vec![0.0f64; n]; // dense accumulator for the current row
-    let mut pattern: Vec<usize> = Vec::with_capacity(n); // row pattern (cols < i)
-    let mut mark = vec![NONE; n];
+    indices.clear();
+    indices.resize(lnnz, 0);
+    data.clear();
+    data.resize(lnnz, 0.0);
 
     // Quick diagonal lookup for each already-factored row: position of the
     // diagonal is indptr[r+1]-1 by construction.
@@ -198,7 +272,7 @@ pub fn cholesky_with(a: &Csr, sym: &Symbolic) -> Result<CholFactor, FactorError>
         indices[s + pattern.len()] = i;
         data[s + pattern.len()] = diag.sqrt();
     }
-    Ok(CholFactor { n, indptr, indices, data })
+    Ok(())
 }
 
 #[cfg(test)]
@@ -300,6 +374,47 @@ mod tests {
         let b = a.matvec(&xtrue);
         let x = f.solve(&b);
         assert_vec_close(&x, &xtrue, 1e-8);
+    }
+
+    #[test]
+    fn workspace_reuse_allocates_once() {
+        let a = laplacian_2d(9, 8);
+        let sym = analyze(&a);
+        let mut ws = FactorWorkspace::new();
+        let f1 = cholesky_with_ws(&a, &sym, &mut ws).unwrap();
+        let grows = ws.grow_events();
+        assert_eq!(grows, 1);
+        for _ in 0..3 {
+            let f = cholesky_with_ws(&a, &sym, &mut ws).unwrap();
+            assert_eq!(f.lnnz(), f1.lnnz());
+        }
+        assert_eq!(ws.grow_events(), grows, "steady state must not grow scratch");
+        assert_eq!(ws.factorizations(), 4);
+    }
+
+    #[test]
+    fn refactor_into_matches_fresh_factorization() {
+        let a = random_spd(35, 3);
+        let sym = analyze(&a);
+        let mut ws = FactorWorkspace::new();
+        let mut f = cholesky_with_ws(&a, &sym, &mut ws).unwrap();
+        // scale the values, keep the pattern
+        let scaled = Csr::from_parts(
+            a.nrows(),
+            a.ncols(),
+            a.indptr().to_vec(),
+            a.indices().to_vec(),
+            a.data().iter().map(|v| v * 2.0).collect(),
+        );
+        let grows = ws.grow_events();
+        refactor_into(&scaled, &sym, &mut f, &mut ws).unwrap();
+        assert_eq!(ws.grow_events(), grows);
+        let fresh = cholesky(&scaled).unwrap();
+        assert_eq!(f.lnnz(), fresh.lnnz());
+        for i in 0..a.nrows() {
+            assert_eq!(f.row(i).0, fresh.row(i).0);
+            assert_vec_close(f.row(i).1, fresh.row(i).1, 1e-14);
+        }
     }
 
     #[test]

@@ -1,17 +1,89 @@
 //! End-to-end direct solver: reorder → factor → solve, with the fill-in and
 //! timing bookkeeping the experiments report. This is the "downstream user"
 //! API — what a simulation code would call.
+//!
+//! The solver picks the numeric kernel per pattern (supernodal for
+//! fill-heavy matrices, up-looking otherwise — see `factor::supernodal::
+//! profitable`), and the [`FactorContext`]-taking entry points make the
+//! serving steady state cheap: a repeated pattern hits the symbolic cache
+//! (zero re-analysis) and the shared workspace (zero scratch allocation),
+//! and [`DirectSolver::refactor`] rewrites the factor values in place.
 
 use std::time::Instant;
 
-use crate::factor::numeric::{cholesky_with, CholFactor, FactorError};
-use crate::factor::symbolic::{analyze, fill_ratio, Symbolic};
+use crate::factor::numeric::{self, CholFactor, FactorError};
+use crate::factor::supernodal::{self, SupernodalFactor};
+use crate::factor::symbolic::{factor_flops, fill_ratio};
+use crate::factor::workspace::{FactorContext, FactorWorkspace, PatternAnalysis};
 use crate::sparse::Csr;
+
+/// The factor produced by whichever numeric kernel the pattern selected.
+pub enum FactorKind {
+    UpLooking(CholFactor),
+    Supernodal(SupernodalFactor),
+}
+
+impl FactorKind {
+    /// nnz(L) including the diagonal.
+    pub fn lnnz(&self) -> usize {
+        match self {
+            FactorKind::UpLooking(f) => f.lnnz(),
+            FactorKind::Supernodal(f) => f.lnnz(),
+        }
+    }
+
+    /// Entrywise ℓ₁ norm of L — the paper's surrogate objective ‖L‖₁.
+    pub fn l1_norm(&self) -> f64 {
+        match self {
+            FactorKind::UpLooking(f) => f.l1_norm(),
+            FactorKind::Supernodal(f) => f.l1_norm(),
+        }
+    }
+
+    /// Solve L·y = b.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        match self {
+            FactorKind::UpLooking(f) => f.solve_lower(b),
+            FactorKind::Supernodal(f) => f.solve_lower(b),
+        }
+    }
+
+    /// Solve Lᵀ·x = y.
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        match self {
+            FactorKind::UpLooking(f) => f.solve_upper(y),
+            FactorKind::Supernodal(f) => f.solve_upper(y),
+        }
+    }
+
+    /// Solve A·x = b given A = L·Lᵀ.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// Which kernel produced this factor.
+    pub fn kernel(&self) -> &'static str {
+        match self {
+            FactorKind::UpLooking(_) => "up-looking",
+            FactorKind::Supernodal(_) => "supernodal",
+        }
+    }
+
+    /// Row-compressed view of L (clones for the up-looking kernel,
+    /// converts panels for the supernodal one).
+    pub fn to_chol(&self) -> CholFactor {
+        match self {
+            FactorKind::UpLooking(f) => f.clone(),
+            FactorKind::Supernodal(f) => f.to_chol(),
+        }
+    }
+}
 
 /// A factorized, permuted system ready for repeated solves.
 pub struct DirectSolver {
     order: Vec<usize>,
-    factor: CholFactor,
+    analysis: PatternAnalysis,
+    factor: FactorKind,
     /// Statistics gathered during `prepare`.
     pub stats: SolveStats,
 }
@@ -26,6 +98,10 @@ pub struct SolveStats {
     pub ordering_time: f64,
     pub symbolic_time: f64,
     pub factor_time: f64,
+    /// exact LLᵀ flop count (Σⱼ col_nnz(L)ⱼ²)
+    pub flops: u64,
+    /// numeric kernel used ("up-looking" | "supernodal")
+    pub kernel: &'static str,
 }
 
 impl DirectSolver {
@@ -33,25 +109,66 @@ impl DirectSolver {
     /// index eliminated k-th), then factorize. `ordering_time` is supplied by
     /// the caller since the ordering was computed outside.
     pub fn prepare(a: &Csr, order: Vec<usize>, ordering_time: f64) -> Result<Self, FactorError> {
+        DirectSolver::prepare_with(a, order, ordering_time, &mut FactorContext::new())
+    }
+
+    /// Like [`prepare`](Self::prepare), but reusing a long-lived
+    /// [`FactorContext`]: a previously-seen permuted pattern skips symbolic
+    /// analysis (cache hit) and performs no scratch allocation.
+    pub fn prepare_with(
+        a: &Csr,
+        order: Vec<usize>,
+        ordering_time: f64,
+        ctx: &mut FactorContext,
+    ) -> Result<Self, FactorError> {
         let t0 = Instant::now();
         let pap = a.permute_sym(&order);
-        let sym: Symbolic = analyze(&pap);
+        let analysis = ctx.cache.analyze(&pap);
         let symbolic_time = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let factor = cholesky_with(&pap, &sym)?;
+        let factor = match &analysis.ssym {
+            Some(ssym) => FactorKind::Supernodal(supernodal::factorize(
+                &pap,
+                ssym.clone(),
+                &mut ctx.workspace,
+            )?),
+            None => FactorKind::UpLooking(numeric::cholesky_with_ws(
+                &pap,
+                &analysis.sym,
+                &mut ctx.workspace,
+            )?),
+        };
         let factor_time = t1.elapsed().as_secs_f64();
 
         let stats = SolveStats {
             n: a.nrows(),
             nnz_a: a.nnz(),
-            lnnz: sym.lnnz,
-            fill_ratio: fill_ratio(&pap, &sym),
+            lnnz: analysis.sym.lnnz,
+            fill_ratio: fill_ratio(&pap, &analysis.sym),
             ordering_time,
             symbolic_time,
             factor_time,
+            flops: factor_flops(&analysis.sym),
+            kernel: factor.kernel(),
         };
-        Ok(DirectSolver { order, factor, stats })
+        Ok(DirectSolver { order, analysis, factor, stats })
+    }
+
+    /// Numeric re-factorization for a matrix with the **same pattern** as
+    /// the one this solver was prepared on but (possibly) new values — the
+    /// serving steady state. Performs zero symbolic analysis (the stored
+    /// analysis is reused) and zero scratch allocation (given a warm
+    /// workspace); the factor values are rewritten in place.
+    pub fn refactor(&mut self, a: &Csr, ws: &mut FactorWorkspace) -> Result<(), FactorError> {
+        let t1 = Instant::now();
+        let pap = a.permute_sym(&self.order);
+        match &mut self.factor {
+            FactorKind::UpLooking(f) => numeric::refactor_into(&pap, &self.analysis.sym, f, ws)?,
+            FactorKind::Supernodal(f) => f.refactor(&pap, ws)?,
+        }
+        self.stats.factor_time = t1.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// Solve A·x = b (handles the permutation internally).
@@ -84,7 +201,7 @@ impl DirectSolver {
         &self.order
     }
 
-    pub fn factor(&self) -> &CholFactor {
+    pub fn factor(&self) -> &FactorKind {
         &self.factor
     }
 }
@@ -92,7 +209,7 @@ impl DirectSolver {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gen::grid::laplacian_2d;
+    use crate::gen::grid::{laplacian_2d, laplacian_3d};
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -131,5 +248,68 @@ mod tests {
         assert!(s.fill_ratio >= 0.0);
         assert_eq!(s.ordering_time, 0.125);
         assert!(s.factor_time >= 0.0);
+        assert!(s.flops > 0);
+        assert!(!s.kernel.is_empty());
+    }
+
+    #[test]
+    fn supernodal_path_selected_and_solves() {
+        let a = laplacian_3d(6, 6, 6);
+        let order = crate::order::amd(&a);
+        let solver = DirectSolver::prepare(&a, order, 0.0).unwrap();
+        assert_eq!(solver.stats.kernel, "supernodal");
+        let n = a.nrows();
+        let mut rng = Pcg64::new(4);
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = solver.solve(&b);
+        assert!(DirectSolver::residual(&a, &x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn steady_state_skips_symbolic_and_allocations() {
+        // the acceptance criterion: repeated factorizations with an
+        // unchanged pattern → zero symbolic re-analysis, zero scratch
+        // re-allocation
+        let a = laplacian_3d(5, 5, 5);
+        let order = crate::order::amd(&a);
+        let mut ctx = FactorContext::new();
+        let _ = DirectSolver::prepare_with(&a, order.clone(), 0.0, &mut ctx).unwrap();
+        assert_eq!(ctx.cache.misses(), 1);
+        let grows = ctx.workspace.grow_events();
+        for _ in 0..5 {
+            let s = DirectSolver::prepare_with(&a, order.clone(), 0.0, &mut ctx).unwrap();
+            assert!(s.stats.lnnz > 0);
+        }
+        assert_eq!(ctx.cache.misses(), 1, "no symbolic re-analysis");
+        assert_eq!(ctx.cache.hits(), 5);
+        assert_eq!(ctx.workspace.grow_events(), grows, "no scratch re-allocation");
+    }
+
+    #[test]
+    fn refactor_updates_values_in_place() {
+        let a = laplacian_2d(9, 9);
+        let n = a.nrows();
+        let mut ctx = FactorContext::new();
+        let mut solver =
+            DirectSolver::prepare_with(&a, (0..n).collect(), 0.0, &mut ctx).unwrap();
+        // same pattern, scaled values
+        let scaled = crate::sparse::Csr::from_parts(
+            n,
+            n,
+            a.indptr().to_vec(),
+            a.indices().to_vec(),
+            a.data().iter().map(|v| v * 3.0).collect(),
+        );
+        let misses = ctx.cache.misses();
+        let grows = ctx.workspace.grow_events();
+        solver.refactor(&scaled, &mut ctx.workspace).unwrap();
+        assert_eq!(ctx.cache.misses(), misses, "refactor must not re-analyze");
+        assert_eq!(ctx.workspace.grow_events(), grows);
+        let mut rng = Pcg64::new(9);
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = scaled.matvec(&xt);
+        let x = solver.solve(&b);
+        assert!(DirectSolver::residual(&scaled, &x, &b) < 1e-10);
     }
 }

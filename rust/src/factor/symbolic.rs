@@ -16,15 +16,24 @@ pub struct Symbolic {
     pub parent: Vec<usize>,
     /// nnz of each row of L (including the diagonal).
     pub row_nnz: Vec<usize>,
+    /// nnz of each column of L (including the diagonal) — the exact
+    /// Gilbert–Ng–Peyton column counts.
+    pub col_nnz: Vec<usize>,
     /// total nnz(L) including the diagonal.
     pub lnnz: usize,
 }
 
 /// Run symbolic analysis on a symmetric matrix.
+///
+/// Row counts and column counts come out of the same row-subtree
+/// traversal: when row i's walk discovers node j (⇔ l_ij ≠ 0, j < i), it is
+/// one new entry of row i *and* one new sub-diagonal entry of column j, so
+/// both counters advance together and both are exact in O(nnz(L)).
 pub fn analyze(a: &Csr) -> Symbolic {
     let n = a.nrows();
     let parent = etree::etree(a);
     let mut row_nnz = vec![1usize; n]; // diagonal always present
+    let mut col_nnz = vec![1usize; n]; // ditto for columns
     let mut mark = vec![NONE; n]; // mark[j] == i ⇒ j already counted for row i
     for i in 0..n {
         mark[i] = i;
@@ -39,6 +48,7 @@ pub fn analyze(a: &Csr) -> Symbolic {
             while mark[node] != i {
                 mark[node] = i;
                 row_nnz[i] += 1;
+                col_nnz[node] += 1;
                 if parent[node] == NONE || parent[node] >= i {
                     break;
                 }
@@ -47,7 +57,7 @@ pub fn analyze(a: &Csr) -> Symbolic {
         }
     }
     let lnnz = row_nnz.iter().sum();
-    Symbolic { parent, row_nnz, lnnz }
+    Symbolic { parent, row_nnz, col_nnz, lnnz }
 }
 
 /// Exact number of fill-ins: new nonzero *positions* created by the
@@ -74,15 +84,43 @@ pub fn fill_ratio_of_order(a: &Csr, order: &[usize]) -> f64 {
 }
 
 /// Number of floating-point operations the numeric factorization will
-/// perform: Σ_j nnz_col(L_j)² (standard flop count for LLᵀ). Used by the
-/// benchmark harness as a machine-independent cost proxy.
+/// perform: the exact Σ_j col_nnz(L_j)² (standard flop count for LLᵀ —
+/// column j costs one sqrt, col_nnz−1 divides, and a rank-1 update over the
+/// col_nnz×col_nnz lower block, which Σ cⱼ² counts to leading order).
+/// Used by the benchmark harness as a machine-independent cost measure.
 pub fn factor_flops(sym: &Symbolic) -> u64 {
-    // col counts from row patterns: recompute via the etree-based relation
-    // col_count[j] = 1 + #descendants contributing. We derive them cheaply
-    // from row subtree sizes: every row-i entry in column j contributes one
-    // multiply-add pass of length ~col nnz; use Σ row_nnz² as an upper-bound
-    // proxy consistent across orderings.
-    sym.row_nnz.iter().map(|&r| (r as u64) * (r as u64)).sum()
+    sym.col_nnz.iter().map(|&c| (c as u64) * (c as u64)).sum()
+}
+
+/// Cap on supernode panel width. Wider runs are split: a prefix of a
+/// nested-pattern run is still a valid supernode, and bounding the width
+/// keeps the dense panels inside L1/L2 during the rank-k updates.
+pub const MAX_SUPERNODE_WIDTH: usize = 32;
+
+/// Partition the columns into fundamental supernodes: maximal runs of
+/// columns with identical sub-diagonal pattern, detected with the exact
+/// column counts via
+/// `parent[j] == j+1 && col_nnz[j] == col_nnz[j+1] + 1`
+/// (the parent relation gives Struct(L₍ⱼ₎)∖{j} ⊆ Struct(L₍ⱼ₊₁₎); equal
+/// cardinality upgrades the inclusion to equality). Returns CSR-style
+/// boundaries: `sn_ptr[s]..sn_ptr[s+1]` are the columns of supernode s,
+/// `sn_ptr.len() == nsuper + 1`, `sn_ptr[nsuper] == n`.
+pub fn fundamental_supernodes(sym: &Symbolic) -> Vec<usize> {
+    let n = sym.parent.len();
+    let mut sn_ptr = Vec::with_capacity(n / 2 + 2);
+    sn_ptr.push(0);
+    let mut start = 0usize;
+    for j in 0..n {
+        let merge_next = j + 1 < n
+            && sym.parent[j] == j + 1
+            && sym.col_nnz[j] == sym.col_nnz[j + 1] + 1
+            && (j + 1 - start) < MAX_SUPERNODE_WIDTH;
+        if !merge_next {
+            sn_ptr.push(j + 1);
+            start = j + 1;
+        }
+    }
+    sn_ptr
 }
 
 #[cfg(test)]
@@ -200,8 +238,110 @@ mod tests {
         }
         let a = coo.to_csr();
         let good = factor_flops(&analyze(&a));
+        // exact counts: hub-last columns are {j, hub} (c=2) except the hub
+        // itself (c=1) → 9·4 + 1
+        assert_eq!(good, 37);
         let rev: Vec<usize> = (0..n).rev().collect();
         let bad = factor_flops(&analyze(&a.permute_sym(&rev)));
+        // hub-first is dense: Σ_{k=1..10} k² = 385
+        assert_eq!(bad, 385);
         assert!(bad > 2 * good, "bad {bad} vs good {good}");
+    }
+
+    /// Dense-Cholesky oracle for per-column counts of L.
+    fn dense_col_counts(a: &Csr) -> Vec<usize> {
+        let d = Dense::from_rows(&a.to_dense());
+        let l = d.cholesky().expect("SPD");
+        let n = a.nrows();
+        (0..n)
+            .map(|j| (j..n).filter(|&i| l.get(i, j).abs() > 1e-11).count())
+            .collect()
+    }
+
+    #[test]
+    fn col_counts_match_dense_oracle() {
+        let a = laplacian_2d(6, 5);
+        let sym = analyze(&a);
+        assert_eq!(sym.col_nnz, dense_col_counts(&a), "2d grid");
+        assert_eq!(sym.col_nnz.iter().sum::<usize>(), sym.lnnz);
+
+        let mut rng = Pcg64::new(5);
+        for trial in 0..8 {
+            let n = 12 + rng.next_below(20);
+            let mut coo = Coo::square(n);
+            let mut diag = vec![1.0; n];
+            for _ in 0..(2 * n) {
+                let i = rng.next_below(n);
+                let j = rng.next_below(n);
+                if i == j {
+                    continue;
+                }
+                let w = 0.1 + rng.next_f64();
+                coo.push_sym(i, j, -w);
+                diag[i] += w;
+                diag[j] += w;
+            }
+            for (i, d) in diag.iter().enumerate() {
+                coo.push(i, i, *d + 0.5);
+            }
+            let a = coo.to_csr();
+            let sym = analyze(&a);
+            assert_eq!(sym.col_nnz, dense_col_counts(&a), "trial {trial} n={n}");
+            assert_eq!(sym.col_nnz.iter().sum::<usize>(), sym.lnnz);
+        }
+    }
+
+    #[test]
+    fn supernodes_on_canonical_shapes() {
+        // tridiagonal: no two adjacent columns share a sub-pattern → all
+        // singleton supernodes
+        let mut coo = Coo::square(6);
+        for i in 0..5 {
+            coo.push_sym(i, i + 1, -1.0);
+        }
+        for i in 0..6 {
+            coo.push(i, i, 2.5);
+        }
+        let sym = analyze(&coo.to_csr());
+        assert_eq!(fundamental_supernodes(&sym), vec![0, 1, 2, 3, 4, 5, 6]);
+
+        // hub-last arrow: only the last two columns fuse
+        let n = 8;
+        let mut coo = Coo::square(n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, n - 1, -1.0);
+        }
+        for i in 0..n {
+            coo.push(i, i, 8.0);
+        }
+        let a = coo.to_csr();
+        let sym = analyze(&a);
+        assert_eq!(fundamental_supernodes(&sym), vec![0, 1, 2, 3, 4, 5, 6, 8]);
+
+        // hub-first arrow: L is completely dense → one supernode
+        let rev: Vec<usize> = (0..n).rev().collect();
+        let symr = analyze(&a.permute_sym(&rev));
+        assert_eq!(fundamental_supernodes(&symr), vec![0, 8]);
+    }
+
+    #[test]
+    fn supernode_width_is_capped() {
+        // dense L on n=40 → split at MAX_SUPERNODE_WIDTH
+        let n = 40;
+        let mut coo = Coo::square(n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, n - 1, -1.0);
+        }
+        for i in 0..n {
+            coo.push(i, i, 64.0);
+        }
+        let a = coo.to_csr();
+        let rev: Vec<usize> = (0..n).rev().collect();
+        let sym = analyze(&a.permute_sym(&rev));
+        let sn = fundamental_supernodes(&sym);
+        assert_eq!(sn, vec![0, MAX_SUPERNODE_WIDTH, n]);
+        for w in sn.windows(2) {
+            assert!(w[1] - w[0] <= MAX_SUPERNODE_WIDTH);
+        }
     }
 }

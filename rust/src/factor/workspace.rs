@@ -1,0 +1,323 @@
+//! Reusable factorization scratch and the serving-path symbolic cache.
+//!
+//! The serving steady state re-factors matrices whose *values* change but
+//! whose *sparsity pattern* does not (time-stepping, Newton iterations,
+//! repeated requests for the same topology). Two pieces make that path
+//! allocation-free end to end:
+//!
+//! * [`FactorWorkspace`] owns every O(n) scratch buffer the numeric kernels
+//!   need (dense accumulator, visit marks, row-pattern stack, supernodal
+//!   scatter map / update column / local-offset buffers). Buffers only ever
+//!   grow; [`FactorWorkspace::grow_events`] counts how often any buffer had
+//!   to be (re)allocated, so tests can assert the steady state performs
+//!   **zero** scratch allocations.
+//! * [`SymbolicCache`] memoizes symbolic analysis keyed by the exact
+//!   sparsity pattern (hash + full `indptr`/`indices` comparison — never
+//!   trust the hash alone). A hit returns shared [`Symbolic`] /
+//!   [`SupernodalSymbolic`] handles and skips analysis entirely;
+//!   [`SymbolicCache::hits`] makes the steady state observable.
+
+use std::sync::Arc;
+
+use crate::factor::etree::NONE;
+use crate::factor::supernodal::{self, SupernodalSymbolic};
+use crate::factor::symbolic::{analyze, fundamental_supernodes, Symbolic};
+use crate::sparse::Csr;
+
+/// Scratch buffers shared by the up-looking and supernodal kernels.
+///
+/// Create once per thread/solver and pass to every factorization; repeated
+/// use with matrices of non-increasing size performs no allocations.
+#[derive(Debug, Default)]
+pub struct FactorWorkspace {
+    /// dense accumulator for the current row (up-looking kernel)
+    pub(crate) x: Vec<f64>,
+    /// row-subtree visit marks (up-looking kernel)
+    pub(crate) mark: Vec<usize>,
+    /// row pattern scratch (up-looking kernel)
+    pub(crate) pattern: Vec<usize>,
+    /// global row → local panel position map (supernodal scatter)
+    pub(crate) map: Vec<usize>,
+    /// rank-k update column accumulator (supernodal)
+    pub(crate) ucol: Vec<f64>,
+    /// per-group local row offsets (supernodal scatter)
+    pub(crate) loc: Vec<usize>,
+    grow_events: u64,
+    factorizations: u64,
+}
+
+impl FactorWorkspace {
+    pub fn new() -> FactorWorkspace {
+        FactorWorkspace::default()
+    }
+
+    /// Make every buffer usable for an n×n factorization and reset the
+    /// per-run state. O(n) fills, allocation only when n exceeds every
+    /// previous acquire (counted in [`grow_events`](Self::grow_events)).
+    pub(crate) fn acquire(&mut self, n: usize) {
+        let mut grew = false;
+        if self.x.len() < n {
+            grew = true;
+            self.x.resize(n, 0.0);
+            self.mark.resize(n, NONE);
+            self.map.resize(n, 0);
+            self.ucol.resize(n, 0.0);
+            self.loc.resize(n, 0);
+        }
+        // clear BEFORE reserving so `reserve(n)` (which guarantees
+        // capacity ≥ len + n) can never leave capacity short of n — a
+        // short reserve would let the kernel reallocate mid-run without
+        // the grow_events counter noticing.
+        self.pattern.clear();
+        if self.pattern.capacity() < n {
+            grew = true;
+            self.pattern.reserve(n);
+        }
+        if grew {
+            self.grow_events += 1;
+        }
+        // per-run invariants: x all-zero, mark all-NONE below n. (map/ucol/
+        // loc are always refilled before use by the supernodal kernel.)
+        for v in self.x[..n].iter_mut() {
+            *v = 0.0;
+        }
+        for m in self.mark[..n].iter_mut() {
+            *m = NONE;
+        }
+        self.factorizations += 1;
+    }
+
+    /// Disjoint borrows of the supernodal scatter buffers
+    /// (map, ucol, loc). Call [`acquire`](Self::acquire) first.
+    pub(crate) fn supernodal_buffers(
+        &mut self,
+    ) -> (&mut [usize], &mut [f64], &mut [usize]) {
+        (&mut self.map, &mut self.ucol, &mut self.loc)
+    }
+
+    /// Disjoint borrows of the up-looking buffers (x, mark, pattern).
+    /// Call [`acquire`](Self::acquire) first.
+    pub(crate) fn uplooking_buffers(
+        &mut self,
+    ) -> (&mut [f64], &mut [usize], &mut Vec<usize>) {
+        (&mut self.x, &mut self.mark, &mut self.pattern)
+    }
+
+    /// How many times any scratch buffer had to be allocated or grown.
+    /// Stays constant across repeated factorizations of same-size (or
+    /// smaller) matrices — the "zero scratch re-allocation" assertion.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Total factorizations served by this workspace.
+    pub fn factorizations(&self) -> u64 {
+        self.factorizations
+    }
+}
+
+/// Shared result of analyzing one sparsity pattern.
+#[derive(Clone)]
+pub struct PatternAnalysis {
+    /// Row/column counts + etree.
+    pub sym: Arc<Symbolic>,
+    /// Supernodal structure — `Some` iff the supernodal kernel is expected
+    /// to beat the up-looking kernel on this pattern (see
+    /// [`supernodal::profitable`]).
+    pub ssym: Option<Arc<SupernodalSymbolic>>,
+}
+
+struct CacheEntry {
+    hash: u64,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    analysis: PatternAnalysis,
+}
+
+/// Pattern-keyed LRU cache of symbolic analyses.
+pub struct SymbolicCache {
+    entries: Vec<CacheEntry>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for SymbolicCache {
+    fn default() -> Self {
+        SymbolicCache::new(8)
+    }
+}
+
+impl SymbolicCache {
+    pub fn new(capacity: usize) -> SymbolicCache {
+        SymbolicCache { entries: Vec::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+    }
+
+    /// Analyze `a`'s pattern, reusing a cached analysis when the pattern is
+    /// bit-identical to a recent one. MRU-ordered; exact pattern equality
+    /// is verified on every hash match.
+    pub fn analyze(&mut self, a: &Csr) -> PatternAnalysis {
+        let hash = pattern_hash(a);
+        if let Some(k) = self.entries.iter().position(|e| {
+            e.hash == hash && e.indptr == a.indptr() && e.indices == a.indices()
+        }) {
+            self.hits += 1;
+            let entry = self.entries.remove(k);
+            let analysis = entry.analysis.clone();
+            self.entries.insert(0, entry);
+            return analysis;
+        }
+        self.misses += 1;
+        let sym = Arc::new(analyze(a));
+        let sn_ptr = fundamental_supernodes(&sym);
+        let ssym = if supernodal::profitable(&sym, &sn_ptr) {
+            Some(Arc::new(SupernodalSymbolic::build(a, &sym, sn_ptr)))
+        } else {
+            None
+        };
+        let analysis = PatternAnalysis { sym, ssym };
+        self.entries.insert(
+            0,
+            CacheEntry {
+                hash,
+                indptr: a.indptr().to_vec(),
+                indices: a.indices().to_vec(),
+                analysis: analysis.clone(),
+            },
+        );
+        self.entries.truncate(self.capacity);
+        analysis
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// FNV-1a over the pattern (shape + indptr + indices). Collisions are
+/// harmless — every hash match is followed by an exact comparison.
+fn pattern_hash(a: &Csr) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |v: u64| {
+        for shift in [0u32, 16, 32, 48] {
+            h ^= (v >> shift) & 0xffff;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(a.nrows() as u64);
+    eat(a.nnz() as u64);
+    for &p in a.indptr() {
+        eat(p as u64);
+    }
+    for &c in a.indices() {
+        eat(c as u64);
+    }
+    h
+}
+
+/// Everything a long-lived solver/worker needs to keep factorization
+/// allocation-free: scratch buffers + the pattern-keyed symbolic cache.
+#[derive(Default)]
+pub struct FactorContext {
+    pub workspace: FactorWorkspace,
+    pub cache: SymbolicCache,
+}
+
+impl FactorContext {
+    pub fn new() -> FactorContext {
+        FactorContext::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::{laplacian_2d, laplacian_3d};
+
+    #[test]
+    fn cache_hits_on_identical_pattern() {
+        let mut cache = SymbolicCache::new(4);
+        let a = laplacian_2d(8, 8);
+        let first = cache.analyze(&a);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+        // identical pattern (the key ignores values) → hit
+        let b = a.clone();
+        let second = cache.analyze(&b);
+        assert_eq!(cache.hits(), 1);
+        assert!(Arc::ptr_eq(&first.sym, &second.sym), "must share the analysis");
+        // different pattern → miss
+        let c = laplacian_2d(8, 9);
+        cache.analyze(&c);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_lru() {
+        let mut cache = SymbolicCache::new(2);
+        let a = laplacian_2d(4, 4);
+        let b = laplacian_2d(5, 4);
+        let c = laplacian_2d(6, 4);
+        cache.analyze(&a);
+        cache.analyze(&b);
+        cache.analyze(&c); // evicts a
+        assert_eq!(cache.len(), 2);
+        cache.analyze(&a); // miss again
+        assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn workspace_grows_once() {
+        let mut ws = FactorWorkspace::new();
+        ws.acquire(100);
+        assert_eq!(ws.grow_events(), 1);
+        ws.acquire(100);
+        ws.acquire(60); // smaller: no growth
+        assert_eq!(ws.grow_events(), 1);
+        assert_eq!(ws.factorizations(), 3);
+        ws.acquire(200);
+        assert_eq!(ws.grow_events(), 2);
+    }
+
+    #[test]
+    fn profitability_split_matches_structure() {
+        // 3D AMD-ordered problems are the supernodal target; tiny or chain
+        // matrices fall back
+        let mut cache = SymbolicCache::default();
+        let tri = {
+            use crate::sparse::Coo;
+            let mut coo = Coo::square(100);
+            for i in 0..99 {
+                coo.push_sym(i, i + 1, -1.0);
+            }
+            for i in 0..100 {
+                coo.push(i, i, 2.5);
+            }
+            coo.to_csr()
+        };
+        assert!(cache.analyze(&tri).ssym.is_none(), "tridiagonal must fall back");
+
+        let g3 = laplacian_3d(8, 8, 8);
+        let amd = crate::order::amd(&g3);
+        let pap = g3.permute_sym(&amd);
+        let analysis = cache.analyze(&pap);
+        assert!(
+            analysis.ssym.is_some(),
+            "3D AMD-ordered laplacian must take the supernodal path"
+        );
+    }
+}

@@ -3,7 +3,8 @@
 use std::time::Instant;
 
 use crate::coordinator::Method;
-use crate::factor::{analyze, cholesky_with, fill_ratio};
+use crate::factor::supernodal;
+use crate::factor::{cholesky_with_ws, fill_ratio, FactorContext};
 use crate::gen::{ProblemClass, TestMatrix};
 use crate::runtime::{PfmRuntime, Provenance};
 
@@ -21,6 +22,8 @@ pub struct Record {
     pub ordering_time: f64,
     /// seconds for numeric Cholesky of PAPᵀ (the paper's "LU time")
     pub factor_time: f64,
+    /// numeric kernel the pattern selected ("up-looking" | "supernodal")
+    pub kernel: &'static str,
     pub provenance: Option<Provenance>,
 }
 
@@ -35,10 +38,14 @@ pub fn evaluate_suite(
     rt: &mut PfmRuntime,
     seed: u64,
 ) -> Vec<Record> {
+    // One context for the whole sweep: scratch buffers are shared across
+    // every (matrix, method) pair and repeated patterns hit the symbolic
+    // cache instead of re-running analysis.
+    let mut ctx = FactorContext::new();
     let mut out = Vec::with_capacity(matrices.len() * methods.len());
     for tm in matrices {
         for &method in methods {
-            match evaluate_one(tm, method, rt, seed) {
+            match evaluate_one_with(tm, method, rt, seed, &mut ctx) {
                 Ok(rec) => out.push(rec),
                 Err(e) => eprintln!(
                     "warn: {} on {} failed: {e} (skipped)",
@@ -51,12 +58,26 @@ pub fn evaluate_suite(
     out
 }
 
-/// Measure one (matrix, method) pair.
+/// Measure one (matrix, method) pair with a throwaway context.
 pub fn evaluate_one(
     tm: &TestMatrix,
     method: Method,
     rt: &mut PfmRuntime,
     seed: u64,
+) -> Result<Record, String> {
+    evaluate_one_with(tm, method, rt, seed, &mut FactorContext::new())
+}
+
+/// Measure one (matrix, method) pair, reusing a long-lived factorization
+/// context (workspace + symbolic cache). The numeric kernel is selected
+/// per pattern: supernodal when the fill structure has wide panels,
+/// up-looking otherwise.
+pub fn evaluate_one_with(
+    tm: &TestMatrix,
+    method: Method,
+    rt: &mut PfmRuntime,
+    seed: u64,
+    ctx: &mut FactorContext,
 ) -> Result<Record, String> {
     let a = &tm.matrix;
     let t0 = Instant::now();
@@ -70,11 +91,22 @@ pub fn evaluate_one(
     let ordering_time = t0.elapsed().as_secs_f64();
 
     let pap = a.permute_sym(&order);
-    let sym = analyze(&pap);
-    let fr = fill_ratio(&pap, &sym);
+    let analysis = ctx.cache.analyze(&pap);
+    let fr = fill_ratio(&pap, &analysis.sym);
 
     let t1 = Instant::now();
-    cholesky_with(&pap, &sym).map_err(|e| e.to_string())?;
+    let kernel = match &analysis.ssym {
+        Some(ssym) => {
+            supernodal::factorize(&pap, ssym.clone(), &mut ctx.workspace)
+                .map_err(|e| e.to_string())?;
+            "supernodal"
+        }
+        None => {
+            cholesky_with_ws(&pap, &analysis.sym, &mut ctx.workspace)
+                .map_err(|e| e.to_string())?;
+            "up-looking"
+        }
+    };
     let factor_time = t1.elapsed().as_secs_f64();
 
     Ok(Record {
@@ -84,9 +116,10 @@ pub fn evaluate_one(
         n: a.nrows(),
         nnz: a.nnz(),
         fill_ratio: fr,
-        lnnz: sym.lnnz,
+        lnnz: analysis.sym.lnnz,
         ordering_time,
         factor_time,
+        kernel,
         provenance,
     })
 }
@@ -108,11 +141,11 @@ pub fn mean_where(
 /// CSV emitter (all records, one row each).
 pub fn to_csv(records: &[Record]) -> String {
     let mut s = String::from(
-        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,provenance\n",
+        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,kernel,provenance\n",
     );
     for r in records {
         s.push_str(&format!(
-            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{}\n",
+            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{},{}\n",
             r.method,
             r.class.label(),
             r.matrix,
@@ -122,6 +155,7 @@ pub fn to_csv(records: &[Record]) -> String {
             r.lnnz,
             r.ordering_time,
             r.factor_time,
+            r.kernel,
             match r.provenance {
                 Some(Provenance::Network) => "network",
                 Some(Provenance::SpectralFallback) => "fallback",

@@ -136,6 +136,7 @@ mod tests {
                 lnnz: 600,
                 ordering_time: 0.0,
                 factor_time: 0.01,
+                kernel: "up-looking",
                 provenance: None,
             },
             Record {
@@ -148,6 +149,7 @@ mod tests {
                 lnnz: 300,
                 ordering_time: 0.001,
                 factor_time: 0.002,
+                kernel: "up-looking",
                 provenance: None,
             },
             Record {
@@ -160,6 +162,7 @@ mod tests {
                 lnnz: 350,
                 ordering_time: 0.0005,
                 factor_time: 0.004,
+                kernel: "up-looking",
                 provenance: None,
             },
         ];

@@ -9,20 +9,49 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+// Offline builds use the in-tree PJRT stub; swap for `use xla;` when the
+// real bindings are present (see runtime::xla_compat docs).
+use crate::runtime::xla_compat as xla;
 use crate::sparse::Csr;
 use crate::util::rng::Pcg64;
 
 /// Error type for runtime operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("no artifact bucket fits matrix of size {n} (max bucket {max})")]
     NoBucket { n: usize, max: usize },
-    #[error("artifact dir {0} has no artifacts for variant {1}")]
     NoArtifacts(PathBuf, String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::NoBucket { n, max } => {
+                write!(f, "no artifact bucket fits matrix of size {n} (max bucket {max})")
+            }
+            RuntimeError::NoArtifacts(dir, variant) => {
+                write!(f, "artifact dir {} has no artifacts for variant {variant}", dir.display())
+            }
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

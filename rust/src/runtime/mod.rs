@@ -4,6 +4,7 @@
 
 pub mod executor;
 pub mod pfm_order;
+pub mod xla_compat;
 
 pub use executor::{parse_artifact_name, BucketExecutable, PfmRuntime, RuntimeError};
 pub use pfm_order::{Learned, Provenance};

@@ -13,14 +13,36 @@ use crate::sparse::coo::Coo;
 use crate::sparse::csr::Csr;
 
 /// Errors from Matrix Market parsing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MmError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad MatrixMarket header: {0}")]
+    Io(std::io::Error),
     Header(String),
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for MmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmError::Io(e) => write!(f, "io error: {e}"),
+            MmError::Header(h) => write!(f, "bad MatrixMarket header: {h}"),
+            MmError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MmError {
+    fn from(e: std::io::Error) -> Self {
+        MmError::Io(e)
+    }
 }
 
 #[derive(Clone, Copy, PartialEq, Debug)]

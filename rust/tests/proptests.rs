@@ -2,7 +2,9 @@
 //! mini-proptest harness (`util::check::forall`). Each property runs over
 //! dozens of deterministic random instances; failures report the seed.
 
-use pfm_reorder::factor::{analyze, cholesky_with, fill_ratio_of_order};
+use pfm_reorder::factor::{
+    analyze, cholesky_with, factor_flops, fill_ratio_of_order, supernodal,
+};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::graph::Graph;
 use pfm_reorder::order::{amd, nested_dissection_with, order_from_scores, rcm, Classical};
@@ -120,6 +122,84 @@ fn prop_solve_residual_small() {
             .sqrt();
         if err > 1e-6 {
             return Err(format!("solve error {err}"));
+        }
+        Ok(())
+    });
+}
+
+/// The supernodal and up-looking kernels must agree entrywise to 1e-12 —
+/// identical structure, near-identical values (same elimination order, the
+/// blocked kernel only re-associates the sums).
+fn assert_kernels_agree(a: &pfm_reorder::sparse::Csr) -> Result<(), String> {
+    let sym = analyze(a);
+    let up = cholesky_with(a, &sym).map_err(|e| e.to_string())?;
+    let sn = supernodal::cholesky(a).map_err(|e| e.to_string())?.to_chol();
+    if up.lnnz() != sn.lnnz() {
+        return Err(format!("lnnz {} vs {}", up.lnnz(), sn.lnnz()));
+    }
+    for i in 0..a.nrows() {
+        let (uc, uv) = up.row(i);
+        let (sc, sv) = sn.row(i);
+        if uc != sc {
+            return Err(format!("row {i} pattern mismatch"));
+        }
+        for (k, (&x, &y)) in uv.iter().zip(sv).enumerate() {
+            if (x - y).abs() > 1e-12 * 1.0_f64.max(x.abs()) {
+                return Err(format!("row {i} col {} value {x} vs {y}", uc[k]));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_supernodal_matches_uplooking_on_random_spd() {
+    forall(30, |rng| {
+        let a = random_spd(rng);
+        assert_kernels_agree(&a)
+    });
+}
+
+#[test]
+fn prop_supernodal_matches_uplooking_on_problem_classes() {
+    forall(12, |rng| {
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let n = 60 + rng.next_below(140);
+        let a = class.generate(n, rng.next_u64());
+        // exercise both natural and AMD orderings of every class
+        assert_kernels_agree(&a)?;
+        assert_kernels_agree(&a.permute_sym(&amd(&a)))
+    });
+}
+
+#[test]
+fn prop_factor_flops_ordering_monotone_on_arrow() {
+    // the exact flop count must rank arrow orderings correctly: hub-last
+    // (zero fill) < any mixed placement < hub-first (dense)
+    forall(20, |rng| {
+        let n = 10 + rng.next_below(30);
+        let mut coo = Coo::square(n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, n - 1, -1.0);
+        }
+        for i in 0..n {
+            coo.push(i, i, n as f64);
+        }
+        let a = coo.to_csr();
+        let natural = factor_flops(&analyze(&a));
+        let rev: Vec<usize> = (0..n).rev().collect();
+        let reversed = factor_flops(&analyze(&a.permute_sym(&rev)));
+        // random placement of the hub somewhere in the middle
+        let mid = rng.permutation(n);
+        let middle = factor_flops(&analyze(&a.permute_sym(&mid)));
+        let hub_pos = mid.iter().position(|&o| o == n - 1).unwrap();
+        if natural >= reversed {
+            return Err(format!("natural {natural} !< reversed {reversed}"));
+        }
+        if middle < natural || middle > reversed {
+            return Err(format!(
+                "middle placement (hub at {hub_pos}) flops {middle} outside [{natural}, {reversed}]"
+            ));
         }
         Ok(())
     });
