@@ -3,6 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::factor::FactorKind;
 use crate::order::Classical;
 use crate::runtime::{Learned, Provenance};
 use crate::sparse::Csr;
@@ -22,6 +23,17 @@ impl Method {
         }
     }
 
+    /// Parse a method from its table label (case-insensitive, plus the
+    /// aliases the CLI documents). The label strings themselves live in
+    /// `Classical::label` / `Learned::label` — this is the single other
+    /// place that knows how to go back.
+    pub fn from_label(s: &str) -> Option<Method> {
+        if let Some(c) = Classical::from_label(s) {
+            return Some(Method::Classical(c));
+        }
+        Learned::from_label(s).map(Method::Learned)
+    }
+
     /// All methods of the paper's Table 2 (8 rows).
     pub fn table2() -> Vec<Method> {
         let mut v = vec![
@@ -32,6 +44,19 @@ impl Method {
         ];
         v.extend(Learned::TABLE2.iter().map(|&l| Method::Learned(l)));
         v
+    }
+
+    /// Methods evaluated on the unsymmetric (LU) suite: the pattern-based
+    /// classical orderings. Fiedler is excluded — its Lanczos iteration
+    /// assumes symmetric edge weights — and the learned methods are
+    /// trained on SPD inputs only.
+    pub fn unsymmetric() -> Vec<Method> {
+        vec![
+            Method::Classical(Classical::Natural),
+            Method::Classical(Classical::Rcm),
+            Method::Classical(Classical::Amd),
+            Method::Classical(Classical::Metis),
+        ]
     }
 }
 
@@ -44,6 +69,12 @@ pub struct ReorderRequest {
     /// also evaluate the fill ratio of the computed ordering (served from
     /// the worker's pattern-keyed symbolic cache in the steady state)
     pub eval_fill: bool,
+    /// which factorization the fill evaluation must run: `None` lets the
+    /// evaluating worker detect it from matrix symmetry (so plain submits
+    /// pay nothing), `Some(..)` pins it. Either way fill is measured on
+    /// the factorization the matrix actually calls for, not on a
+    /// Cholesky proxy.
+    pub factor_kind: Option<FactorKind>,
     pub submitted: Instant,
     pub respond: mpsc::Sender<ReorderResponse>,
 }
@@ -65,8 +96,12 @@ pub struct ReorderResult {
     pub latency: f64,
     /// network batch size this request was served in (learned methods)
     pub batch_size: usize,
-    /// fill ratio of the ordering (only when requested via `eval_fill`)
+    /// fill ratio of the ordering (only when requested via `eval_fill`);
+    /// Cholesky: fill-ins / nnz(A); LU: nnz(L+U) / nnz(A)
     pub fill_ratio: Option<f64>,
+    /// factorization kind the fill evaluation ran ("cholesky" | "lu");
+    /// `None` when no fill evaluation was requested
+    pub factor_kind: Option<&'static str>,
 }
 
 #[cfg(test)]
@@ -81,5 +116,19 @@ mod tests {
         for expect in ["Natural", "AMD", "Metis", "Fiedler", "S_e", "GPCE", "UDNO", "PFM"] {
             assert!(labels.contains(&expect), "{expect} missing from {labels:?}");
         }
+    }
+
+    #[test]
+    fn labels_roundtrip_through_from_label() {
+        for m in Method::table2().into_iter().chain(Method::unsymmetric()) {
+            assert_eq!(Method::from_label(m.label()), Some(m), "{}", m.label());
+            assert_eq!(
+                Method::from_label(&m.label().to_ascii_lowercase()),
+                Some(m),
+                "{} (lowercase)",
+                m.label()
+            );
+        }
+        assert_eq!(Method::from_label("nope"), None);
     }
 }

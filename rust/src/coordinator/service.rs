@@ -28,8 +28,9 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+use crate::factor::lu::{self, LuOptions};
 use crate::factor::symbolic::fill_ratio;
-use crate::factor::FactorContext;
+use crate::factor::{FactorContext, FactorKind};
 use crate::runtime::{PfmRuntime, Provenance};
 use crate::sparse::Csr;
 
@@ -141,10 +142,17 @@ impl ReorderService {
                             // optional fill evaluation is bookkeeping and
                             // must not skew method-vs-method latencies
                             let latency = req.submitted.elapsed().as_secs_f64();
-                            let fill = if req.eval_fill {
-                                Some(eval_fill(&req.matrix, &order, &mut fctx, &metrics))
+                            let (fill, fill_kind) = if req.eval_fill {
+                                let (f, k) = eval_fill(
+                                    &req.matrix,
+                                    &order,
+                                    req.factor_kind,
+                                    &mut fctx,
+                                    &metrics,
+                                );
+                                (Some(f), Some(k))
                             } else {
-                                None
+                                (None, None)
                             };
                             metrics.record(method.label(), latency, 0, false);
                             let _ = req.respond.send(ReorderResponse {
@@ -156,6 +164,7 @@ impl ReorderService {
                                     latency,
                                     batch_size: 0,
                                     fill_ratio: fill,
+                                    factor_kind: fill_kind,
                                 }),
                             });
                         }
@@ -192,13 +201,30 @@ impl ReorderService {
     }
 
     /// Like [`submit`](Self::submit), optionally asking the worker to also
-    /// evaluate the ordering's fill ratio (cached symbolic analysis).
+    /// evaluate the ordering's fill ratio (cached symbolic analysis). The
+    /// factorization kind for the fill evaluation is detected from matrix
+    /// symmetry by the evaluating worker — the submit path pays nothing;
+    /// use [`submit_with_kind`](Self::submit_with_kind) to pin it.
     pub fn submit_with_fill(
         &self,
         matrix: Csr,
         method: Method,
         seed: u64,
         eval_fill: bool,
+    ) -> mpsc::Receiver<ReorderResponse> {
+        self.submit_with_kind(matrix, method, seed, eval_fill, None)
+    }
+
+    /// Fully explicit submission: the caller chooses which factorization
+    /// the fill evaluation runs (callers with out-of-band knowledge skip
+    /// the worker-side symmetry check).
+    pub fn submit_with_kind(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+        factor_kind: Option<FactorKind>,
     ) -> mpsc::Receiver<ReorderResponse> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -208,6 +234,7 @@ impl ReorderService {
             method,
             seed,
             eval_fill,
+            factor_kind,
             submitted: Instant::now(),
             respond: rtx,
         };
@@ -260,13 +287,38 @@ impl ReorderService {
 }
 
 /// Evaluate the fill ratio of `order` on `a` through a worker-local
-/// symbolic cache; records the hit/miss in the service metrics.
-fn eval_fill(a: &Csr, order: &[usize], fctx: &mut FactorContext, metrics: &Metrics) -> f64 {
+/// symbolic cache, on the factorization the request's kind names —
+/// `None` resolves from matrix symmetry here, on the worker: symbolic
+/// Cholesky fill for symmetric matrices, numeric Gilbert–Peierls LU fill
+/// (pivoting included) for unsymmetric ones, with the structural A+Aᵀ
+/// bound as the fallback if the numeric phase hits a singular column.
+/// Records the cache hit/miss in the service metrics. Returns the fill
+/// and the label of the kind that ran.
+fn eval_fill(
+    a: &Csr,
+    order: &[usize],
+    kind: Option<FactorKind>,
+    fctx: &mut FactorContext,
+    metrics: &Metrics,
+) -> (f64, &'static str) {
+    let kind = kind.unwrap_or_else(|| FactorKind::for_matrix(a));
     let pap = a.permute_sym(order);
     let hits_before = fctx.cache.hits();
-    let analysis = fctx.cache.analyze(&pap);
+    let fill = match kind {
+        FactorKind::Cholesky => {
+            let analysis = fctx.cache.analyze(&pap);
+            fill_ratio(&pap, &analysis.sym)
+        }
+        FactorKind::Lu => {
+            let lsym = fctx.cache.analyze_lu(&pap);
+            match lu::factorize(&pap, &lsym, LuOptions::default(), &mut fctx.workspace) {
+                Ok(f) => lu::lu_fill_ratio(&pap, &f),
+                Err(_) => lsym.lu_nnz_bound as f64 / pap.nnz() as f64,
+            }
+        }
+    };
     metrics.record_symbolic(fctx.cache.hits() > hits_before);
-    fill_ratio(&pap, &analysis.sym)
+    (fill, kind.label())
 }
 
 /// Network executor: drains the queue, groups by bucket, executes.
@@ -338,10 +390,17 @@ fn network_loop(
                     Ok((order, prov)) => {
                         // latency before fill evaluation (see worker note)
                         let latency = req.submitted.elapsed().as_secs_f64();
-                        let fill = if req.eval_fill {
-                            Some(eval_fill(&req.matrix, &order, &mut fctx, &metrics))
+                        let (fill, fill_kind) = if req.eval_fill {
+                            let (f, k) = eval_fill(
+                                &req.matrix,
+                                &order,
+                                req.factor_kind,
+                                &mut fctx,
+                                &metrics,
+                            );
+                            (Some(f), Some(k))
                         } else {
-                            None
+                            (None, None)
                         };
                         metrics.record(
                             l.label(),
@@ -358,6 +417,7 @@ fn network_loop(
                                 latency,
                                 batch_size,
                                 fill_ratio: fill,
+                                factor_kind: fill_kind,
                             }),
                         });
                     }
@@ -446,6 +506,29 @@ mod tests {
         // both requests may land on different workers (separate caches), so
         // only assert at least one analysis happened and none were lost
         assert!(service.metrics.symbolic_misses() >= 1);
+    }
+
+    #[test]
+    fn fill_evaluation_uses_lu_on_unsymmetric_matrices() {
+        let service = svc();
+        let mut rng = crate::util::rng::Pcg64::new(17);
+        let a = crate::gen::grid::convection_diffusion_2d(8, 8, 2.0, &mut rng);
+        let r = service
+            .reorder_blocking_with_fill(a.clone(), Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        assert_eq!(r.factor_kind, Some("lu"), "unsymmetric matrix must evaluate LU fill");
+        assert!(r.fill_ratio.expect("fill requested") >= 1.0, "nnz(L+U)/nnz(A) ≥ 1");
+        // symmetric request on the same service still reports cholesky
+        let s = laplacian_2d(8, 8);
+        let r2 = service
+            .reorder_blocking_with_fill(s, Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        assert_eq!(r2.factor_kind, Some("cholesky"));
+        // plain submits never evaluate a kind
+        let r3 = service
+            .reorder_blocking(laplacian_2d(6, 6), Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        assert_eq!(r3.factor_kind, None);
     }
 
     #[test]

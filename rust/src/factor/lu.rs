@@ -1,0 +1,736 @@
+//! Left-looking Gilbert–Peierls sparse LU with threshold partial pivoting —
+//! the unsymmetric side of the factorization engine.
+//!
+//! The paper's golden criterion is the fill-in of the **L+U** factors; for
+//! SPD inputs Cholesky is a faithful proxy, but general (unsymmetric-value)
+//! matrices — convection–diffusion, circuit-style systems — need a genuine
+//! LU. This module provides it with the same layering as the Cholesky side:
+//!
+//! * **Symbolic** ([`analyze_lu`] → [`LuSymbolic`]): Cholesky analysis of
+//!   the symmetrized pattern A+Aᵀ through the existing etree / exact
+//!   column-count machinery. `2·lnnz(chol(A+Aᵀ)) − n` is a structural
+//!   upper bound on nnz(L+U) that is *exact* when no pivoting fires (the
+//!   common case on the diagonally dominant workloads the generators
+//!   produce); the numeric phase uses it to pre-size the factor arrays.
+//! * **Numeric** ([`factorize`] / [`refactor_into`]): per column, a DFS
+//!   over the columns of the partially-built L discovers the exact row
+//!   pattern (Gilbert–Peierls reachability), a sparse triangular solve in
+//!   reverse-finish (topological) order computes the column, and a
+//!   threshold test picks the pivot: the diagonal is kept whenever
+//!   `|x[j]| ≥ tau·max|x|` over the unpivoted candidates, otherwise the
+//!   largest-magnitude row wins. `tau = 1.0` is classic partial pivoting,
+//!   `tau = 0` keeps any nonzero diagonal; the default 0.1 trades a
+//!   bounded growth factor for sparsity (the SuperLU policy).
+//!
+//! All O(n) scratch lives in [`FactorWorkspace`] (dense accumulator, DFS
+//! marks + stacks, the pivot-position map), so steady-state
+//! re-factorization of an unchanged pattern performs zero scratch
+//! allocations — the same `grow_events` contract the Cholesky kernels
+//! honour. The factor's own arrays — L, U, `row_perm`, *and* the CSC
+//! view of A the column sweep reads — are rebuilt in place by
+//! [`refactor_into`], so the whole refactorization path touches the
+//! allocator not at all.
+//!
+//! Algorithm validated against a numpy/scipy dense-LU oracle via a Python
+//! mirror of the exact index logic (diagonally dominant ⇒ identity row
+//! permutation; pivoting cases reconstruct P·A = L·U; SPD inputs reproduce
+//! 2·nnz(chol) − n) before porting.
+
+use crate::factor::etree::NONE;
+use crate::factor::numeric::FactorError;
+use crate::factor::symbolic::{analyze, Symbolic};
+use crate::factor::workspace::FactorWorkspace;
+use crate::sparse::Csr;
+
+/// Pivoting policy for the numeric phase.
+#[derive(Clone, Copy, Debug)]
+pub struct LuOptions {
+    /// Threshold partial-pivoting tolerance `tau ∈ [0, 1]`: the diagonal
+    /// is accepted whenever it is nonzero and `|a_jj| ≥ tau · max_i
+    /// |a_ij|` over the unpivoted candidates of column j (so `tau = 0`
+    /// keeps any nonzero diagonal, never a zero one).
+    pub pivot_tolerance: f64,
+}
+
+impl Default for LuOptions {
+    fn default() -> Self {
+        LuOptions { pivot_tolerance: 0.1 }
+    }
+}
+
+/// Symbolic analysis for LU: the Cholesky analysis of the A+Aᵀ pattern and
+/// the structural bound it implies.
+#[derive(Clone, Debug)]
+pub struct LuSymbolic {
+    pub n: usize,
+    /// etree + exact row/column counts of the symmetrized pattern.
+    pub sym: Symbolic,
+    /// Upper bound on nnz(L+U) (diagonal counted once) absent pivoting:
+    /// `2·lnnz − n` of the symmetrized pattern. Exact when every pivot
+    /// stays on the diagonal and the pattern of A is symmetric.
+    pub lu_nnz_bound: usize,
+}
+
+/// Analyze the A+Aᵀ pattern of `a` for LU factorization.
+pub fn analyze_lu(a: &Csr) -> LuSymbolic {
+    // `symmetrize` produces the union pattern (values are irrelevant here;
+    // cancellation keeps entries structurally — see Coo::to_csr).
+    let aat = a.symmetrize();
+    let sym = analyze(&aat);
+    let lu_nnz_bound = 2 * sym.lnnz - a.nrows();
+    LuSymbolic { n: a.nrows(), sym, lu_nnz_bound }
+}
+
+/// Sparse LU factors of a permuted system: `P_r · A = L·U` with unit-lower
+/// L and the row permutation chosen by threshold partial pivoting.
+///
+/// Storage is column-compressed on both factors: `l_*` holds the strictly
+/// sub-diagonal entries of L (the unit diagonal is implicit, row indices in
+/// pivoted coordinates), `u_*` the strictly super-diagonal entries of U
+/// (row = pivot step), and `udiag` the pivots.
+#[derive(Clone, Debug)]
+pub struct LuFactor {
+    n: usize,
+    l_indptr: Vec<usize>,
+    l_rows: Vec<usize>,
+    l_vals: Vec<f64>,
+    u_indptr: Vec<usize>,
+    u_rows: Vec<usize>,
+    u_vals: Vec<f64>,
+    udiag: Vec<f64>,
+    /// `row_perm[k]` = original row index pivoted at step k.
+    row_perm: Vec<usize>,
+    // CSC view of A (Aᵀ in CSR terms), rebuilt in place each
+    // (re)factorization so the steady state never re-allocates it
+    at_indptr: Vec<usize>,
+    at_indices: Vec<usize>,
+    at_data: Vec<f64>,
+}
+
+impl LuFactor {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// nnz(L+U) with the diagonal counted once (unit diagonal of L merged
+    /// with U's pivots) — the paper's golden criterion for general
+    /// matrices. Equals `2·lnnz(chol) − n` on SPD inputs when no pivoting
+    /// fires.
+    pub fn lu_nnz(&self) -> usize {
+        self.l_rows.len() + self.u_rows.len() + self.n
+    }
+
+    /// Row permutation chosen by pivoting: `row_perm()[k]` is the original
+    /// row eliminated at step k. Identity iff no pivoting fired.
+    pub fn row_perm(&self) -> &[usize] {
+        &self.row_perm
+    }
+
+    /// True iff threshold pivoting never moved a row off the diagonal.
+    pub fn no_pivoting(&self) -> bool {
+        self.row_perm.iter().enumerate().all(|(k, &r)| k == r)
+    }
+
+    /// Entrywise ℓ₁ norm of L+U including L's implicit unit diagonal —
+    /// the LU analogue of the paper's ‖L‖₁ surrogate.
+    pub fn l1_norm(&self) -> f64 {
+        self.l_vals.iter().map(|v| v.abs()).sum::<f64>()
+            + self.u_vals.iter().map(|v| v.abs()).sum::<f64>()
+            + self.udiag.iter().map(|v| v.abs()).sum::<f64>()
+            + self.n as f64
+    }
+
+    /// Column j of L below the diagonal: (pivoted row indices, values).
+    pub fn l_col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.l_indptr[j], self.l_indptr[j + 1]);
+        (&self.l_rows[s..e], &self.l_vals[s..e])
+    }
+
+    /// Column j of U above the diagonal: (pivot-step rows, values); the
+    /// diagonal itself is `udiag()[j]`.
+    pub fn u_col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.u_indptr[j], self.u_indptr[j + 1]);
+        (&self.u_rows[s..e], &self.u_vals[s..e])
+    }
+
+    pub fn udiag(&self) -> &[f64] {
+        &self.udiag
+    }
+
+    /// Solve A·x = b through the factors (applies the pivoting row
+    /// permutation internally).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        // y = L \ (P_r · b)
+        let mut y: Vec<f64> = self.row_perm.iter().map(|&r| b[r]).collect();
+        for j in 0..self.n {
+            let yj = y[j];
+            if yj != 0.0 {
+                let (rows, vals) = self.l_col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    y[i] -= v * yj;
+                }
+            }
+        }
+        // x = U \ y
+        for j in (0..self.n).rev() {
+            y[j] /= self.udiag[j];
+            let yj = y[j];
+            if yj != 0.0 {
+                let (rows, vals) = self.u_col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    y[i] -= v * yj;
+                }
+            }
+        }
+        y
+    }
+}
+
+/// nnz(L+U) normalized by nnz(A) — the LU fill ratio the unsymmetric
+/// harness tables report.
+pub fn lu_fill_ratio(a: &Csr, f: &LuFactor) -> f64 {
+    f.lu_nnz() as f64 / a.nnz() as f64
+}
+
+/// Convenience: LU fill ratio of A under ordering `order` (numeric
+/// factorization, pivoting included). The LU analogue of
+/// `symbolic::fill_ratio_of_order`.
+pub fn lu_fill_ratio_of_order(a: &Csr, order: &[usize]) -> Result<f64, FactorError> {
+    let pap = a.permute_sym(order);
+    let f = lu(&pap)?;
+    Ok(lu_fill_ratio(&pap, &f))
+}
+
+/// One-shot LU with internal symbolic analysis and a throwaway workspace
+/// (tests / examples; serving paths hold a [`FactorWorkspace`] and a cached
+/// [`LuSymbolic`] and call [`factorize`]).
+pub fn lu(a: &Csr) -> Result<LuFactor, FactorError> {
+    let lsym = analyze_lu(a);
+    factorize(a, &lsym, LuOptions::default(), &mut FactorWorkspace::new())
+}
+
+/// Numeric LU with a precomputed symbolic bound and caller-owned scratch.
+pub fn factorize(
+    a: &Csr,
+    lsym: &LuSymbolic,
+    opts: LuOptions,
+    ws: &mut FactorWorkspace,
+) -> Result<LuFactor, FactorError> {
+    let n = a.nrows();
+    // the bound covers strict-L and strict-U *combined*; each side needs
+    // half of it (exactly half on pattern-symmetric inputs without
+    // pivoting, where the bound is tight)
+    let per_side = (lsym.lu_nnz_bound.saturating_sub(n) + 1) / 2;
+    let mut f = LuFactor {
+        n,
+        l_indptr: Vec::new(),
+        l_rows: Vec::with_capacity(per_side),
+        l_vals: Vec::with_capacity(per_side),
+        u_indptr: Vec::new(),
+        u_rows: Vec::with_capacity(per_side),
+        u_vals: Vec::with_capacity(per_side),
+        udiag: Vec::new(),
+        row_perm: Vec::new(),
+        at_indptr: Vec::new(),
+        at_indices: Vec::new(),
+        at_data: Vec::new(),
+    };
+    lu_core(a, opts, &mut f, ws)?;
+    Ok(f)
+}
+
+/// Numeric re-factorization in place: `f` must come from a previous
+/// factorization of a matrix with the same sparsity pattern as `a`. The
+/// factor's buffers are reused; new values may change the pivot sequence
+/// (and therefore the fill), but with an unchanged pattern and comparable
+/// magnitudes the arrays stay within capacity and the refactorization is
+/// allocation-free end to end.
+pub fn refactor_into(
+    a: &Csr,
+    opts: LuOptions,
+    f: &mut LuFactor,
+    ws: &mut FactorWorkspace,
+) -> Result<(), FactorError> {
+    assert_eq!(f.n, a.nrows(), "lu::refactor_into: factor/matrix size mismatch");
+    lu_core(a, opts, f, ws)
+}
+
+/// Shared numeric core writing into caller-owned factor storage.
+///
+/// Works column-by-column on the CSC view of `a` (rows of Aᵀ). For each
+/// column j:
+/// 1. DFS from the rows of A(:,j) through the columns of the
+///    partially-built L (edges i → rows(L(:, pinv\[i\])) for already
+///    pivoted i), marking visited rows and emitting *finish order* into
+///    `pattern` — reverse finish order is a topological order of the
+///    update dependencies.
+/// 2. Sparse triangular solve x = L⁻¹·A(:,j) processing `pattern` in
+///    reverse.
+/// 3. Threshold pivot selection over the unpivoted rows of the pattern.
+/// 4. Scatter: pivoted rows → U(:,j), unpivoted rows → L(:,j)/pivot.
+///
+/// L's row indices are kept in original coordinates during factorization
+/// (the DFS needs them) and remapped through `pinv` at the end.
+fn lu_core(
+    a: &Csr,
+    opts: LuOptions,
+    f: &mut LuFactor,
+    ws: &mut FactorWorkspace,
+) -> Result<(), FactorError> {
+    if a.nrows() != a.ncols() {
+        return Err(FactorError::NotSquare { nrows: a.nrows(), ncols: a.ncols() });
+    }
+    let n = a.nrows();
+    let tau = opts.pivot_tolerance.clamp(0.0, 1.0);
+    ws.acquire(n);
+    let (x, mark, pattern, pinv, stack, pstack) = ws.lu_buffers();
+    for p in pinv[..n].iter_mut() {
+        *p = NONE;
+    }
+
+    let LuFactor {
+        l_indptr,
+        l_rows,
+        l_vals,
+        u_indptr,
+        u_rows,
+        u_vals,
+        udiag,
+        row_perm,
+        at_indptr,
+        at_indices,
+        at_data,
+        ..
+    } = f;
+    // CSC view: row j of Aᵀ is column j of A. Rebuilt into the factor's
+    // own buffers — refactorization reuses their capacity.
+    a.transpose_into(at_indptr, at_indices, at_data);
+    l_indptr.clear();
+    l_indptr.push(0);
+    l_rows.clear();
+    l_vals.clear();
+    u_indptr.clear();
+    u_indptr.push(0);
+    u_rows.clear();
+    u_vals.clear();
+    udiag.clear();
+    udiag.resize(n, 0.0);
+    row_perm.clear();
+    row_perm.resize(n, NONE);
+
+    for j in 0..n {
+        // column j of A
+        let acols = &at_indices[at_indptr[j]..at_indptr[j + 1]];
+        let avals = &at_data[at_indptr[j]..at_indptr[j + 1]];
+        // ----- symbolic: reach of A(:,j) through the columns of L -----
+        pattern.clear();
+        for &b in acols {
+            if mark[b] == j {
+                continue;
+            }
+            mark[b] = j;
+            let mut depth = 0usize;
+            stack[0] = b;
+            pstack[0] = if pinv[b] != NONE { l_indptr[pinv[b]] } else { 0 };
+            loop {
+                let i = stack[depth];
+                let mut descended = false;
+                if pinv[i] != NONE {
+                    let col = pinv[i];
+                    let end = l_indptr[col + 1];
+                    let mut p = pstack[depth];
+                    while p < end {
+                        let r = l_rows[p];
+                        if mark[r] != j {
+                            mark[r] = j;
+                            pstack[depth] = p + 1;
+                            depth += 1;
+                            stack[depth] = r;
+                            pstack[depth] =
+                                if pinv[r] != NONE { l_indptr[pinv[r]] } else { 0 };
+                            descended = true;
+                            break;
+                        }
+                        p += 1;
+                    }
+                    if !descended {
+                        pstack[depth] = end;
+                    }
+                }
+                if descended {
+                    continue;
+                }
+                pattern.push(i); // finished
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+        }
+
+        // ----- numeric: x = L⁻¹·A(:,j) in reverse finish order -----
+        for (&r, &v) in acols.iter().zip(avals) {
+            x[r] = v;
+        }
+        for t in (0..pattern.len()).rev() {
+            let i = pattern[t];
+            let k = pinv[i];
+            if k == NONE {
+                continue;
+            }
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for p in l_indptr[k]..l_indptr[k + 1] {
+                x[l_rows[p]] -= l_vals[p] * xi;
+            }
+        }
+
+        // ----- threshold partial pivoting -----
+        let mut pivot_row = NONE;
+        let mut best = 0.0f64;
+        let mut diag_abs = -1.0f64; // −1 ⇒ diagonal not an eligible candidate
+        for &i in pattern.iter() {
+            if pinv[i] != NONE {
+                continue;
+            }
+            let m = x[i].abs();
+            if m > best {
+                best = m;
+                pivot_row = i;
+            }
+            if i == j {
+                diag_abs = m;
+            }
+        }
+        if pivot_row == NONE || best == 0.0 {
+            return Err(FactorError::Singular { col: j });
+        }
+        // the diagonal must be genuinely nonzero to win: with tau = 0 an
+        // explicit zero diagonal would otherwise pass `0 ≥ 0·best` and
+        // poison the factor with infinities
+        if diag_abs > 0.0 && diag_abs >= tau * best {
+            pivot_row = j;
+        }
+        let piv = x[pivot_row];
+        pinv[pivot_row] = j;
+        row_perm[j] = pivot_row;
+        udiag[j] = piv;
+
+        // ----- scatter into U (pivoted rows) and L (the rest) -----
+        for &i in pattern.iter() {
+            if i != pivot_row {
+                let k = pinv[i];
+                if k != NONE {
+                    u_rows.push(k);
+                    u_vals.push(x[i]);
+                } else {
+                    l_rows.push(i); // original index; remapped below
+                    l_vals.push(x[i] / piv);
+                }
+            }
+            x[i] = 0.0;
+        }
+        l_indptr.push(l_rows.len());
+        u_indptr.push(u_rows.len());
+    }
+
+    // remap L's rows into pivoted coordinates (strictly lower triangular)
+    for r in l_rows.iter_mut() {
+        *r = pinv[*r];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::cholesky;
+    use crate::gen::grid::laplacian_2d;
+    use crate::sparse::{Coo, Dense};
+    use crate::util::check::{assert_vec_close, check_permutation};
+    use crate::util::rng::Pcg64;
+
+    /// Random pattern-symmetric, value-unsymmetric, diagonally dominant.
+    fn random_unsym(n: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut coo = Coo::square(n);
+        let mut rowsum = vec![0.0f64; n];
+        for _ in 0..(3 * n) {
+            let i = rng.next_below(n);
+            let j = rng.next_below(n);
+            if i == j {
+                continue;
+            }
+            let (a, b) = (rng.next_gaussian(), rng.next_gaussian());
+            coo.push(i, j, a);
+            coo.push(j, i, b);
+            rowsum[i] += a.abs();
+            rowsum[j] += b.abs();
+        }
+        for (i, s) in rowsum.iter().enumerate() {
+            coo.push(i, i, s + 1.0);
+        }
+        coo.to_csr()
+    }
+
+    fn check_reconstruction(a: &Csr, tau: f64, tol: f64) -> LuFactor {
+        let lsym = analyze_lu(a);
+        let f = factorize(a, &lsym, LuOptions { pivot_tolerance: tau }, &mut FactorWorkspace::new())
+            .expect("lu");
+        check_permutation(f.row_perm()).expect("row_perm");
+        let n = a.nrows();
+        // densify L, U and check L·U == P·A
+        let mut l = vec![vec![0.0; n]; n];
+        let mut u = vec![vec![0.0; n]; n];
+        for j in 0..n {
+            l[j][j] = 1.0;
+            u[j][j] = f.udiag()[j];
+            let (rows, vals) = f.l_col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                assert!(i > j, "L entry ({i},{j}) not strictly lower");
+                l[i][j] = v;
+            }
+            let (rows, vals) = f.u_col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                assert!(i < j, "U entry ({i},{j}) not strictly upper");
+                u[i][j] = v;
+            }
+        }
+        let scale = a.data().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for i in 0..n {
+            for jj in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i][k] * u[k][jj];
+                }
+                let pa = a.get(f.row_perm()[i], jj);
+                assert!(
+                    (s - pa).abs() <= tol * scale,
+                    "LU mismatch at ({i},{jj}): {s} vs {pa}"
+                );
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn reconstructs_unsymmetric_random() {
+        for seed in 0..8 {
+            check_reconstruction(&random_unsym(25, seed), 0.1, 1e-10);
+        }
+    }
+
+    #[test]
+    fn dominant_matrices_never_pivot() {
+        for seed in 0..6 {
+            let a = random_unsym(30, 100 + seed);
+            let f = check_reconstruction(&a, 0.1, 1e-10);
+            assert!(f.no_pivoting(), "pivoting fired on a dominant matrix");
+        }
+    }
+
+    #[test]
+    fn pivoting_fires_and_reconstructs() {
+        // a matrix that demands pivoting: tiny diagonal under a large
+        // off-diagonal in the same column
+        let mut coo = Coo::square(3);
+        coo.push(0, 0, 1e-8);
+        coo.push(1, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 1, 1e-8);
+        coo.push(2, 2, 1.0);
+        coo.push(0, 2, 0.5);
+        coo.push(2, 0, 0.5);
+        let a = coo.to_csr();
+        let f = check_reconstruction(&a, 1.0, 1e-12);
+        assert!(!f.no_pivoting(), "partial pivoting must swap rows here");
+    }
+
+    #[test]
+    fn spd_lu_nnz_matches_cholesky_fill() {
+        // without pivoting, nnz(L+U) == 2·lnnz(chol) − n on SPD inputs
+        let a = laplacian_2d(7, 6);
+        let f = lu(&a).unwrap();
+        assert!(f.no_pivoting());
+        let c = cholesky(&a).unwrap();
+        assert_eq!(f.lu_nnz(), 2 * c.lnnz() - a.nrows());
+        // and the symbolic bound is tight
+        let lsym = analyze_lu(&a);
+        assert_eq!(f.lu_nnz(), lsym.lu_nnz_bound);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = random_unsym(40, 9);
+        let f = lu(&a).unwrap();
+        let mut rng = Pcg64::new(10);
+        let xt: Vec<f64> = (0..40).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = f.solve(&b);
+        assert_vec_close(&x, &xt, 1e-8);
+    }
+
+    #[test]
+    fn matches_dense_lu_oracle() {
+        let a = random_unsym(20, 42);
+        let f = lu(&a).unwrap();
+        assert!(f.no_pivoting());
+        let (dl, du) = Dense::from_rows(&a.to_dense()).lu_nopivot().unwrap();
+        for j in 0..20 {
+            let (rows, vals) = f.l_col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                assert!((v - dl.get(i, j)).abs() < 1e-9, "L[{i}][{j}] {v}");
+            }
+            assert!((f.udiag()[j] - du.get(j, j)).abs() < 1e-9, "U diag {j}");
+            let (rows, vals) = f.u_col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                assert!((v - du.get(i, j)).abs() < 1e-9, "U[{i}][{j}] {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn refactor_reuses_buffers_without_scratch_growth() {
+        let a = random_unsym(35, 3);
+        let lsym = analyze_lu(&a);
+        let mut ws = FactorWorkspace::new();
+        let mut f = factorize(&a, &lsym, LuOptions::default(), &mut ws).unwrap();
+        let scaled = Csr::from_parts(
+            a.nrows(),
+            a.ncols(),
+            a.indptr().to_vec(),
+            a.indices().to_vec(),
+            a.data().iter().map(|v| v * 2.0).collect(),
+        );
+        let grows = ws.grow_events();
+        refactor_into(&scaled, LuOptions::default(), &mut f, &mut ws).unwrap();
+        assert_eq!(ws.grow_events(), grows, "LU refactor must not grow scratch");
+        let fresh = lu(&scaled).unwrap();
+        assert_eq!(f.lu_nnz(), fresh.lu_nnz());
+        let mut rng = Pcg64::new(4);
+        let xt: Vec<f64> = (0..35).map(|_| rng.next_gaussian()).collect();
+        let b = scaled.matvec(&xt);
+        assert_vec_close(&f.solve(&b), &xt, 1e-8);
+    }
+
+    /// Random pattern-symmetric matrix with a *weak* diagonal, so classic
+    /// partial pivoting (tau = 1) genuinely swaps rows.
+    fn random_weak_diag(n: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut coo = Coo::square(n);
+        for _ in 0..(3 * n) {
+            let i = rng.next_below(n);
+            let j = rng.next_below(n);
+            if i != j {
+                coo.push(i, j, rng.next_gaussian());
+                coo.push(j, i, rng.next_gaussian());
+            }
+        }
+        for i in 0..n {
+            coo.push(i, i, 0.3 * rng.next_gaussian());
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn full_partial_pivoting_matches_dense_oracle() {
+        // tau = 1.0 is classic partial pivoting: the sparse kernel must
+        // choose the exact same pivot sequence and produce the same
+        // factors as the dense reference (ties are measure-zero with
+        // gaussian values; validated over 60/60 random draws in the
+        // Python mirror before porting)
+        let mut pivoted = 0;
+        for seed in 0..6 {
+            let a = random_weak_diag(14, 1000 + seed);
+            let lsym = analyze_lu(&a);
+            let Ok(f) = factorize(
+                &a,
+                &lsym,
+                LuOptions { pivot_tolerance: 1.0 },
+                &mut FactorWorkspace::new(),
+            ) else {
+                continue; // singular draw
+            };
+            let Ok((dl, du, dperm)) = Dense::from_rows(&a.to_dense()).lu_partial_pivot() else {
+                continue;
+            };
+            assert_eq!(f.row_perm(), &dperm[..], "seed {seed}: pivot sequences differ");
+            if !f.no_pivoting() {
+                pivoted += 1;
+            }
+            for j in 0..a.nrows() {
+                assert!(
+                    (f.udiag()[j] - du.get(j, j)).abs() <= 1e-9 * 1.0f64.max(du.get(j, j).abs()),
+                    "seed {seed}: U diag {j}"
+                );
+                let (rows, vals) = f.l_col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    assert!(
+                        (v - dl.get(i, j)).abs() <= 1e-9 * 1.0f64.max(v.abs()),
+                        "seed {seed}: L[{i}][{j}]"
+                    );
+                }
+                let (rows, vals) = f.u_col(j);
+                for (&i, &v) in rows.iter().zip(vals) {
+                    assert!(
+                        (v - du.get(i, j)).abs() <= 1e-9 * 1.0f64.max(v.abs()),
+                        "seed {seed}: U[{i}][{j}]"
+                    );
+                }
+            }
+        }
+        assert!(pivoted >= 3, "partial pivoting fired on only {pivoted} draws");
+    }
+
+    #[test]
+    fn zero_diagonal_never_chosen_as_pivot() {
+        // explicit zero diagonal: even tau = 0 must not divide by it
+        let mut coo = Coo::square(2);
+        coo.push(0, 0, 0.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 1, 0.0);
+        let a = coo.to_csr();
+        let lsym = analyze_lu(&a);
+        let f = factorize(
+            &a,
+            &lsym,
+            LuOptions { pivot_tolerance: 0.0 },
+            &mut FactorWorkspace::new(),
+        )
+        .unwrap();
+        assert!(!f.no_pivoting(), "must swap rows off the zero diagonal");
+        assert_vec_close(&f.solve(&[2.0, 3.0]), &[3.0, 2.0], 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let mut coo = Coo::square(2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        // row 1 entirely zero → column 1's candidates all zero
+        coo.push(1, 1, 0.0);
+        let res = lu(&coo.to_csr());
+        assert!(matches!(res, Err(FactorError::Singular { .. })), "{res:?}");
+    }
+
+    #[test]
+    fn structurally_unsymmetric_pattern_ok() {
+        // pattern of A itself unsymmetric; A+Aᵀ analysis still bounds it
+        let mut coo = Coo::square(5);
+        for i in 0..5 {
+            coo.push(i, i, 4.0);
+        }
+        coo.push(0, 3, 1.0);
+        coo.push(2, 0, -1.5);
+        coo.push(4, 1, 0.5);
+        coo.push(1, 2, 2.0);
+        let a = coo.to_csr();
+        let f = check_reconstruction(&a, 0.1, 1e-12);
+        let lsym = analyze_lu(&a);
+        assert!(f.lu_nnz() <= lsym.lu_nnz_bound, "bound violated without pivoting");
+    }
+}

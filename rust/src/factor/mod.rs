@@ -1,37 +1,58 @@
 //! Factorization substrate — the hottest layer in the repo: the benchmark
-//! harness times numeric Cholesky under every candidate ordering, so every
-//! Table 2 / Fig 4 number is a measurement of this module.
+//! harness times numeric factorization under every candidate ordering, so
+//! every Table 2 / Fig 4 number is a measurement of this module.
 //!
 //! # Architecture
 //!
+//! The engine is **kind-generic**: [`FactorKind::for_matrix`] routes
+//! symmetric matrices to the Cholesky engine and general (unsymmetric)
+//! ones to the Gilbert–Peierls LU engine; both sides share the etree /
+//! exact-column-count symbolic machinery, the [`FactorWorkspace`] scratch,
+//! and the pattern-keyed [`SymbolicCache`].
+//!
 //! ```text
-//!               Csr (permuted PAPᵀ)
-//!                      │
-//!            symbolic::analyze            etree + exact row/col counts
-//!                      │                  (Gilbert–Ng–Peyton, O(nnz(L)))
-//!          ┌───────────┴──────────────┐
-//!          │ fundamental_supernodes   │   partition columns into panels
-//!          │ + supernodal::profitable │   (flop-weighted width heuristic)
-//!          └───────┬─────────┬────────┘
-//!        wide panels│         │chains/trees (e.g. tridiagonal)
-//!                   ▼         ▼
-//!      supernodal::factorize  numeric::cholesky_with_ws
-//!      (blocked, right-       (scalar, up-looking)
-//!       looking panels)               │
-//!                   │                 │
-//!            SupernodalFactor    CholFactor
-//!                   └── to_chol() ────┘      identical row-compressed L
+//!                  Csr (permuted PAPᵀ)
+//!                          │
+//!              FactorKind::for_matrix (is_symmetric)
+//!              ┌───────────┴────────────────┐
+//!    symmetric │                            │ unsymmetric
+//!              ▼                            ▼
+//!     symbolic::analyze              lu::analyze_lu
+//!     etree + exact row/col          chol analysis of A+Aᵀ
+//!     counts (Gilbert–Ng–            (structural bound on
+//!     Peyton, O(nnz(L)))              nnz(L+U), exact w/o pivots)
+//!              │                            │
+//!   ┌──────────┴─────────────┐              ▼
+//!   │ fundamental_supernodes │      lu::factorize
+//!   │ + supernodal::         │      (left-looking Gilbert–
+//!   │   profitable           │       Peierls, DFS reach +
+//!   └──────┬─────────┬───────┘       threshold partial pivoting)
+//!     wide │         │ chains/trees         │
+//!   panels ▼         ▼ (e.g. tridiagonal)   ▼
+//!  supernodal::   numeric::             LuFactor
+//!  factorize      cholesky_with_ws     {L, U, row_perm}
+//!  (blocked,      (scalar, up-looking)      │
+//!   right-looking)     │                    │
+//!          │           │                    │
+//!   SupernodalFactor  CholFactor            │
+//!          └─ to_chol() ─┘                  │
+//!              └───────── Factorization ────┘     one enum downstream
 //! ```
 //!
-//! **Two numeric kernels, one factor.** `numeric` is the scalar up-looking
-//! kernel (row-by-row sparse triangular solves with indexed gathers).
-//! `supernodal` stores runs of columns with identical sub-diagonal pattern
-//! as dense column-major panels and factors them with a small dense
-//! Cholesky + blocked triangular solve + rank-k scatter updates — all
-//! contiguous inner loops. Both produce the same L (verified entrywise to
-//! 1e-12 in `tests/proptests.rs`); `SupernodalFactor::to_chol()` converts
-//! to the row-compressed layout so downstream consumers never care which
-//! kernel ran.
+//! **Three numeric kernels, one `Factorization`.** `numeric` is the scalar
+//! up-looking Cholesky kernel (row-by-row sparse triangular solves with
+//! indexed gathers). `supernodal` stores runs of columns with identical
+//! sub-diagonal pattern as dense column-major panels and factors them with
+//! a small dense Cholesky + blocked triangular solve + rank-k scatter
+//! updates — all contiguous inner loops. `lu` is the left-looking
+//! Gilbert–Peierls kernel for general matrices: per-column DFS
+//! reachability over the partially-built L, a sparse triangular solve in
+//! topological order, and threshold partial pivoting (`tau = 0.1` by
+//! default — the SuperLU policy). The Cholesky kernels produce the same L
+//! (verified entrywise to 1e-12 in `tests/proptests.rs`); the LU kernel is
+//! verified entrywise against dense reference LUs — the no-pivot oracle to
+//! 1e-10 on every problem class, and the partial-pivoting oracle (same
+//! pivot sequence, same factors) on matrices that force row swaps.
 //!
 //! **Fallback.** Supernodes of width 1 (chains, trees, tridiagonal) make
 //! panel bookkeeping pure overhead, so `supernodal::profitable` gates the
@@ -42,23 +63,28 @@
 //!
 //! **Workspace / cache lifecycle (the serving steady state).** Repeated
 //! factorization of matrices whose pattern doesn't change — the
-//! coordinator's steady state — is allocation-free end to end:
-//! [`FactorWorkspace`] owns all O(n) scratch and only ever grows (its
-//! `grow_events` counter lets tests assert "zero re-allocations"), the
-//! pattern-keyed [`SymbolicCache`] skips symbolic analysis entirely on a
-//! hit, and `numeric::refactor_into` / `SupernodalFactor::refactor`
-//! rewrite the factor's values in place. See DESIGN.md §Factor for the
-//! measured effect.
+//! coordinator's steady state — is allocation-free end to end for both
+//! kinds: [`FactorWorkspace`] owns all O(n) scratch and only ever grows
+//! (its `grow_events` counter lets tests assert "zero re-allocations"),
+//! the pattern-keyed [`SymbolicCache`] skips symbolic analysis entirely on
+//! a hit (Cholesky and LU analyses cached side by side), and
+//! `numeric::refactor_into` / `SupernodalFactor::refactor` /
+//! `lu::refactor_into` rewrite the factor's values in place. See DESIGN.md
+//! §Factor for the measured effect.
 
 pub mod etree;
+pub mod lu;
 pub mod numeric;
 pub mod solver;
 pub mod supernodal;
 pub mod symbolic;
 pub mod workspace;
 
+pub use lu::{
+    analyze_lu, lu_fill_ratio, lu_fill_ratio_of_order, LuFactor, LuOptions, LuSymbolic,
+};
 pub use numeric::{cholesky, cholesky_with, cholesky_with_ws, refactor_into, CholFactor, FactorError};
-pub use solver::{DirectSolver, FactorKind, SolveStats};
+pub use solver::{DirectSolver, FactorKind, Factorization, SolveStats, SYMMETRY_TOL};
 pub use supernodal::{SupernodalFactor, SupernodalSymbolic};
 pub use symbolic::{
     analyze, factor_flops, fill_ratio, fill_ratio_of_order, fundamental_supernodes, Symbolic,

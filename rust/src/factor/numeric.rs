@@ -24,6 +24,9 @@ pub struct CholFactor {
 pub enum FactorError {
     NotPositiveDefinite { row: usize, pivot: f64 },
     NotSquare { nrows: usize, ncols: usize },
+    /// LU found no usable pivot in this column (structurally or
+    /// numerically singular).
+    Singular { col: usize },
 }
 
 impl std::fmt::Display for FactorError {
@@ -34,6 +37,9 @@ impl std::fmt::Display for FactorError {
             }
             FactorError::NotSquare { nrows, ncols } => {
                 write!(f, "matrix is not square: {nrows}x{ncols}")
+            }
+            FactorError::Singular { col } => {
+                write!(f, "matrix is singular: no usable pivot in column {col}")
             }
         }
     }

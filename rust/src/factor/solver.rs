@@ -2,88 +2,143 @@
 //! timing bookkeeping the experiments report. This is the "downstream user"
 //! API — what a simulation code would call.
 //!
-//! The solver picks the numeric kernel per pattern (supernodal for
-//! fill-heavy matrices, up-looking otherwise — see `factor::supernodal::
-//! profitable`), and the [`FactorContext`]-taking entry points make the
-//! serving steady state cheap: a repeated pattern hits the symbolic cache
-//! (zero re-analysis) and the shared workspace (zero scratch allocation),
-//! and [`DirectSolver::refactor`] rewrites the factor values in place.
+//! The solver is **kind-generic**: symmetric matrices take the Cholesky
+//! engine (supernodal or up-looking per pattern — see
+//! `factor::supernodal::profitable`), unsymmetric ones the Gilbert–Peierls
+//! LU engine with threshold partial pivoting. [`FactorKind::for_matrix`]
+//! makes the call from `Csr::is_symmetric`; callers with out-of-band
+//! knowledge can pin the kind via [`DirectSolver::prepare_kind_with`].
+//!
+//! The [`FactorContext`]-taking entry points make the serving steady state
+//! cheap for both kinds: a repeated pattern hits the symbolic cache (zero
+//! re-analysis), the shared workspace (zero scratch allocation), and
+//! [`DirectSolver::refactor`] rewrites the factor values in place.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::factor::lu::{self, LuFactor, LuOptions, LuSymbolic};
 use crate::factor::numeric::{self, CholFactor, FactorError};
 use crate::factor::supernodal::{self, SupernodalFactor};
 use crate::factor::symbolic::{factor_flops, fill_ratio};
 use crate::factor::workspace::{FactorContext, FactorWorkspace, PatternAnalysis};
 use crate::sparse::Csr;
 
-/// The factor produced by whichever numeric kernel the pattern selected.
+/// Tolerance used when auto-detecting matrix symmetry for kind dispatch.
+pub const SYMMETRY_TOL: f64 = 1e-12;
+
+/// Which factorization a matrix calls for: LLᵀ on symmetric inputs, LU
+/// with threshold partial pivoting on general ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FactorKind {
-    UpLooking(CholFactor),
-    Supernodal(SupernodalFactor),
+    Cholesky,
+    Lu,
 }
 
 impl FactorKind {
-    /// nnz(L) including the diagonal.
-    pub fn lnnz(&self) -> usize {
+    /// Short label used in CSV columns and metrics.
+    pub fn label(&self) -> &'static str {
         match self {
-            FactorKind::UpLooking(f) => f.lnnz(),
-            FactorKind::Supernodal(f) => f.lnnz(),
+            FactorKind::Cholesky => "cholesky",
+            FactorKind::Lu => "lu",
         }
     }
 
-    /// Entrywise ℓ₁ norm of L — the paper's surrogate objective ‖L‖₁.
+    /// Pick the kind for a matrix: Cholesky iff symmetric (pattern and
+    /// values, tolerance [`SYMMETRY_TOL`]).
+    pub fn for_matrix(a: &Csr) -> FactorKind {
+        if a.is_symmetric(SYMMETRY_TOL) {
+            FactorKind::Cholesky
+        } else {
+            FactorKind::Lu
+        }
+    }
+}
+
+/// The factor produced by whichever engine/kernel the matrix selected.
+pub enum Factorization {
+    /// Scalar up-looking Cholesky factor.
+    CholUpLooking(CholFactor),
+    /// Blocked supernodal Cholesky factor.
+    CholSupernodal(SupernodalFactor),
+    /// Gilbert–Peierls LU factor (unit-lower L, U, row pivoting).
+    Lu(LuFactor),
+}
+
+impl Factorization {
+    /// Which factorization kind produced this factor.
+    pub fn kind(&self) -> FactorKind {
+        match self {
+            Factorization::CholUpLooking(_) | Factorization::CholSupernodal(_) => {
+                FactorKind::Cholesky
+            }
+            Factorization::Lu(_) => FactorKind::Lu,
+        }
+    }
+
+    /// Structural nonzeros of the factor(s): nnz(L) for Cholesky,
+    /// nnz(L+U) with the diagonal counted once for LU (the two coincide
+    /// as fill measures: both equal the golden-criterion numerator).
+    pub fn factor_nnz(&self) -> usize {
+        match self {
+            Factorization::CholUpLooking(f) => f.lnnz(),
+            Factorization::CholSupernodal(f) => f.lnnz(),
+            Factorization::Lu(f) => f.lu_nnz(),
+        }
+    }
+
+    /// Entrywise ℓ₁ norm of the factor(s) — the paper's surrogate
+    /// objective ‖L‖₁ (‖L+U‖₁ for LU).
     pub fn l1_norm(&self) -> f64 {
         match self {
-            FactorKind::UpLooking(f) => f.l1_norm(),
-            FactorKind::Supernodal(f) => f.l1_norm(),
+            Factorization::CholUpLooking(f) => f.l1_norm(),
+            Factorization::CholSupernodal(f) => f.l1_norm(),
+            Factorization::Lu(f) => f.l1_norm(),
         }
     }
 
-    /// Solve L·y = b.
-    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
-        match self {
-            FactorKind::UpLooking(f) => f.solve_lower(b),
-            FactorKind::Supernodal(f) => f.solve_lower(b),
-        }
-    }
-
-    /// Solve Lᵀ·x = y.
-    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
-        match self {
-            FactorKind::UpLooking(f) => f.solve_upper(y),
-            FactorKind::Supernodal(f) => f.solve_upper(y),
-        }
-    }
-
-    /// Solve A·x = b given A = L·Lᵀ.
+    /// Solve A·x = b through the factor (the LU arm applies its pivoting
+    /// row permutation internally).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        self.solve_upper(&self.solve_lower(b))
+        match self {
+            Factorization::CholUpLooking(f) => f.solve(b),
+            Factorization::CholSupernodal(f) => f.solve(b),
+            Factorization::Lu(f) => f.solve(b),
+        }
     }
 
-    /// Which kernel produced this factor.
+    /// Which numeric kernel produced this factor.
     pub fn kernel(&self) -> &'static str {
         match self {
-            FactorKind::UpLooking(_) => "up-looking",
-            FactorKind::Supernodal(_) => "supernodal",
+            Factorization::CholUpLooking(_) => "up-looking",
+            Factorization::CholSupernodal(_) => "supernodal",
+            Factorization::Lu(_) => "lu-gp",
         }
     }
 
-    /// Row-compressed view of L (clones for the up-looking kernel,
-    /// converts panels for the supernodal one).
-    pub fn to_chol(&self) -> CholFactor {
+    /// Row-compressed view of L for the Cholesky kinds (clones for the
+    /// up-looking kernel, converts panels for the supernodal one);
+    /// `None` for LU.
+    pub fn to_chol(&self) -> Option<CholFactor> {
         match self {
-            FactorKind::UpLooking(f) => f.clone(),
-            FactorKind::Supernodal(f) => f.to_chol(),
+            Factorization::CholUpLooking(f) => Some(f.clone()),
+            Factorization::CholSupernodal(f) => Some(f.to_chol()),
+            Factorization::Lu(_) => None,
         }
     }
+}
+
+/// The symbolic analysis retained for refactorization, per kind.
+enum Analysis {
+    Chol(PatternAnalysis),
+    Lu(Arc<LuSymbolic>),
 }
 
 /// A factorized, permuted system ready for repeated solves.
 pub struct DirectSolver {
     order: Vec<usize>,
-    analysis: PatternAnalysis,
-    factor: FactorKind,
+    analysis: Analysis,
+    factor: Factorization,
     /// Statistics gathered during `prepare`.
     pub stats: SolveStats,
 }
@@ -93,21 +148,30 @@ pub struct DirectSolver {
 pub struct SolveStats {
     pub n: usize,
     pub nnz_a: usize,
+    /// structural factor nnz: nnz(L) for Cholesky, nnz(L+U) for LU
     pub lnnz: usize,
+    /// Cholesky: the paper's Eq. 15 (fill-ins / nnz(A));
+    /// LU: nnz(L+U) / nnz(A)
     pub fill_ratio: f64,
     pub ordering_time: f64,
     pub symbolic_time: f64,
     pub factor_time: f64,
-    /// exact LLᵀ flop count (Σⱼ col_nnz(L)ⱼ²)
+    /// exact LLᵀ flop count for Cholesky (Σⱼ col_nnz(L)ⱼ²); for LU, the
+    /// structural estimate 2·Σⱼ col_nnz(chol(A+Aᵀ))ⱼ² — LU does twice
+    /// the Cholesky work to leading order (dense limit 2n³/3 vs n³/3),
+    /// exact absent pivoting on pattern-symmetric inputs
     pub flops: u64,
-    /// numeric kernel used ("up-looking" | "supernodal")
+    /// numeric kernel used ("up-looking" | "supernodal" | "lu-gp")
     pub kernel: &'static str,
+    /// factorization kind ("cholesky" | "lu")
+    pub factor_kind: &'static str,
 }
 
 impl DirectSolver {
     /// Reorder A with `order` (precomputed permutation; `order[k]` = original
-    /// index eliminated k-th), then factorize. `ordering_time` is supplied by
-    /// the caller since the ordering was computed outside.
+    /// index eliminated k-th), then factorize. The kind is auto-detected
+    /// from matrix symmetry. `ordering_time` is supplied by the caller
+    /// since the ordering was computed outside.
     pub fn prepare(a: &Csr, order: Vec<usize>, ordering_time: f64) -> Result<Self, FactorError> {
         DirectSolver::prepare_with(a, order, ordering_time, &mut FactorContext::new())
     }
@@ -121,36 +185,81 @@ impl DirectSolver {
         ordering_time: f64,
         ctx: &mut FactorContext,
     ) -> Result<Self, FactorError> {
+        let kind = FactorKind::for_matrix(a);
+        DirectSolver::prepare_kind_with(a, order, kind, ordering_time, ctx)
+    }
+
+    /// Fully explicit entry point: factorize `a` under `order` with the
+    /// given [`FactorKind`] through a shared context. Note a Cholesky
+    /// request on an unsymmetric matrix will fail (or silently use only
+    /// the lower triangle); prefer [`prepare_with`](Self::prepare_with)
+    /// unless the kind is known out of band.
+    pub fn prepare_kind_with(
+        a: &Csr,
+        order: Vec<usize>,
+        kind: FactorKind,
+        ordering_time: f64,
+        ctx: &mut FactorContext,
+    ) -> Result<Self, FactorError> {
         let t0 = Instant::now();
         let pap = a.permute_sym(&order);
-        let analysis = ctx.cache.analyze(&pap);
-        let symbolic_time = t0.elapsed().as_secs_f64();
-
-        let t1 = Instant::now();
-        let factor = match &analysis.ssym {
-            Some(ssym) => FactorKind::Supernodal(supernodal::factorize(
-                &pap,
-                ssym.clone(),
-                &mut ctx.workspace,
-            )?),
-            None => FactorKind::UpLooking(numeric::cholesky_with_ws(
-                &pap,
-                &analysis.sym,
-                &mut ctx.workspace,
-            )?),
+        let (analysis, symbolic_time, factor, factor_time, lnnz, fr, flops) = match kind {
+            FactorKind::Cholesky => {
+                let analysis = ctx.cache.analyze(&pap);
+                let symbolic_time = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let factor = match &analysis.ssym {
+                    Some(ssym) => Factorization::CholSupernodal(supernodal::factorize(
+                        &pap,
+                        ssym.clone(),
+                        &mut ctx.workspace,
+                    )?),
+                    None => Factorization::CholUpLooking(numeric::cholesky_with_ws(
+                        &pap,
+                        &analysis.sym,
+                        &mut ctx.workspace,
+                    )?),
+                };
+                let factor_time = t1.elapsed().as_secs_f64();
+                let lnnz = analysis.sym.lnnz;
+                let fr = fill_ratio(&pap, &analysis.sym);
+                let flops = factor_flops(&analysis.sym);
+                (Analysis::Chol(analysis), symbolic_time, factor, factor_time, lnnz, fr, flops)
+            }
+            FactorKind::Lu => {
+                let lsym = ctx.cache.analyze_lu(&pap);
+                let symbolic_time = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let f = lu::factorize(&pap, &lsym, LuOptions::default(), &mut ctx.workspace)?;
+                let factor_time = t1.elapsed().as_secs_f64();
+                let lnnz = f.lu_nnz();
+                let fr = lu::lu_fill_ratio(&pap, &f);
+                // LU ≈ 2× the Cholesky flop count of the A+Aᵀ pattern
+                // (see the `flops` field docs)
+                let flops = 2 * factor_flops(&lsym.sym);
+                (
+                    Analysis::Lu(lsym),
+                    symbolic_time,
+                    Factorization::Lu(f),
+                    factor_time,
+                    lnnz,
+                    fr,
+                    flops,
+                )
+            }
         };
-        let factor_time = t1.elapsed().as_secs_f64();
 
         let stats = SolveStats {
             n: a.nrows(),
             nnz_a: a.nnz(),
-            lnnz: analysis.sym.lnnz,
-            fill_ratio: fill_ratio(&pap, &analysis.sym),
+            lnnz,
+            fill_ratio: fr,
             ordering_time,
             symbolic_time,
             factor_time,
-            flops: factor_flops(&analysis.sym),
+            flops,
             kernel: factor.kernel(),
+            factor_kind: kind.label(),
         };
         Ok(DirectSolver { order, analysis, factor, stats })
     }
@@ -159,13 +268,23 @@ impl DirectSolver {
     /// the one this solver was prepared on but (possibly) new values — the
     /// serving steady state. Performs zero symbolic analysis (the stored
     /// analysis is reused) and zero scratch allocation (given a warm
-    /// workspace); the factor values are rewritten in place.
+    /// workspace); the factor values are rewritten in place. The LU arm
+    /// may re-pivot under the new values (its fill can change); the
+    /// stored factor buffers are still reused.
     pub fn refactor(&mut self, a: &Csr, ws: &mut FactorWorkspace) -> Result<(), FactorError> {
         let t1 = Instant::now();
         let pap = a.permute_sym(&self.order);
-        match &mut self.factor {
-            FactorKind::UpLooking(f) => numeric::refactor_into(&pap, &self.analysis.sym, f, ws)?,
-            FactorKind::Supernodal(f) => f.refactor(&pap, ws)?,
+        match (&mut self.factor, &self.analysis) {
+            (Factorization::CholUpLooking(f), Analysis::Chol(an)) => {
+                numeric::refactor_into(&pap, &an.sym, f, ws)?
+            }
+            (Factorization::CholSupernodal(f), Analysis::Chol(_)) => f.refactor(&pap, ws)?,
+            (Factorization::Lu(f), Analysis::Lu(_)) => {
+                lu::refactor_into(&pap, LuOptions::default(), f, ws)?;
+                self.stats.lnnz = f.lu_nnz();
+                self.stats.fill_ratio = lu::lu_fill_ratio(&pap, f);
+            }
+            _ => unreachable!("factor/analysis kind mismatch"),
         }
         self.stats.factor_time = t1.elapsed().as_secs_f64();
         Ok(())
@@ -201,7 +320,7 @@ impl DirectSolver {
         &self.order
     }
 
-    pub fn factor(&self) -> &FactorKind {
+    pub fn factor(&self) -> &Factorization {
         &self.factor
     }
 }
@@ -209,7 +328,7 @@ impl DirectSolver {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gen::grid::{laplacian_2d, laplacian_3d};
+    use crate::gen::grid::{convection_diffusion_2d, laplacian_2d, laplacian_3d};
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -250,6 +369,7 @@ mod tests {
         assert!(s.factor_time >= 0.0);
         assert!(s.flops > 0);
         assert!(!s.kernel.is_empty());
+        assert_eq!(s.factor_kind, "cholesky");
     }
 
     #[test]
@@ -260,6 +380,24 @@ mod tests {
         assert_eq!(solver.stats.kernel, "supernodal");
         let n = a.nrows();
         let mut rng = Pcg64::new(4);
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = solver.solve(&b);
+        assert!(DirectSolver::residual(&a, &x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn unsymmetric_matrix_dispatches_to_lu_and_solves() {
+        let mut rng = Pcg64::new(6);
+        let a = convection_diffusion_2d(9, 8, 2.0, &mut rng);
+        assert!(!a.is_symmetric(1e-12), "generator must be value-unsymmetric");
+        assert_eq!(FactorKind::for_matrix(&a), FactorKind::Lu);
+        let n = a.nrows();
+        let order = crate::order::amd(&a);
+        let solver = DirectSolver::prepare(&a, order, 0.0).unwrap();
+        assert_eq!(solver.stats.kernel, "lu-gp");
+        assert_eq!(solver.stats.factor_kind, "lu");
+        assert!(solver.stats.fill_ratio >= 1.0, "nnz(L+U) ≥ nnz(A) on this class");
         let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
         let b = a.matvec(&xt);
         let x = solver.solve(&b);
@@ -283,6 +421,26 @@ mod tests {
         }
         assert_eq!(ctx.cache.misses(), 1, "no symbolic re-analysis");
         assert_eq!(ctx.cache.hits(), 5);
+        assert_eq!(ctx.workspace.grow_events(), grows, "no scratch re-allocation");
+    }
+
+    #[test]
+    fn lu_steady_state_skips_symbolic_and_allocations() {
+        // the same contract on the LU path
+        let mut rng = Pcg64::new(8);
+        let a = convection_diffusion_2d(10, 10, 1.5, &mut rng);
+        let order = crate::order::amd(&a);
+        let mut ctx = FactorContext::new();
+        let first = DirectSolver::prepare_with(&a, order.clone(), 0.0, &mut ctx).unwrap();
+        assert_eq!(first.stats.factor_kind, "lu");
+        assert_eq!(ctx.cache.misses(), 1);
+        let grows = ctx.workspace.grow_events();
+        for _ in 0..4 {
+            let s = DirectSolver::prepare_with(&a, order.clone(), 0.0, &mut ctx).unwrap();
+            assert_eq!(s.stats.lnnz, first.stats.lnnz);
+        }
+        assert_eq!(ctx.cache.misses(), 1, "no LU symbolic re-analysis");
+        assert_eq!(ctx.cache.hits(), 4);
         assert_eq!(ctx.workspace.grow_events(), grows, "no scratch re-allocation");
     }
 
@@ -311,5 +469,32 @@ mod tests {
         let b = scaled.matvec(&xt);
         let x = solver.solve(&b);
         assert!(DirectSolver::residual(&scaled, &x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn lu_refactor_updates_values_in_place() {
+        let mut rng = Pcg64::new(11);
+        let a = convection_diffusion_2d(8, 9, 3.0, &mut rng);
+        let n = a.nrows();
+        let order = crate::order::amd(&a);
+        let mut ctx = FactorContext::new();
+        let mut solver = DirectSolver::prepare_with(&a, order, 0.0, &mut ctx).unwrap();
+        assert_eq!(solver.stats.factor_kind, "lu");
+        let scaled = crate::sparse::Csr::from_parts(
+            n,
+            n,
+            a.indptr().to_vec(),
+            a.indices().to_vec(),
+            a.data().iter().map(|v| v * 2.0).collect(),
+        );
+        let misses = ctx.cache.misses();
+        let grows = ctx.workspace.grow_events();
+        solver.refactor(&scaled, &mut ctx.workspace).unwrap();
+        assert_eq!(ctx.cache.misses(), misses, "LU refactor must not re-analyze");
+        assert_eq!(ctx.workspace.grow_events(), grows, "LU refactor must not grow scratch");
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = scaled.matvec(&xt);
+        let x = solver.solve(&b);
+        assert!(DirectSolver::residual(&scaled, &x, &b) < 1e-9);
     }
 }

@@ -20,6 +20,7 @@
 use std::sync::Arc;
 
 use crate::factor::etree::NONE;
+use crate::factor::lu::{analyze_lu, LuSymbolic};
 use crate::factor::supernodal::{self, SupernodalSymbolic};
 use crate::factor::symbolic::{analyze, fundamental_supernodes, Symbolic};
 use crate::sparse::Csr;
@@ -42,6 +43,12 @@ pub struct FactorWorkspace {
     pub(crate) ucol: Vec<f64>,
     /// per-group local row offsets (supernodal scatter)
     pub(crate) loc: Vec<usize>,
+    /// original row → pivot step (LU kernel; NONE = not yet pivoted)
+    pub(crate) lu_pinv: Vec<usize>,
+    /// DFS node stack (LU reachability)
+    pub(crate) lu_stack: Vec<usize>,
+    /// DFS per-depth resume position (LU reachability)
+    pub(crate) lu_pstack: Vec<usize>,
     grow_events: u64,
     factorizations: u64,
 }
@@ -63,6 +70,9 @@ impl FactorWorkspace {
             self.map.resize(n, 0);
             self.ucol.resize(n, 0.0);
             self.loc.resize(n, 0);
+            self.lu_pinv.resize(n, NONE);
+            self.lu_stack.resize(n, 0);
+            self.lu_pstack.resize(n, 0);
         }
         // clear BEFORE reserving so `reserve(n)` (which guarantees
         // capacity ≥ len + n) can never leave capacity short of n — a
@@ -103,6 +113,29 @@ impl FactorWorkspace {
         (&mut self.x, &mut self.mark, &mut self.pattern)
     }
 
+    /// Disjoint borrows of the LU buffers
+    /// (x, mark, pattern, pinv, stack, pstack).
+    /// Call [`acquire`](Self::acquire) first.
+    pub(crate) fn lu_buffers(
+        &mut self,
+    ) -> (
+        &mut [f64],
+        &mut [usize],
+        &mut Vec<usize>,
+        &mut [usize],
+        &mut [usize],
+        &mut [usize],
+    ) {
+        (
+            &mut self.x,
+            &mut self.mark,
+            &mut self.pattern,
+            &mut self.lu_pinv,
+            &mut self.lu_stack,
+            &mut self.lu_pstack,
+        )
+    }
+
     /// How many times any scratch buffer had to be allocated or grown.
     /// Stays constant across repeated factorizations of same-size (or
     /// smaller) matrices — the "zero scratch re-allocation" assertion.
@@ -127,16 +160,44 @@ pub struct PatternAnalysis {
     pub ssym: Option<Arc<SupernodalSymbolic>>,
 }
 
-struct CacheEntry {
+/// One pattern-keyed cache entry: the FNV hash plus the full pattern for
+/// exact verification, carrying an arbitrary analysis payload.
+struct Keyed<T> {
     hash: u64,
     indptr: Vec<usize>,
     indices: Vec<usize>,
-    analysis: PatternAnalysis,
+    payload: T,
 }
 
-/// Pattern-keyed LRU cache of symbolic analyses.
+/// MRU probe shared by both analysis kinds: a hash match is verified
+/// against the exact pattern, and a hit rotates the entry to the front.
+fn cache_lookup<T: Clone>(entries: &mut Vec<Keyed<T>>, a: &Csr, hash: u64) -> Option<T> {
+    let k = entries.iter().position(|e| {
+        e.hash == hash && e.indptr == a.indptr() && e.indices == a.indices()
+    })?;
+    let entry = entries.remove(k);
+    let payload = entry.payload.clone();
+    entries.insert(0, entry);
+    Some(payload)
+}
+
+/// Insert at MRU position and evict beyond `capacity` (shared discipline).
+fn cache_insert<T>(entries: &mut Vec<Keyed<T>>, capacity: usize, a: &Csr, hash: u64, payload: T) {
+    entries.insert(
+        0,
+        Keyed { hash, indptr: a.indptr().to_vec(), indices: a.indices().to_vec(), payload },
+    );
+    entries.truncate(capacity);
+}
+
+/// Pattern-keyed LRU cache of symbolic analyses. Cholesky and LU analyses
+/// are cached side by side — a symmetric pattern may legitimately hold
+/// both — in distinct entry lists sharing one probe/MRU/eviction
+/// discipline; each kind holds up to `capacity` entries, and hits/misses
+/// count across both kinds.
 pub struct SymbolicCache {
-    entries: Vec<CacheEntry>,
+    entries: Vec<Keyed<PatternAnalysis>>,
+    lu_entries: Vec<Keyed<Arc<LuSymbolic>>>,
     capacity: usize,
     hits: u64,
     misses: u64,
@@ -150,7 +211,13 @@ impl Default for SymbolicCache {
 
 impl SymbolicCache {
     pub fn new(capacity: usize) -> SymbolicCache {
-        SymbolicCache { entries: Vec::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+        SymbolicCache {
+            entries: Vec::new(),
+            lu_entries: Vec::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     /// Analyze `a`'s pattern, reusing a cached analysis when the pattern is
@@ -158,13 +225,8 @@ impl SymbolicCache {
     /// is verified on every hash match.
     pub fn analyze(&mut self, a: &Csr) -> PatternAnalysis {
         let hash = pattern_hash(a);
-        if let Some(k) = self.entries.iter().position(|e| {
-            e.hash == hash && e.indptr == a.indptr() && e.indices == a.indices()
-        }) {
+        if let Some(analysis) = cache_lookup(&mut self.entries, a, hash) {
             self.hits += 1;
-            let entry = self.entries.remove(k);
-            let analysis = entry.analysis.clone();
-            self.entries.insert(0, entry);
             return analysis;
         }
         self.misses += 1;
@@ -176,17 +238,23 @@ impl SymbolicCache {
             None
         };
         let analysis = PatternAnalysis { sym, ssym };
-        self.entries.insert(
-            0,
-            CacheEntry {
-                hash,
-                indptr: a.indptr().to_vec(),
-                indices: a.indices().to_vec(),
-                analysis: analysis.clone(),
-            },
-        );
-        self.entries.truncate(self.capacity);
+        cache_insert(&mut self.entries, self.capacity, a, hash, analysis.clone());
         analysis
+    }
+
+    /// Analyze `a`'s pattern for LU (the A+Aᵀ symbolic bound), reusing a
+    /// cached analysis when the pattern is bit-identical to a recent one.
+    /// Same MRU/verification discipline as [`analyze`](Self::analyze).
+    pub fn analyze_lu(&mut self, a: &Csr) -> Arc<LuSymbolic> {
+        let hash = pattern_hash(a);
+        if let Some(lsym) = cache_lookup(&mut self.lu_entries, a, hash) {
+            self.hits += 1;
+            return lsym;
+        }
+        self.misses += 1;
+        let lsym = Arc::new(analyze_lu(a));
+        cache_insert(&mut self.lu_entries, self.capacity, a, hash, lsym.clone());
+        lsym
     }
 
     pub fn hits(&self) -> u64 {
@@ -198,11 +266,11 @@ impl SymbolicCache {
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.len() + self.lu_entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.lu_entries.is_empty()
     }
 }
 
@@ -278,6 +346,24 @@ mod tests {
         assert_eq!(cache.len(), 2);
         cache.analyze(&a); // miss again
         assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn lu_cache_hits_on_identical_pattern_and_coexists_with_chol() {
+        let mut cache = SymbolicCache::new(4);
+        let a = laplacian_2d(8, 8);
+        let l1 = cache.analyze_lu(&a);
+        assert_eq!(cache.misses(), 1);
+        let l2 = cache.analyze_lu(&a.clone());
+        assert_eq!(cache.hits(), 1);
+        assert!(Arc::ptr_eq(&l1, &l2), "must share the LU analysis");
+        // a Cholesky analysis of the same pattern is a separate entry,
+        // not a hit on the LU one
+        cache.analyze(&a);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+        // symmetric pattern: the A+Aᵀ bound equals the Cholesky count
+        assert_eq!(l1.lu_nnz_bound, 2 * cache.analyze(&a).sym.lnnz - a.nrows());
     }
 
     #[test]

@@ -19,7 +19,16 @@ use crate::gen::mesh::{self, Geometry};
 use crate::sparse::{Coo, Csr};
 use crate::util::rng::Pcg64;
 
-/// The six problem classes of the paper's Table 2.
+/// Whether a problem class produces symmetric (SPD, Cholesky-factorable)
+/// or general unsymmetric-value matrices (LU territory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Symmetry {
+    Symmetric,
+    Unsymmetric,
+}
+
+/// The six problem classes of the paper's Table 2, plus the two
+/// unsymmetric families the kind-generic LU engine unlocks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ProblemClass {
     /// Structural problem (44 matrices in the paper's test set).
@@ -34,9 +43,14 @@ pub enum ProblemClass {
     Tp,
     /// Everything else (46).
     Other,
+    /// Upwind convection–diffusion: value-unsymmetric 5-point stencil.
+    ConvDiff,
+    /// Circuit-style network: random unsymmetric-value conductance graph.
+    Circuit,
 }
 
 impl ProblemClass {
+    /// The symmetric (SPD) classes of the paper's Table 2.
     pub const ALL: [ProblemClass; 6] = [
         ProblemClass::Cfd,
         ProblemClass::Mrp,
@@ -45,6 +59,10 @@ impl ProblemClass {
         ProblemClass::Tp,
         ProblemClass::Other,
     ];
+
+    /// The unsymmetric classes evaluated through the LU engine.
+    pub const UNSYMMETRIC: [ProblemClass; 2] =
+        [ProblemClass::ConvDiff, ProblemClass::Circuit];
 
     /// Short label used in tables (matches the paper's column headers).
     pub fn label(&self) -> &'static str {
@@ -55,6 +73,8 @@ impl ProblemClass {
             ProblemClass::TwoDThreeD => "2D3D",
             ProblemClass::Tp => "TP",
             ProblemClass::Other => "Other",
+            ProblemClass::ConvDiff => "ConvDiff",
+            ProblemClass::Circuit => "Circuit",
         }
     }
 
@@ -66,8 +86,18 @@ impl ProblemClass {
             "2D3D" => ProblemClass::TwoDThreeD,
             "TP" => ProblemClass::Tp,
             "OTHER" => ProblemClass::Other,
+            "CONVDIFF" => ProblemClass::ConvDiff,
+            "CIRCUIT" => ProblemClass::Circuit,
             _ => return None,
         })
+    }
+
+    /// Which factorization kind this class's matrices call for.
+    pub fn symmetry(&self) -> Symmetry {
+        match self {
+            ProblemClass::ConvDiff | ProblemClass::Circuit => Symmetry::Unsymmetric,
+            _ => Symmetry::Symmetric,
+        }
     }
 
     /// Generate one matrix of this class with roughly `n` rows.
@@ -113,6 +143,16 @@ impl ProblemClass {
                     random_geometric_spd(n, &mut rng)
                 }
             }
+            ProblemClass::ConvDiff => {
+                // elongated channels like the CFD class, but upwind
+                // convection makes the values genuinely unsymmetric
+                let aspect = 1.0 + 2.0 * rng.next_f64();
+                let ny = ((n as f64 / aspect).sqrt().round().max(2.0)) as usize;
+                let nx = (n / ny).max(2);
+                let peclet = rng.uniform(0.5, 4.0);
+                grid::convection_diffusion_2d(nx, ny, peclet, &mut rng)
+            }
+            ProblemClass::Circuit => circuit_network(n, &mut rng),
         }
     }
 }
@@ -125,7 +165,49 @@ fn class_salt(c: ProblemClass) -> u64 {
         ProblemClass::TwoDThreeD => 0x2D3D,
         ProblemClass::Tp => 0x7E44,
         ProblemClass::Other => 0x07E2,
+        ProblemClass::ConvDiff => 0xC04D,
+        ProblemClass::Circuit => 0xC12C,
     }
+}
+
+/// Circuit-style network with unsymmetric values: a ring backbone plus
+/// random chords (the netlist), where each connection carries a
+/// conductance `g` made asymmetric on a random subset of edges (controlled
+/// sources: `a_uv = −(g+s)`, `a_vu = −(g−s)` with `|s| < g`). Grounded
+/// through the diagonal (row-sum + 1), so the matrix is strictly
+/// row-diagonally dominant — circuit matrices are the canonical
+/// "unsymmetric values, symmetric pattern" LU workload.
+pub fn circuit_network(n: usize, rng: &mut Pcg64) -> Csr {
+    assert!(n >= 3);
+    let mut coo = Coo::square(n);
+    let mut rowsum = vec![0.0f64; n];
+    let connect = |coo: &mut Coo, rowsum: &mut [f64], u: usize, v: usize, r: &mut Pcg64| {
+        let g = 0.5 + r.next_f64();
+        // half the edges get a controlled-source asymmetry
+        let s = if r.next_f64() < 0.5 { g * r.uniform(0.1, 0.8) } else { 0.0 };
+        coo.push(u, v, -(g + s));
+        coo.push(v, u, -(g - s));
+        rowsum[u] += g + s;
+        rowsum[v] += g - s;
+    };
+    // ring backbone keeps the network connected
+    for u in 0..n {
+        connect(&mut coo, &mut rowsum, u, (u + 1) % n, rng);
+    }
+    // random chords (~2 per node), deduplicated against nothing: COO sums
+    // duplicates, which just merges parallel branches — physical for
+    // circuits
+    for _ in 0..(2 * n) {
+        let u = rng.next_below(n);
+        let v = rng.next_below(n);
+        if u != v {
+            connect(&mut coo, &mut rowsum, u, v, rng);
+        }
+    }
+    for (i, s) in rowsum.iter().enumerate() {
+        coo.push(i, i, s + 1.0);
+    }
+    coo.to_csr()
 }
 
 /// Model-reduction-like pattern: a banded interior system (the reduced
@@ -283,13 +365,17 @@ pub struct TestMatrix {
     pub matrix: Csr,
 }
 
-/// Build a test suite mirroring the paper's class mix at a scaled-down
-/// size. `sizes` are target dimensions; `per_class` matrices per class per
-/// size.
-pub fn test_suite(sizes: &[usize], per_class: usize, seed: u64) -> Vec<TestMatrix> {
+/// Shared suite builder: `per_class` matrices per class per size, with
+/// one seed-mixing formula and naming scheme for every suite flavour.
+fn suite_for(
+    classes: &[ProblemClass],
+    sizes: &[usize],
+    per_class: usize,
+    seed: u64,
+) -> Vec<TestMatrix> {
     let mut out = Vec::new();
     for &n in sizes {
-        for &class in &ProblemClass::ALL {
+        for &class in classes {
             for rep in 0..per_class {
                 let s = seed
                     .wrapping_mul(0x9e3779b97f4a7c15)
@@ -305,6 +391,20 @@ pub fn test_suite(sizes: &[usize], per_class: usize, seed: u64) -> Vec<TestMatri
         }
     }
     out
+}
+
+/// Build a test suite mirroring the paper's class mix at a scaled-down
+/// size. `sizes` are target dimensions; `per_class` matrices per class per
+/// size.
+pub fn test_suite(sizes: &[usize], per_class: usize, seed: u64) -> Vec<TestMatrix> {
+    suite_for(&ProblemClass::ALL, sizes, per_class, seed)
+}
+
+/// Build the unsymmetric evaluation suite (ConvDiff ∪ Circuit) mirroring
+/// [`test_suite`]'s shape: `per_class` matrices per class per size,
+/// deterministic in `seed`. These matrices go through the LU engine.
+pub fn unsymmetric_suite(sizes: &[usize], per_class: usize, seed: u64) -> Vec<TestMatrix> {
+    suite_for(&ProblemClass::UNSYMMETRIC, sizes, per_class, seed)
 }
 
 /// The training mix of the paper (2D3D ∪ Delaunay ∪ FEM over GradeL /
@@ -358,10 +458,43 @@ mod tests {
 
     #[test]
     fn generation_is_deterministic() {
-        for &class in &ProblemClass::ALL {
+        for class in ProblemClass::ALL.iter().chain(&ProblemClass::UNSYMMETRIC) {
             let a = class.generate(150, 5);
             let b = class.generate(150, 5);
             assert_eq!(a, b, "{class:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn unsymmetric_classes_are_value_unsymmetric_dominant() {
+        for &class in &ProblemClass::UNSYMMETRIC {
+            assert_eq!(class.symmetry(), Symmetry::Unsymmetric);
+            let a = class.generate(200, 77);
+            assert!(a.nrows() >= 100, "{class:?} too small");
+            assert!(!a.is_symmetric(1e-12), "{class:?} must be value-unsymmetric");
+            // pattern stays symmetric — the A+Aᵀ LU bound is tight here
+            let t = a.transpose();
+            assert_eq!(a.indptr(), t.indptr(), "{class:?} pattern not symmetric");
+            assert_eq!(a.indices(), t.indices(), "{class:?} pattern not symmetric");
+            assert!(
+                a.diag_dominance_margin() >= 0.0,
+                "{class:?} not (weakly) diagonally dominant"
+            );
+        }
+        for &class in &ProblemClass::ALL {
+            assert_eq!(class.symmetry(), Symmetry::Symmetric);
+        }
+    }
+
+    #[test]
+    fn unsymmetric_suite_covers_both_classes() {
+        let suite = unsymmetric_suite(&[100, 200], 2, 1);
+        assert_eq!(suite.len(), 2 * 2 * 2);
+        for &class in &ProblemClass::UNSYMMETRIC {
+            assert!(suite.iter().any(|t| t.class == class));
+        }
+        for t in &suite {
+            assert!(!t.matrix.is_symmetric(1e-12), "{} symmetric", t.name);
         }
     }
 
@@ -412,8 +545,8 @@ mod tests {
 
     #[test]
     fn labels_roundtrip() {
-        for &c in &ProblemClass::ALL {
-            assert_eq!(ProblemClass::from_label(c.label()), Some(c));
+        for c in ProblemClass::ALL.iter().chain(&ProblemClass::UNSYMMETRIC) {
+            assert_eq!(ProblemClass::from_label(c.label()), Some(*c));
         }
         assert_eq!(ProblemClass::from_label("nope"), None);
     }

@@ -95,6 +95,44 @@ pub fn cfd_stencil_2d(nx: usize, ny: usize, eps: f64, rng: &mut Pcg64) -> Csr {
     coo.to_csr()
 }
 
+/// 2D upwind convection–diffusion stencil (ConvDiff class): 5-point
+/// diffusion plus first-order upwind convection with flow in +x/+y, so the
+/// upstream coupling is strengthened by the local Péclet number while the
+/// downstream one keeps its diffusive weight — a genuinely
+/// **value-unsymmetric** (pattern-symmetric) matrix, the canonical
+/// workload the LU engine exists for. Weakly row-diagonally dominant by
+/// construction (Dirichlet boundary folded into the diagonal), so
+/// threshold pivoting keeps the diagonal and the A+Aᵀ symbolic bound is
+/// tight.
+pub fn convection_diffusion_2d(nx: usize, ny: usize, peclet: f64, rng: &mut Pcg64) -> Csr {
+    assert!(peclet >= 0.0);
+    let n = nx * ny;
+    let idx = |x: usize, y: usize| y * nx + x;
+    let mut coo = Coo::square(n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = idx(x, y);
+            // jittered local Péclet numbers (velocity varies over the field)
+            let cx = peclet * (1.0 + 0.2 * rng.next_f64());
+            let cy = 0.5 * peclet * (1.0 + 0.2 * rng.next_f64());
+            if x > 0 {
+                coo.push(i, idx(x - 1, y), -(1.0 + cx)); // upstream in x
+            }
+            if x + 1 < nx {
+                coo.push(i, idx(x + 1, y), -1.0); // downstream: diffusion only
+            }
+            if y > 0 {
+                coo.push(i, idx(x, y - 1), -(1.0 + cy)); // upstream in y
+            }
+            if y + 1 < ny {
+                coo.push(i, idx(x, y + 1), -1.0);
+            }
+            coo.push(i, i, 4.0 + cx + cy);
+        }
+    }
+    coo.to_csr()
+}
+
 /// 2D heterogeneous-conductivity thermal grid (TP class): 5-point stencil
 /// with lognormal edge conductivities — strong coefficient contrast, the
 /// structure thermal problems show in SuiteSparse.
@@ -197,6 +235,22 @@ mod tests {
         assert!(a.is_symmetric(1e-12));
         // center node (1,1,1) has 6 neighbours
         assert_eq!(a.off_diag_degree(13), 6);
+    }
+
+    #[test]
+    fn convection_diffusion_is_unsymmetric_dominant() {
+        let mut rng = Pcg64::new(21);
+        let a = convection_diffusion_2d(8, 7, 2.0, &mut rng);
+        assert_eq!(a.nrows(), 56);
+        assert!(!a.is_symmetric(1e-12), "upwind scheme must break value symmetry");
+        // pattern stays symmetric (union of the 5-point stencil)
+        let t = a.transpose();
+        assert_eq!(a.indptr(), t.indptr());
+        assert_eq!(a.indices(), t.indices());
+        assert!(a.diag_dominance_margin() >= 0.0);
+        // zero Péclet degenerates to the plain (symmetric) Laplacian values
+        let b = convection_diffusion_2d(8, 7, 0.0, &mut Pcg64::new(21));
+        assert!(b.is_symmetric(1e-12));
     }
 
     #[test]

@@ -7,4 +7,6 @@ pub mod classes;
 pub mod grid;
 pub mod mesh;
 
-pub use classes::{test_suite, training_suite, ProblemClass, TestMatrix};
+pub use classes::{
+    test_suite, training_suite, unsymmetric_suite, ProblemClass, Symmetry, TestMatrix,
+};

@@ -1,11 +1,18 @@
 //! Shared measurement loop: (matrix, method) → fill ratio + timings.
+//!
+//! Kind-generic: each matrix is routed through the factorization its
+//! symmetry calls for — Cholesky (supernodal/up-looking) for the SPD
+//! classes, Gilbert–Peierls LU for the unsymmetric ones — so fill and
+//! factor time are always measured on the factorization the paper's
+//! golden criterion actually refers to.
 
 use std::time::Instant;
 
 use crate::coordinator::Method;
+use crate::factor::lu::{self, LuOptions};
 use crate::factor::supernodal;
-use crate::factor::{cholesky_with_ws, fill_ratio, FactorContext};
-use crate::gen::{ProblemClass, TestMatrix};
+use crate::factor::{cholesky_with_ws, fill_ratio, FactorContext, FactorKind};
+use crate::gen::{ProblemClass, Symmetry, TestMatrix};
 use crate::runtime::{PfmRuntime, Provenance};
 
 /// One (matrix, method) measurement — a row fragment of every table.
@@ -16,14 +23,20 @@ pub struct Record {
     pub matrix: String,
     pub n: usize,
     pub nnz: usize,
+    /// Cholesky rows: the paper's Eq. 15 (fill-ins / nnz(A));
+    /// LU rows: nnz(L+U) / nnz(A)
     pub fill_ratio: f64,
+    /// structural factor nnz: nnz(L) for Cholesky, nnz(L+U) for LU
     pub lnnz: usize,
     /// seconds to compute the permutation
     pub ordering_time: f64,
-    /// seconds for numeric Cholesky of PAPᵀ (the paper's "LU time")
+    /// seconds for the numeric factorization of PAPᵀ (the paper's "LU time")
     pub factor_time: f64,
-    /// numeric kernel the pattern selected ("up-looking" | "supernodal")
+    /// numeric kernel the matrix selected
+    /// ("up-looking" | "supernodal" | "lu-gp")
     pub kernel: &'static str,
+    /// factorization kind ("cholesky" | "lu")
+    pub factor_kind: &'static str,
     pub provenance: Option<Provenance>,
 }
 
@@ -90,24 +103,45 @@ pub fn evaluate_one_with(
     };
     let ordering_time = t0.elapsed().as_secs_f64();
 
+    // the class tag already knows the symmetry — no per-(matrix, method)
+    // transpose/compare pass to re-derive what the generator guarantees
+    let kind = match tm.class.symmetry() {
+        Symmetry::Symmetric => FactorKind::Cholesky,
+        Symmetry::Unsymmetric => FactorKind::Lu,
+    };
     let pap = a.permute_sym(&order);
-    let analysis = ctx.cache.analyze(&pap);
-    let fr = fill_ratio(&pap, &analysis.sym);
-
-    let t1 = Instant::now();
-    let kernel = match &analysis.ssym {
-        Some(ssym) => {
-            supernodal::factorize(&pap, ssym.clone(), &mut ctx.workspace)
-                .map_err(|e| e.to_string())?;
-            "supernodal"
+    let (fr, lnnz, kernel, factor_time) = match kind {
+        FactorKind::Cholesky => {
+            let analysis = ctx.cache.analyze(&pap);
+            let fr = fill_ratio(&pap, &analysis.sym);
+            let t1 = Instant::now();
+            let kernel = match &analysis.ssym {
+                Some(ssym) => {
+                    supernodal::factorize(&pap, ssym.clone(), &mut ctx.workspace)
+                        .map_err(|e| e.to_string())?;
+                    "supernodal"
+                }
+                None => {
+                    cholesky_with_ws(&pap, &analysis.sym, &mut ctx.workspace)
+                        .map_err(|e| e.to_string())?;
+                    "up-looking"
+                }
+            };
+            (fr, analysis.sym.lnnz, kernel, t1.elapsed().as_secs_f64())
         }
-        None => {
-            cholesky_with_ws(&pap, &analysis.sym, &mut ctx.workspace)
+        FactorKind::Lu => {
+            let lsym = ctx.cache.analyze_lu(&pap);
+            let t1 = Instant::now();
+            let f = lu::factorize(&pap, &lsym, LuOptions::default(), &mut ctx.workspace)
                 .map_err(|e| e.to_string())?;
-            "up-looking"
+            (
+                lu::lu_fill_ratio(&pap, &f),
+                f.lu_nnz(),
+                "lu-gp",
+                t1.elapsed().as_secs_f64(),
+            )
         }
     };
-    let factor_time = t1.elapsed().as_secs_f64();
 
     Ok(Record {
         method: method.label(),
@@ -116,10 +150,11 @@ pub fn evaluate_one_with(
         n: a.nrows(),
         nnz: a.nnz(),
         fill_ratio: fr,
-        lnnz: analysis.sym.lnnz,
+        lnnz,
         ordering_time,
         factor_time,
         kernel,
+        factor_kind: kind.label(),
         provenance,
     })
 }
@@ -141,11 +176,11 @@ pub fn mean_where(
 /// CSV emitter (all records, one row each).
 pub fn to_csv(records: &[Record]) -> String {
     let mut s = String::from(
-        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,kernel,provenance\n",
+        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,kernel,factor_kind,provenance\n",
     );
     for r in records {
         s.push_str(&format!(
-            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{},{}\n",
+            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{},{},{}\n",
             r.method,
             r.class.label(),
             r.matrix,
@@ -156,6 +191,7 @@ pub fn to_csv(records: &[Record]) -> String {
             r.ordering_time,
             r.factor_time,
             r.kernel,
+            r.factor_kind,
             match r.provenance {
                 Some(Provenance::Network) => "network",
                 Some(Provenance::SpectralFallback) => "fallback",
@@ -188,6 +224,28 @@ mod tests {
             assert!(r.lnnz >= r.nnz / 2);
         }
         // AMD must beat Natural on average
+        let nat = mean_where(&recs, |r| r.method == "Natural", |r| r.fill_ratio).unwrap();
+        let amd = mean_where(&recs, |r| r.method == "AMD", |r| r.fill_ratio).unwrap();
+        assert!(amd < nat, "amd {amd} vs natural {nat}");
+    }
+
+    #[test]
+    fn evaluates_unsymmetric_suite_through_lu() {
+        let suite = crate::gen::unsymmetric_suite(&[120], 1, 5);
+        let mut rt = PfmRuntime::new("nonexistent-dir-ok3").unwrap();
+        let methods = [
+            Method::Classical(Classical::Natural),
+            Method::Classical(Classical::Amd),
+        ];
+        let recs = evaluate_suite(&suite, &methods, &mut rt, 1);
+        assert_eq!(recs.len(), suite.len() * 2);
+        for r in &recs {
+            assert_eq!(r.factor_kind, "lu", "{:?}", r);
+            assert_eq!(r.kernel, "lu-gp");
+            assert!(r.fill_ratio >= 1.0, "nnz(L+U) ≥ nnz(A): {:?}", r);
+            assert!(r.lnnz >= r.nnz);
+        }
+        // AMD must reduce nnz(L+U) vs Natural on average (paper shape)
         let nat = mean_where(&recs, |r| r.method == "Natural", |r| r.fill_ratio).unwrap();
         let amd = mean_where(&recs, |r| r.method == "AMD", |r| r.fill_ratio).unwrap();
         assert!(amd < nat, "amd {amd} vs natural {nat}");

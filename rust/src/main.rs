@@ -7,7 +7,7 @@
 use std::process::ExitCode;
 
 use pfm_reorder::coordinator::{Method, ReorderService, ServiceConfig};
-use pfm_reorder::factor::fill_ratio_of_order;
+use pfm_reorder::factor::{fill_ratio_of_order, lu_fill_ratio_of_order, FactorKind};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::harness::{fig4, table1, table2, table3};
 use pfm_reorder::order::Classical;
@@ -145,6 +145,11 @@ fn cmd_table2(o: &Opts) -> Result<(), String> {
     table2::write_outputs(&records, &md, &o.out).map_err(|e| e.to_string())?;
     println!("{md}");
     println!("({} records -> {}/table2.csv)", records.len(), o.out);
+    // unsymmetric extension: ConvDiff/Circuit through the LU engine
+    let (urecords, umd) = table2::run_unsymmetric(&cfg, &mut rt);
+    table2::write_outputs_unsymmetric(&urecords, &umd, &o.out).map_err(|e| e.to_string())?;
+    println!("{umd}");
+    println!("({} records -> {}/table2_unsym.csv)", urecords.len(), o.out);
     Ok(())
 }
 
@@ -187,18 +192,9 @@ fn cmd_fig4(o: &Opts) -> Result<(), String> {
 }
 
 fn parse_method(name: &str) -> Result<Method, String> {
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "natural" => Method::Classical(Classical::Natural),
-        "rcm" => Method::Classical(Classical::Rcm),
-        "amd" => Method::Classical(Classical::Amd),
-        "metis" | "nd" => Method::Classical(Classical::Metis),
-        "fiedler" | "spectral" => Method::Classical(Classical::Fiedler),
-        "se" | "s_e" => Method::Learned(Learned::Se),
-        "gpce" => Method::Learned(Learned::Gpce),
-        "udno" => Method::Learned(Learned::Udno),
-        "pfm" => Method::Learned(Learned::Pfm),
-        other => return Err(format!("unknown method `{other}`")),
-    })
+    // single source of truth: labels live in Classical::label /
+    // Learned::label, and Method::from_label inverts them (plus aliases)
+    Method::from_label(name).ok_or_else(|| format!("unknown method `{name}`"))
 }
 
 fn cmd_order(o: &Opts) -> Result<(), String> {
@@ -207,24 +203,50 @@ fn cmd_order(o: &Opts) -> Result<(), String> {
         .first()
         .ok_or("usage: pfm-reorder order <file.mtx> [--method PFM]")?;
     let a = read_matrix_market(path).map_err(|e| e.to_string())?;
-    let a = if a.is_symmetric(1e-10) { a } else { a.symmetrize() };
+    let kind = FactorKind::for_matrix(&a);
+    // the fill is always measured on the original matrix (through the
+    // factorization its symmetry calls for), but the ordering methods —
+    // Fiedler's Lanczos and the learned networks in particular — assume
+    // symmetric edge weights, so any unsymmetric input is ordered on its
+    // symmetrized (A+Aᵀ)/2 proxy
+    let proxy = match kind {
+        FactorKind::Cholesky => None,
+        FactorKind::Lu => Some(a.symmetrize()),
+    };
+    let graph = proxy.as_ref().unwrap_or(&a);
     let method = parse_method(o.method.as_deref().unwrap_or("pfm"))?;
     let mut rt = o.runtime()?;
     let t0 = std::time::Instant::now();
     let order = match method {
-        Method::Classical(c) => c.order(&a),
+        Method::Classical(c) => c.order(graph),
         Method::Learned(l) => {
-            l.order(&mut rt, &a, o.seed.unwrap_or(42)).map_err(|e| e.to_string())?.0
+            l.order(&mut rt, graph, o.seed.unwrap_or(42)).map_err(|e| e.to_string())?.0
         }
     };
     let dt = t0.elapsed().as_secs_f64();
-    let natural = fill_ratio_of_order(&a, &(0..a.nrows()).collect::<Vec<_>>());
-    let reordered = fill_ratio_of_order(&a, &order);
+    let natural_order: Vec<usize> = (0..a.nrows()).collect();
+    // numeric LU fill with the same fallback policy as the service's
+    // eval_fill: a singular pivot sequence degrades to the structural
+    // A+Aᵀ bound instead of failing the whole command
+    let lu_fill = |order: &[usize]| -> f64 {
+        lu_fill_ratio_of_order(&a, order).unwrap_or_else(|_| {
+            let pap = a.permute_sym(order);
+            pfm_reorder::factor::analyze_lu(&pap).lu_nnz_bound as f64 / pap.nnz() as f64
+        })
+    };
+    let (natural, reordered) = match kind {
+        FactorKind::Cholesky => (
+            fill_ratio_of_order(&a, &natural_order),
+            fill_ratio_of_order(&a, &order),
+        ),
+        FactorKind::Lu => (lu_fill(&natural_order), lu_fill(&order)),
+    };
     println!(
-        "matrix {}x{} nnz={} | {}: fill ratio {:.3} (natural {:.3}) ordering {:.1} ms",
+        "matrix {}x{} nnz={} [{}] | {}: fill ratio {:.3} (natural {:.3}) ordering {:.1} ms",
         a.nrows(),
         a.ncols(),
         a.nnz(),
+        kind.label(),
         method.label(),
         reordered,
         natural,

@@ -52,6 +52,24 @@ impl Classical {
         }
     }
 
+    /// Parse from the table label (case-insensitive; accepts the `nd` and
+    /// `spectral` CLI aliases). Inverse of [`label`](Self::label) — the
+    /// label strings live only there.
+    pub fn from_label(s: &str) -> Option<Classical> {
+        Classical::ALL
+            .into_iter()
+            .find(|c| c.label().eq_ignore_ascii_case(s))
+            .or_else(|| {
+                if s.eq_ignore_ascii_case("nd") {
+                    Some(Classical::Metis)
+                } else if s.eq_ignore_ascii_case("spectral") {
+                    Some(Classical::Fiedler)
+                } else {
+                    None
+                }
+            })
+    }
+
     /// Compute the elimination order for `a`.
     pub fn order(&self, a: &Csr) -> Vec<usize> {
         match self {

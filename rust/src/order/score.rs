@@ -6,21 +6,24 @@
 
 /// Argsort of node scores (ascending; ties broken by node index so the
 /// result is deterministic). `order[k]` = node eliminated k-th.
+///
+/// Uses `f64::total_cmp`, so NaN scores order deterministically too
+/// (negative NaN first, positive NaN last) instead of collapsing to a
+/// comparator-dependent "equal" — a degenerate network output still
+/// produces the same permutation on every run.
 pub fn order_from_scores(scores: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&i, &j| {
-        scores[i]
-            .partial_cmp(&scores[j])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(i.cmp(&j))
-    });
+    idx.sort_by(|&i, &j| scores[i].total_cmp(&scores[j]).then(i.cmp(&j)));
     idx
 }
 
-/// f32 variant (network outputs are f32).
+/// f32 variant (network outputs are f32). Sorts the f32 scores directly —
+/// no per-call f64 widening allocation on the inference hot path; the
+/// order matches the f64 variant exactly because f32 → f64 is monotone.
 pub fn order_from_scores_f32(scores: &[f32]) -> Vec<usize> {
-    let s: Vec<f64> = scores.iter().map(|&x| x as f64).collect();
-    order_from_scores(&s)
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&i, &j| scores[i].total_cmp(&scores[j]).then(i.cmp(&j)));
+    idx
 }
 
 /// Rank of each node under a score vector: `rank[u]` = position of u.
@@ -54,6 +57,15 @@ mod tests {
     fn handles_nan_without_panicking() {
         let order = order_from_scores(&[f64::NAN, 1.0, 0.0]);
         check_permutation(&order).unwrap();
+    }
+
+    #[test]
+    fn nan_ordering_is_deterministic_total_order() {
+        // total_cmp: -NaN < -inf < finite < +inf < +NaN
+        let order = order_from_scores(&[f64::NAN, 1.0, -f64::NAN, f64::NEG_INFINITY]);
+        assert_eq!(order, vec![2, 3, 1, 0]);
+        let order32 = order_from_scores_f32(&[f32::NAN, 1.0, -f32::NAN, f32::NEG_INFINITY]);
+        assert_eq!(order32, vec![2, 3, 1, 0]);
     }
 
     #[test]

@@ -38,6 +38,19 @@ pub enum Learned {
 impl Learned {
     pub const TABLE2: [Learned; 4] = [Learned::Se, Learned::Gpce, Learned::Udno, Learned::Pfm];
 
+    /// Every learned variant (table rows + ablations) — the single list
+    /// `from_label` and the consistency tests iterate, so adding a
+    /// variant without updating it is a compile error here, not a silent
+    /// parse failure.
+    pub const ALL: [Learned; 6] = [
+        Learned::Se,
+        Learned::Gpce,
+        Learned::Udno,
+        Learned::Pfm,
+        Learned::PfmRandinit,
+        Learned::PfmGunet,
+    ];
+
     /// Artifact file prefix.
     pub fn variant(&self) -> &'static str {
         match self {
@@ -60,6 +73,16 @@ impl Learned {
             Learned::PfmRandinit => "randinit+MgGNN+FactLoss",
             Learned::PfmGunet => "S_e+GUnet+PFM",
         }
+    }
+
+    /// Parse from the table label or the artifact variant name
+    /// (case-insensitive; accepts the `se` CLI alias for `S_e`). Inverse
+    /// of [`label`](Self::label)/[`variant`](Self::variant) — the strings
+    /// live only there.
+    pub fn from_label(s: &str) -> Option<Learned> {
+        Learned::ALL
+            .into_iter()
+            .find(|l| l.label().eq_ignore_ascii_case(s) || l.variant().eq_ignore_ascii_case(s))
     }
 
     /// Compute the ordering; returns (order, provenance).
@@ -88,16 +111,11 @@ mod tests {
 
     #[test]
     fn labels_and_variants_are_consistent() {
-        for m in [
-            Learned::Se,
-            Learned::Gpce,
-            Learned::Udno,
-            Learned::Pfm,
-            Learned::PfmRandinit,
-            Learned::PfmGunet,
-        ] {
+        for m in Learned::ALL {
             assert!(!m.variant().is_empty());
             assert!(!m.label().is_empty());
+            assert_eq!(Learned::from_label(m.label()), Some(m));
+            assert_eq!(Learned::from_label(m.variant()), Some(m));
         }
     }
 

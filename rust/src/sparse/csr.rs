@@ -94,42 +94,81 @@ impl Csr {
 
     /// Transpose (also converts CSR→CSC views).
     pub fn transpose(&self) -> Csr {
-        let mut counts = vec![0usize; self.ncols + 1];
-        for &c in &self.indices {
-            counts[c + 1] += 1;
-        }
-        for i in 0..self.ncols {
-            counts[i + 1] += counts[i];
-        }
-        let indptr = counts.clone();
-        let mut pos = counts;
-        let mut indices = vec![0usize; self.nnz()];
-        let mut data = vec![0.0f64; self.nnz()];
-        for r in 0..self.nrows {
-            let (cols, vals) = self.row(r);
-            for (&c, &v) in cols.iter().zip(vals) {
-                let p = pos[c];
-                indices[p] = r;
-                data[p] = v;
-                pos[c] += 1;
-            }
-        }
+        let (mut indptr, mut indices, mut data) = (Vec::new(), Vec::new(), Vec::new());
+        self.transpose_into(&mut indptr, &mut indices, &mut data);
         Csr::from_parts(self.ncols, self.nrows, indptr, indices, data)
     }
 
+    /// Transpose into caller-owned buffers (the CSC view serving paths
+    /// reuse across factorizations): allocation-free when the buffers'
+    /// capacities already suffice. Output rows are sorted, as
+    /// [`from_parts`](Csr::from_parts) requires.
+    pub fn transpose_into(
+        &self,
+        indptr: &mut Vec<usize>,
+        indices: &mut Vec<usize>,
+        data: &mut Vec<f64>,
+    ) {
+        indptr.clear();
+        indptr.resize(self.ncols + 1, 0);
+        indices.clear();
+        indices.resize(self.nnz(), 0);
+        data.clear();
+        data.resize(self.nnz(), 0.0);
+        for &c in &self.indices {
+            indptr[c + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            indptr[i + 1] += indptr[i];
+        }
+        // scatter using indptr[c] as the running insert position (rows
+        // arrive in ascending order, so each output row stays sorted) …
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let p = indptr[c];
+                indices[p] = r;
+                data[p] = v;
+                indptr[c] += 1;
+            }
+        }
+        // … which leaves indptr shifted one column left; shift it back
+        for c in (1..=self.ncols).rev() {
+            indptr[c] = indptr[c - 1];
+        }
+        indptr[0] = 0;
+    }
+
     /// Pattern-and-value symmetry check (|a_ij − a_ji| ≤ tol·max(1,|a_ij|)).
+    ///
+    /// Allocation-free: every stored entry binary-searches its mirror
+    /// (present-with-matching-value, explicit zeros included), which is
+    /// equivalent to comparing against the full transpose — kind dispatch
+    /// runs this on serving paths, so it must not touch the allocator.
     pub fn is_symmetric(&self, tol: f64) -> bool {
         if self.nrows != self.ncols {
             return false;
         }
-        let t = self.transpose();
-        if t.indptr != self.indptr || t.indices != self.indices {
-            return false;
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c == r {
+                    continue;
+                }
+                let (mcols, mvals) = self.row(c);
+                match mcols.binary_search(&r) {
+                    // negated `<=` so a NaN anywhere fails the check (as
+                    // the old compare-against-transpose version did)
+                    Ok(k) => {
+                        if !((v - mvals[k]).abs() <= tol * 1.0_f64.max(v.abs())) {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false, // mirror entry structurally absent
+                }
+            }
         }
-        self.data
-            .iter()
-            .zip(&t.data)
-            .all(|(a, b)| (a - b).abs() <= tol * 1.0_f64.max(a.abs()))
+        true
     }
 
     /// Symmetrize: (A + Aᵀ)/2 on the union pattern.

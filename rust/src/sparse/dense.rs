@@ -61,6 +61,88 @@ impl Dense {
         Ok(l)
     }
 
+    /// Dense LU without pivoting (Doolittle): A = L·U with unit-lower L.
+    /// Reference oracle for the sparse LU's no-pivot path. Errors on a
+    /// (near-)zero pivot.
+    pub fn lu_nopivot(&self) -> Result<(Dense, Dense), String> {
+        let n = self.n;
+        let mut l = Dense::zeros(n);
+        let mut u = Dense::zeros(n);
+        for i in 0..n {
+            l.set(i, i, 1.0);
+        }
+        for j in 0..n {
+            for i in 0..=j {
+                let mut s = self.get(i, j);
+                for k in 0..i {
+                    s -= l.get(i, k) * u.get(k, j);
+                }
+                u.set(i, j, s);
+            }
+            let piv = u.get(j, j);
+            if piv.abs() < 1e-300 {
+                return Err(format!("zero pivot at column {j}"));
+            }
+            for i in (j + 1)..n {
+                let mut s = self.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * u.get(k, j);
+                }
+                l.set(i, j, s / piv);
+            }
+        }
+        Ok((l, u))
+    }
+
+    /// Dense LU with partial pivoting: P·A = L·U. Returns (L, U, perm)
+    /// with `perm[k]` = original row pivoted at step k. Reference oracle
+    /// for the sparse LU under `tau = 1.0`.
+    pub fn lu_partial_pivot(&self) -> Result<(Dense, Dense, Vec<usize>), String> {
+        let n = self.n;
+        let mut a = self.clone(); // working copy, row-swapped in place
+        let mut perm: Vec<usize> = (0..n).collect();
+        for j in 0..n {
+            // pivot search in column j at/below the diagonal
+            let mut best = j;
+            for i in (j + 1)..n {
+                if a.get(i, j).abs() > a.get(best, j).abs() {
+                    best = i;
+                }
+            }
+            if a.get(best, j).abs() < 1e-300 {
+                return Err(format!("singular at column {j}"));
+            }
+            if best != j {
+                perm.swap(j, best);
+                for c in 0..n {
+                    let t = a.get(j, c);
+                    a.set(j, c, a.get(best, c));
+                    a.set(best, c, t);
+                }
+            }
+            let piv = a.get(j, j);
+            for i in (j + 1)..n {
+                let m = a.get(i, j) / piv;
+                a.set(i, j, m);
+                for c in (j + 1)..n {
+                    a.set(i, c, a.get(i, c) - m * a.get(j, c));
+                }
+            }
+        }
+        let mut l = Dense::zeros(n);
+        let mut u = Dense::zeros(n);
+        for i in 0..n {
+            l.set(i, i, 1.0);
+            for c in 0..i {
+                l.set(i, c, a.get(i, c));
+            }
+            for c in i..n {
+                u.set(i, c, a.get(i, c));
+            }
+        }
+        Ok((l, u, perm))
+    }
+
     /// Count entries of the lower triangle (incl. diagonal) with |x| > tol.
     pub fn tril_nnz(&self, tol: f64) -> usize {
         let mut count = 0;
@@ -156,6 +238,47 @@ mod tests {
         let y = l.solve_lower(&b);
         let x = l.solve_lower_transpose(&y);
         assert_vec_close(&a.matvec(&x), &b, 1e-12);
+    }
+
+    #[test]
+    fn lu_nopivot_reconstructs() {
+        let a = Dense::from_rows(&[
+            vec![4.0, 2.0, 1.0],
+            vec![-1.0, 5.0, 0.5],
+            vec![0.0, 1.5, 3.0],
+        ]);
+        let (l, u) = a.lu_nopivot().unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.get(i, k) * u.get(k, j);
+                }
+                assert!((s - a.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        assert_eq!(l.get(0, 0), 1.0);
+        assert_eq!(u.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn lu_partial_pivot_reconstructs_permuted() {
+        let a = Dense::from_rows(&[
+            vec![0.0, 2.0, 1.0],
+            vec![3.0, 1.0, 0.5],
+            vec![1.0, 1.5, 3.0],
+        ]);
+        let (l, u, perm) = a.lu_partial_pivot().unwrap();
+        assert_ne!(perm, vec![0, 1, 2], "pivoting must fire (zero a00)");
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.get(i, k) * u.get(k, j);
+                }
+                assert!((s - a.get(perm[i], j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -2,10 +2,11 @@
 //! mini-proptest harness (`util::check::forall`). Each property runs over
 //! dozens of deterministic random instances; failures report the seed.
 
+use pfm_reorder::factor::lu::{self, LuOptions};
 use pfm_reorder::factor::{
-    analyze, cholesky_with, factor_flops, fill_ratio_of_order, supernodal,
+    analyze, cholesky_with, factor_flops, fill_ratio_of_order, supernodal, FactorWorkspace,
 };
-use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::gen::{ProblemClass, Symmetry};
 use pfm_reorder::graph::Graph;
 use pfm_reorder::order::{amd, nested_dissection_with, order_from_scores, rcm, Classical};
 use pfm_reorder::sparse::{Coo, Csr, Dense};
@@ -169,6 +170,176 @@ fn prop_supernodal_matches_uplooking_on_problem_classes() {
         // exercise both natural and AMD orderings of every class
         assert_kernels_agree(&a)?;
         assert_kernels_agree(&a.permute_sym(&amd(&a)))
+    });
+}
+
+/// Every problem class (symmetric and unsymmetric) is diagonally dominant,
+/// so threshold pivoting keeps the diagonal and the sparse LU must
+/// reproduce the dense no-pivot reference entrywise to 1e-10 — under both
+/// the natural and the AMD ordering. Symmetric classes must additionally
+/// agree with Cholesky's fill count (nnz(L+U) = 2·lnnz − n).
+fn assert_lu_matches_dense(a: &Csr, class: ProblemClass) -> Result<(), String> {
+    let lsym = lu::analyze_lu(a);
+    let f = lu::factorize(a, &lsym, LuOptions::default(), &mut FactorWorkspace::new())
+        .map_err(|e| format!("{class:?}: {e}"))?;
+    if !f.no_pivoting() {
+        return Err(format!("{class:?}: pivoting fired on a dominant matrix"));
+    }
+    let (dl, du) = Dense::from_rows(&a.to_dense())
+        .lu_nopivot()
+        .map_err(|e| format!("{class:?}: dense LU: {e}"))?;
+    let n = a.nrows();
+    let scale = a.data().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for j in 0..n {
+        if (f.udiag()[j] - du.get(j, j)).abs() > 1e-10 * scale {
+            return Err(format!(
+                "{class:?}: U[{j}][{j}] {} vs dense {}",
+                f.udiag()[j],
+                du.get(j, j)
+            ));
+        }
+        let (rows, vals) = f.l_col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            if (v - dl.get(i, j)).abs() > 1e-10 * scale.max(v.abs()) {
+                return Err(format!("{class:?}: L[{i}][{j}] {v} vs {}", dl.get(i, j)));
+            }
+        }
+        let (rows, vals) = f.u_col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            if (v - du.get(i, j)).abs() > 1e-10 * scale.max(v.abs()) {
+                return Err(format!("{class:?}: U[{i}][{j}] {v} vs {}", du.get(i, j)));
+            }
+        }
+    }
+    if class.symmetry() == Symmetry::Symmetric {
+        let sym = analyze(a);
+        if f.lu_nnz() != 2 * sym.lnnz - n {
+            return Err(format!(
+                "{class:?}: LU nnz {} disagrees with Cholesky fill {}",
+                f.lu_nnz(),
+                2 * sym.lnnz - n
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_lu_matches_dense_reference_on_all_classes() {
+    let classes: Vec<ProblemClass> = ProblemClass::ALL
+        .iter()
+        .chain(&ProblemClass::UNSYMMETRIC)
+        .copied()
+        .collect();
+    forall(16, |rng| {
+        let class = classes[rng.next_below(classes.len())];
+        let n = 40 + rng.next_below(60);
+        let a = class.generate(n, rng.next_u64());
+        assert_lu_matches_dense(&a, class)?;
+        assert_lu_matches_dense(&a.permute_sym(&amd(&a)), class)
+    });
+}
+
+#[test]
+fn prop_lu_solves_and_orderings_reduce_fill_on_unsymmetric_classes() {
+    forall(10, |rng| {
+        let class = ProblemClass::UNSYMMETRIC[rng.next_below(2)];
+        let n = 80 + rng.next_below(140);
+        let a = class.generate(n, rng.next_u64());
+        let n = a.nrows();
+        let f = lu::lu(&a).map_err(|e| e.to_string())?;
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = f.solve(&b);
+        let err: f64 = x
+            .iter()
+            .zip(&xt)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt();
+        if err > 1e-6 {
+            return Err(format!("{class:?}: LU solve error {err}"));
+        }
+        // AMD must not lose to Natural by more than noise on LU fill
+        let nat = lu::lu_fill_ratio_of_order(&a, &(0..n).collect::<Vec<_>>())
+            .map_err(|e| e.to_string())?;
+        let amd_fill = lu::lu_fill_ratio_of_order(&a, &amd(&a)).map_err(|e| e.to_string())?;
+        if amd_fill > nat * 1.3 + 0.5 {
+            return Err(format!("{class:?}: amd LU fill {amd_fill} ≫ natural {nat}"));
+        }
+        Ok(())
+    });
+}
+
+/// Random *structurally* unsymmetric matrix — transpose/symmetrize
+/// properties are only meaningful when Aᵀ ≠ A.
+fn random_unsym_pattern(rng: &mut Pcg64) -> Csr {
+    let n = 10 + rng.next_below(50);
+    let mut coo = Coo::square(n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + rng.next_f64());
+    }
+    for _ in 0..(3 * n) {
+        let i = rng.next_below(n);
+        let j = rng.next_below(n);
+        if i != j {
+            coo.push(i, j, rng.next_gaussian());
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_transpose_roundtrips_and_commutes_with_permutation() {
+    forall(25, |rng| {
+        let a = random_unsym_pattern(rng);
+        let n = a.nrows();
+        if a.transpose().transpose() != a {
+            return Err("transpose not an involution".into());
+        }
+        let p = rng.permutation(n);
+        // P·Aᵀ·Pᵀ == (P·A·Pᵀ)ᵀ
+        if a.transpose().permute_sym(&p) != a.permute_sym(&p).transpose() {
+            return Err("transpose does not commute with permute_sym".into());
+        }
+        // is_symmetric agrees with the literal definition A == Aᵀ
+        let sym_lit = a.transpose() == a;
+        if a.is_symmetric(1e-12) != sym_lit {
+            return Err("is_symmetric disagrees with A == Aᵀ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetrize_and_is_symmetric_under_permutation() {
+    forall(20, |rng| {
+        // pattern-symmetric but value-unsymmetric matrix
+        let a = ProblemClass::Circuit.generate(60 + rng.next_below(80), rng.next_u64());
+        let n = a.nrows();
+        if a.is_symmetric(1e-12) {
+            return Err("circuit class must be value-unsymmetric".into());
+        }
+        let s = a.symmetrize();
+        if !s.is_symmetric(1e-12) {
+            return Err("symmetrize(a) not symmetric".into());
+        }
+        // idempotent on symmetric inputs and permutation-equivariant
+        if s.symmetrize() != s {
+            return Err("symmetrize not idempotent".into());
+        }
+        let p = rng.permutation(n);
+        if a.permute_sym(&p).symmetrize() != s.permute_sym(&p) {
+            return Err("symmetrize does not commute with permute_sym".into());
+        }
+        // permutation preserves (a)symmetry
+        if a.permute_sym(&p).is_symmetric(1e-12) {
+            return Err("permutation must preserve value-asymmetry".into());
+        }
+        if !s.permute_sym(&p).is_symmetric(1e-12) {
+            return Err("permutation must preserve symmetry".into());
+        }
+        Ok(())
     });
 }
 

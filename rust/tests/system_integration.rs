@@ -129,6 +129,40 @@ fn full_pipeline_order_factor_solve_all_methods() {
 }
 
 #[test]
+fn full_pipeline_unsymmetric_order_factor_solve() {
+    // the same downstream workflow on the unsymmetric classes: the service
+    // computes the ordering + LU fill, the direct API factors through the
+    // Gilbert–Peierls engine and solves to machine accuracy
+    let svc = service();
+    let mut rng = Pcg64::new(12);
+    for &class in &ProblemClass::UNSYMMETRIC {
+        let a = class.generate(220, 4);
+        let n = a.nrows();
+        let res = svc
+            .reorder_blocking_with_fill(a.clone(), Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        check_permutation(&res.order).unwrap();
+        assert_eq!(res.factor_kind, Some("lu"), "{class:?}");
+        let lu_fill = res.fill_ratio.expect("fill requested");
+        assert!(lu_fill >= 1.0, "{class:?}: nnz(L+U)/nnz(A) = {lu_fill}");
+
+        let solver = DirectSolver::prepare(&a, res.order, 0.0)
+            .unwrap_or_else(|e| panic!("{class:?}: {e}"));
+        assert_eq!(solver.stats.factor_kind, "lu");
+        assert!(
+            (solver.stats.fill_ratio - lu_fill).abs() < 1e-12,
+            "{class:?}: service fill {lu_fill} vs solver fill {}",
+            solver.stats.fill_ratio
+        );
+        let xt: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b = a.matvec(&xt);
+        let x = solver.solve(&b);
+        let resid = DirectSolver::residual(&a, &x, &b);
+        assert!(resid < 1e-9, "{class:?}: residual {resid}");
+    }
+}
+
+#[test]
 fn reordering_improves_over_shuffled_natural_everywhere() {
     // sanity across classes: AMD ordering never loses to a random shuffle
     let mut rng = Pcg64::new(77);
