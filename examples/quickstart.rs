@@ -1,6 +1,6 @@
 //! Quickstart: generate a sparse SPD system, reorder it with PFM (network
-//! artifact if built, spectral fallback otherwise), factorize, and compare
-//! fill against the natural ordering.
+//! artifact if built, the native in-Rust ADMM optimizer otherwise),
+//! factorize, and compare fill against the natural ordering.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -16,7 +16,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let a = ProblemClass::TwoDThreeD.generate(400, 42);
     println!("matrix: {}x{}, {} nonzeros", a.nrows(), a.ncols(), a.nnz());
 
-    // 2. the PFM reordering network (falls back to spectral if no artifact)
+    // 2. the PFM reordering network (native ADMM optimizer if no artifact)
     let mut rt = PfmRuntime::new("artifacts")?;
     let (order, provenance) = Learned::Pfm.order(&mut rt, &a, 7)?;
     println!("PFM ordering via {provenance:?}");

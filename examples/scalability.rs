@@ -43,6 +43,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 r.ordering_time * 1e3,
                 match r.provenance {
                     Some(pfm_reorder::runtime::Provenance::SpectralFallback) => "  (fallback)",
+                    Some(pfm_reorder::runtime::Provenance::NativeOptimizer) => "  (native)",
                     _ => "",
                 }
             );

@@ -18,6 +18,7 @@ use pfm_reorder::factor::{
 use pfm_reorder::gen::grid::{convection_diffusion_2d, laplacian_2d, laplacian_3d};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm};
+use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
 use pfm_reorder::util::json::Json;
 use pfm_reorder::util::rng::Pcg64;
 use pfm_reorder::util::timer::{Bench, Stats};
@@ -129,6 +130,25 @@ fn main() {
         );
     }
 
+    // --- native PFM optimizer: the serving-path ordering at n=1024 ---
+    // multilevel (coarsen → ADMM → prolong → SPSA refinement) under a
+    // serving-sized iteration budget; paired with the fill-vs-AMD ratio so
+    // the baseline tracks ordering quality, not just speed
+    let grid1k = laplacian_2d(32, 32); // n=1024
+    let pfm_budget = OptBudget { outer: 2, refine: 16, time_ms: None };
+    bench(&mut results, "pfm_native_order_n1024", warm, it(3), || {
+        PfmOptimizer::new(pfm_budget, 7).optimize(&grid1k)
+    });
+    let pfm_rep = PfmOptimizer::new(pfm_budget, 7).optimize(&grid1k);
+    let pfm_lnnz = analyze(&grid1k.permute_sym(&pfm_rep.order)).lnnz;
+    let amd_lnnz = analyze(&grid1k.permute_sym(&amd(&grid1k))).lnnz;
+    let pfm_fill_vs_amd = pfm_lnnz as f64 / amd_lnnz as f64;
+    println!(
+        "  PFM native nnz(L) on 2d_n1024: {pfm_lnnz} (spectral init {:.0}) vs AMD {amd_lnnz} \
+         (ratio {pfm_fill_vs_amd:.2}); {} evals",
+        pfm_rep.init_objective, pfm_rep.evals
+    );
+
     bench(&mut results, "order_amd/2d_n4096", warm, it(5), || amd(&grid2d));
     bench(&mut results, "order_amd/sp_n1728", warm, it(5), || amd(&sp));
     bench(&mut results, "order_rcm/2d_n4096", warm, it(10), || rcm(&grid2d));
@@ -153,6 +173,7 @@ fn main() {
         .set("smoke", smoke)
         .set("supernodal_speedup_amd_3d_n2744", speedup_3d)
         .set("lu_amd_speedup_convdiff_n4096", lu_speedup)
+        .set("pfm_fill_vs_amd_n1024", pfm_fill_vs_amd)
         .set("ns_per_iter", ns_per_iter);
     let path = "BENCH_hotpaths.json";
     match std::fs::write(path, out.to_string()) {

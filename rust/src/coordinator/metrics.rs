@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::runtime::Provenance;
 use crate::util::json::Json;
 use crate::util::timer::Stats;
 
@@ -18,6 +19,10 @@ struct Inner {
     /// batch sizes observed by the network executor
     batch_sizes: Vec<usize>,
     fallbacks: usize,
+    /// orderings served by the native in-Rust PFM optimizer — with
+    /// `fallbacks` this makes spectral-fallback rows distinguishable from
+    /// native-PFM rows in the exported JSON
+    native_opts: usize,
     /// symbolic-cache outcomes for fill evaluations (serving steady state:
     /// hits ≫ misses)
     symbolic_hits: usize,
@@ -35,15 +40,26 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record(&self, method: &'static str, latency: f64, batch: usize, fallback: bool) {
+    /// Record one completed request. `provenance` is `None` for classical
+    /// methods; learned methods report where their ordering came from so
+    /// the fallback / native-optimizer counters stay exact.
+    pub fn record(
+        &self,
+        method: &'static str,
+        latency: f64,
+        batch: usize,
+        provenance: Option<Provenance>,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.latencies.entry(method).or_default().push(latency);
         *m.completed.entry(method).or_default() += 1;
         if batch > 0 {
             m.batch_sizes.push(batch);
         }
-        if fallback {
-            m.fallbacks += 1;
+        match provenance {
+            Some(Provenance::SpectralFallback) => m.fallbacks += 1,
+            Some(Provenance::NativeOptimizer) => m.native_opts += 1,
+            Some(Provenance::Network) | None => {}
         }
     }
 
@@ -61,6 +77,11 @@ impl Metrics {
 
     pub fn fallbacks(&self) -> usize {
         self.inner.lock().unwrap().fallbacks
+    }
+
+    /// Orderings served by the native PFM optimizer.
+    pub fn native_optimized(&self) -> usize {
+        self.inner.lock().unwrap().native_opts
     }
 
     /// Record one symbolic-cache lookup outcome (fill evaluation path).
@@ -121,6 +142,7 @@ impl Metrics {
             .set("completed", self.total_completed())
             .set("errors", self.errors())
             .set("fallbacks", self.fallbacks())
+            .set("native_optimizer", self.native_optimized())
             .set("mean_batch", self.mean_batch())
             .set("symbolic_cache_hits", self.symbolic_hits())
             .set("symbolic_cache_misses", self.symbolic_misses())
@@ -135,20 +157,22 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let m = Metrics::new();
-        m.record("PFM", 0.01, 4, false);
-        m.record("PFM", 0.02, 4, false);
-        m.record("AMD", 0.005, 0, false);
-        m.record("PFM", 0.015, 2, true);
+        m.record("PFM", 0.01, 4, Some(Provenance::NativeOptimizer));
+        m.record("PFM", 0.02, 4, Some(Provenance::Network));
+        m.record("AMD", 0.005, 0, None);
+        m.record("S_e", 0.015, 2, Some(Provenance::SpectralFallback));
         m.record_error();
 
         assert_eq!(m.total_completed(), 4);
         assert_eq!(m.errors(), 1);
         assert_eq!(m.fallbacks(), 1);
+        assert_eq!(m.native_optimized(), 1);
         assert!((m.mean_batch() - 10.0 / 3.0).abs() < 1e-9);
         let stats = m.latency_stats();
-        assert_eq!(stats.len(), 2);
+        assert_eq!(stats.len(), 3);
         let json = m.to_json().to_string();
         assert!(json.contains("\"completed\":4"));
+        assert!(json.contains("\"native_optimizer\":1"));
         assert!(json.contains("PFM"));
     }
 }

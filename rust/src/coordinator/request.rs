@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use crate::factor::FactorKind;
 use crate::order::Classical;
+use crate::pfm::OptBudget;
 use crate::runtime::{Learned, Provenance};
 use crate::sparse::Csr;
 
@@ -75,6 +76,10 @@ pub struct ReorderRequest {
     /// the factorization the matrix actually calls for, not on a
     /// Cholesky proxy.
     pub factor_kind: Option<FactorKind>,
+    /// budget for the native PFM optimizer when a learned request takes
+    /// that path: `None` uses the service's configured serving budget, so
+    /// serving latency stays bounded either way.
+    pub opt_budget: Option<OptBudget>,
     pub submitted: Instant,
     pub respond: mpsc::Sender<ReorderResponse>,
 }
@@ -102,6 +107,9 @@ pub struct ReorderResult {
     /// factorization kind the fill evaluation ran ("cholesky" | "lu");
     /// `None` when no fill evaluation was requested
     pub factor_kind: Option<&'static str>,
+    /// ADMM outer iterations the native PFM optimizer ran (0 for
+    /// classical / network / fallback orderings)
+    pub opt_iters: usize,
 }
 
 #[cfg(test)]

@@ -31,7 +31,8 @@ use crate::coordinator::request::{Method, ReorderRequest, ReorderResponse, Reord
 use crate::factor::lu::{self, LuOptions};
 use crate::factor::symbolic::fill_ratio;
 use crate::factor::{FactorContext, FactorKind};
-use crate::runtime::{PfmRuntime, Provenance};
+use crate::pfm::OptBudget;
+use crate::runtime::PfmRuntime;
 use crate::sparse::Csr;
 
 /// Service configuration.
@@ -47,6 +48,11 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     /// artifact directory for the PJRT runtime
     pub artifact_dir: String,
+    /// default budget for native-PFM orderings (requests may override via
+    /// `ReorderRequest::opt_budget`); the serving default is bounded in
+    /// both iterations and wall clock so one optimizer run can never
+    /// stall the network thread
+    pub opt_budget: OptBudget,
 }
 
 impl Default for ServiceConfig {
@@ -57,6 +63,7 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(2),
             queue_capacity: 256,
             artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
+            opt_budget: OptBudget::serving(),
         }
     }
 }
@@ -154,7 +161,7 @@ impl ReorderService {
                             } else {
                                 (None, None)
                             };
-                            metrics.record(method.label(), latency, 0, false);
+                            metrics.record(method.label(), latency, 0, None);
                             let _ = req.respond.send(ReorderResponse {
                                 id: req.id,
                                 result: Ok(ReorderResult {
@@ -165,6 +172,7 @@ impl ReorderService {
                                     batch_size: 0,
                                     fill_ratio: fill,
                                     factor_kind: fill_kind,
+                                    opt_iters: 0,
                                 }),
                             });
                         }
@@ -226,6 +234,22 @@ impl ReorderService {
         eval_fill: bool,
         factor_kind: Option<FactorKind>,
     ) -> mpsc::Receiver<ReorderResponse> {
+        self.submit_with_budget(matrix, method, seed, eval_fill, factor_kind, None)
+    }
+
+    /// Fullest submission: additionally pins the native-PFM optimizer
+    /// budget for this request (`None` uses the service's configured
+    /// serving budget). Lets latency-sensitive callers trade ordering
+    /// quality for response time per request.
+    pub fn submit_with_budget(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+        factor_kind: Option<FactorKind>,
+        opt_budget: Option<OptBudget>,
+    ) -> mpsc::Receiver<ReorderResponse> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = ReorderRequest {
@@ -235,6 +259,7 @@ impl ReorderService {
             seed,
             eval_fill,
             factor_kind,
+            opt_budget,
             submitted: Instant::now(),
             respond: rtx,
         };
@@ -386,14 +411,15 @@ fn network_loop(
             let batch_size = reqs.len();
             for req in reqs {
                 let Method::Learned(l) = req.method else { unreachable!() };
-                match l.order(&mut runtime, &req.matrix, req.seed) {
-                    Ok((order, prov)) => {
+                let budget = req.opt_budget.unwrap_or(cfg.opt_budget);
+                match l.order_detailed(&mut runtime, &req.matrix, req.seed, Some(budget)) {
+                    Ok(out) => {
                         // latency before fill evaluation (see worker note)
                         let latency = req.submitted.elapsed().as_secs_f64();
                         let (fill, fill_kind) = if req.eval_fill {
                             let (f, k) = eval_fill(
                                 &req.matrix,
-                                &order,
+                                &out.order,
                                 req.factor_kind,
                                 &mut fctx,
                                 &metrics,
@@ -402,22 +428,18 @@ fn network_loop(
                         } else {
                             (None, None)
                         };
-                        metrics.record(
-                            l.label(),
-                            latency,
-                            batch_size,
-                            prov == Provenance::SpectralFallback,
-                        );
+                        metrics.record(l.label(), latency, batch_size, Some(out.provenance));
                         let _ = req.respond.send(ReorderResponse {
                             id: req.id,
                             result: Ok(ReorderResult {
-                                order,
+                                order: out.order,
                                 method: l.label(),
-                                provenance: Some(prov),
+                                provenance: Some(out.provenance),
                                 latency,
                                 batch_size,
                                 fill_ratio: fill,
                                 factor_kind: fill_kind,
+                                opt_iters: out.opt_iters,
                             }),
                         });
                     }
@@ -529,6 +551,42 @@ mod tests {
             .reorder_blocking(laplacian_2d(6, 6), Method::Classical(Classical::Amd), 1)
             .unwrap();
         assert_eq!(r3.factor_kind, None);
+    }
+
+    #[test]
+    fn pfm_requests_run_native_optimizer_within_budget() {
+        // the serving-budget semantics of the native path: a PFM request
+        // without artifacts must be served by the native optimizer, honor
+        // the per-request budget, and come back within a bounded latency.
+        // A nonexistent artifact dir pins the no-artifact path even on
+        // checkouts where `make artifacts` has run.
+        let service = ReorderService::start(ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-svc-pfm".into(),
+            ..Default::default()
+        });
+        let a = laplacian_2d(18, 18); // n = 324 → multilevel path
+        let budget = OptBudget { outer: 2, refine: 8, time_ms: Some(500) };
+        let t0 = Instant::now();
+        let rx = service.submit_with_budget(
+            a,
+            Method::Learned(Learned::Pfm),
+            1,
+            true,
+            None,
+            Some(budget),
+        );
+        let res = rx.recv().expect("response").result.expect("ok");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(res.provenance, Some(crate::runtime::Provenance::NativeOptimizer));
+        assert!(res.opt_iters <= 2, "budget capped outer iters at 2, ran {}", res.opt_iters);
+        check_permutation(&res.order).unwrap();
+        assert!(res.fill_ratio.expect("fill requested") >= 0.0);
+        // latency cap: the compute is budget-bounded (500 ms + at most one
+        // in-flight iteration); the assertion is generous for slow CI
+        assert!(wall < 10.0, "budget-bounded PFM request took {wall:.2}s");
+        assert_eq!(service.metrics.native_optimized(), 1);
+        assert_eq!(service.metrics.fallbacks(), 0);
     }
 
     #[test]

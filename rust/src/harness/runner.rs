@@ -38,6 +38,9 @@ pub struct Record {
     /// factorization kind ("cholesky" | "lu")
     pub factor_kind: &'static str,
     pub provenance: Option<Provenance>,
+    /// ADMM outer iterations the native PFM optimizer ran for this
+    /// ordering (0 for classical / network / fallback rows)
+    pub opt_iters: usize,
 }
 
 /// Evaluate `methods` × `matrices`. Learned methods run through the PJRT
@@ -94,11 +97,11 @@ pub fn evaluate_one_with(
 ) -> Result<Record, String> {
     let a = &tm.matrix;
     let t0 = Instant::now();
-    let (order, provenance) = match method {
-        Method::Classical(c) => (c.order(a), None),
+    let (order, provenance, opt_iters) = match method {
+        Method::Classical(c) => (c.order(a), None, 0),
         Method::Learned(l) => {
-            let (o, p) = l.order(rt, a, seed).map_err(|e| e.to_string())?;
-            (o, Some(p))
+            let out = l.order_detailed(rt, a, seed, None).map_err(|e| e.to_string())?;
+            (out.order, Some(out.provenance), out.opt_iters)
         }
     };
     let ordering_time = t0.elapsed().as_secs_f64();
@@ -156,6 +159,7 @@ pub fn evaluate_one_with(
         kernel,
         factor_kind: kind.label(),
         provenance,
+        opt_iters,
     })
 }
 
@@ -176,11 +180,11 @@ pub fn mean_where(
 /// CSV emitter (all records, one row each).
 pub fn to_csv(records: &[Record]) -> String {
     let mut s = String::from(
-        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,kernel,factor_kind,provenance\n",
+        "method,class,matrix,n,nnz,fill_ratio,lnnz,ordering_time_s,factor_time_s,kernel,factor_kind,provenance,opt_iters\n",
     );
     for r in records {
         s.push_str(&format!(
-            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{},{},{}\n",
+            "{},{},{},{},{},{:.6},{},{:.6},{:.6},{},{},{},{}\n",
             r.method,
             r.class.label(),
             r.matrix,
@@ -192,11 +196,8 @@ pub fn to_csv(records: &[Record]) -> String {
             r.factor_time,
             r.kernel,
             r.factor_kind,
-            match r.provenance {
-                Some(Provenance::Network) => "network",
-                Some(Provenance::SpectralFallback) => "fallback",
-                None => "classical",
-            }
+            r.provenance.map_or("classical", |p| p.label()),
+            r.opt_iters,
         ));
     }
     s

@@ -229,6 +229,7 @@ mod tests {
                 kernel: "up-looking",
                 factor_kind: "cholesky",
                 provenance: None,
+                opt_iters: 0,
             },
             Record {
                 method: "PFM",
@@ -243,6 +244,7 @@ mod tests {
                 kernel: "up-looking",
                 factor_kind: "cholesky",
                 provenance: None,
+                opt_iters: 0,
             },
             Record {
                 method: "AMD",
@@ -257,6 +259,7 @@ mod tests {
                 kernel: "up-looking",
                 factor_kind: "cholesky",
                 provenance: None,
+                opt_iters: 0,
             },
         ];
         let methods = vec![
@@ -270,6 +273,61 @@ mod tests {
         assert!(md.contains("**Headline**"));
         // PFM FR 2.0 vs AMD 3.0 → −33.3%
         assert!(md.contains("-33.3%"), "{md}");
+    }
+
+    #[test]
+    fn native_pfm_beats_spectral_baseline_on_symmetric_suite() {
+        // the PR's acceptance criterion: without artifacts, Learned::Pfm
+        // must (a) report Provenance::NativeOptimizer on every row and
+        // (b) achieve strictly lower mean nnz(L) than the spectral S_e
+        // baseline — ≤ per matrix is guaranteed by the optimizer's
+        // acceptance rule (S_e's ordering IS its init), so the mean is
+        // strict as soon as any matrix improves.
+        use crate::runtime::{Learned, Provenance};
+
+        let cfg = Table2Config { sizes: vec![120, 150], per_class: 1, seed: 0x7AB2E2 };
+        let suite = test_suite(&cfg.sizes, cfg.per_class, cfg.seed);
+        let mut rt = PfmRuntime::new("nonexistent-dir-ok-pfm").unwrap();
+        let methods = [Method::Learned(Learned::Se), Method::Learned(Learned::Pfm)];
+        let records = evaluate_suite(&suite, &methods, &mut rt, cfg.seed);
+        assert_eq!(records.len(), suite.len() * 2);
+        for r in &records {
+            match r.method {
+                "PFM" => {
+                    assert_eq!(r.provenance, Some(Provenance::NativeOptimizer), "{}", r.matrix);
+                    assert!(r.opt_iters > 0, "{}: native PFM must run ADMM iterations", r.matrix);
+                }
+                _ => {
+                    assert_eq!(r.provenance, Some(Provenance::SpectralFallback));
+                    assert_eq!(r.opt_iters, 0);
+                }
+            }
+        }
+        // per-matrix: PFM never exceeds its spectral init
+        for tm in &suite {
+            let se = records
+                .iter()
+                .find(|r| r.method == "S_e" && r.matrix == tm.name)
+                .unwrap();
+            let pfm = records
+                .iter()
+                .find(|r| r.method == "PFM" && r.matrix == tm.name)
+                .unwrap();
+            assert!(
+                pfm.lnnz <= se.lnnz,
+                "{}: PFM lnnz {} above S_e {}",
+                tm.name,
+                pfm.lnnz,
+                se.lnnz
+            );
+        }
+        let se = mean_where(&records, |r| r.method == "S_e", |r| r.lnnz as f64).unwrap();
+        let pfm = mean_where(&records, |r| r.method == "PFM", |r| r.lnnz as f64).unwrap();
+        assert!(pfm < se, "mean nnz(L): PFM {pfm} not strictly below S_e {se}");
+        // provenance lands in the CSV artifact
+        let csv = to_csv(&records);
+        assert!(csv.contains(",native,"), "native provenance missing from CSV:\n{csv}");
+        assert!(csv.contains(",fallback,"));
     }
 
     #[test]

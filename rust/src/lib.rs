@@ -4,8 +4,10 @@
 //! for Sparse Matrix Reordering"** (AAAI 2026). A three-layer system:
 //!
 //! * **L3 (this crate)** — sparse-matrix substrates, baseline reordering
-//!   algorithms, symbolic + numeric Cholesky, a PJRT runtime that executes
-//!   the AOT-compiled PFM network, and an async reordering service.
+//!   algorithms, symbolic + numeric Cholesky, the native in-Rust PFM
+//!   optimizer (`pfm`: instance-wise ADMM + proximal fill-in
+//!   minimization), a PJRT runtime that executes the AOT-compiled PFM
+//!   network, and an async reordering service.
 //! * **L2 (python/compile)** — the PFM reordering network in JAX, trained
 //!   with ADMM + proximal gradient at build time.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the network's hot
@@ -19,6 +21,7 @@ pub mod gen;
 pub mod harness;
 pub mod graph;
 pub mod order;
+pub mod pfm;
 pub mod runtime;
 pub mod sparse;
 pub mod util;

@@ -1,0 +1,422 @@
+//! The ADMM outer loop (paper Algorithm 1, instance-wise) and the
+//! sampled-subgradient refinement pass.
+//!
+//! Per outer iteration, mirroring the build-time Python trainer
+//! (`python/compile/train.py`) with the node scores themselves as the
+//! optimization variable (no network — this is the *native, per-instance*
+//! optimizer the serving path runs):
+//!
+//! 1. **L-update** — `l_steps` norm-clipped gradient steps on the smooth
+//!    part of Eq. 12, then the proximal operator of the ‖L‖₁ term
+//!    (soft-threshold) composed with the tril projection;
+//! 2. **score-update** — gradient steps on the smooth part through the
+//!    Sinkhorn-normalized soft permutation (backprop in `perm`),
+//!    re-standardized after each step (projection onto the scale-invariant
+//!    manifold);
+//! 3. **Γ-update** — dual ascent on the factorization constraint.
+//!
+//! Every outer iteration ends with an **acceptance test on the discrete
+//! golden criterion** (`objective::OrderObjective`): the hard argsort of
+//! the current scores is evaluated and kept only if it improves on the
+//! best-so-far. The reported trace is therefore non-increasing by
+//! construction, and the optimizer can never return an ordering worse
+//! than its init — the property the serving path and the ablation tests
+//! rely on.
+//!
+//! [`refine`] is the large-n workhorse: two-sided SPSA probes of the
+//! discrete objective (`objective::sampled_subgradient`) interleaved with
+//! rank-space segment moves (reverse / relocate a window of the current
+//! ordering), all under the same strict-acceptance rule. It needs only
+//! sparse symbolic work per probe, so it scales with nnz(L) rather than
+//! n² and keeps working far above the dense-window cap.
+
+use std::time::Instant;
+
+use crate::order::order_from_scores;
+use crate::pfm::objective::{
+    conjugate, residual, residual_from, sampled_subgradient, smooth_grad_l, smooth_grad_p,
+    smooth_grad_upstream, smooth_value, DenseWindow, OrderObjective,
+};
+use crate::pfm::perm::{rank_scores, standardize, SoftPerm};
+use crate::util::rng::Pcg64;
+
+/// ADMM + proximal-gradient hyperparameters (defaults mirror the Python
+/// trainer where the two share a knob).
+#[derive(Clone, Debug)]
+pub struct AdmmParams {
+    /// penalty parameter ρ (paper: 1)
+    pub rho: f64,
+    /// kernel width of the soft permutation
+    pub sigma: f64,
+    /// Sinkhorn normalization rounds
+    pub sinkhorn_iters: usize,
+    /// gradient steps per L-update
+    pub l_steps: usize,
+    /// L-update step size
+    pub l_lr: f64,
+    /// gradient-norm clip (both subproblems)
+    pub clip: f64,
+    /// soft-threshold level of the ‖L‖₁ prox
+    pub prox_eta: f64,
+    /// score-update step size
+    pub y_lr: f64,
+    /// gradient steps per score-update
+    pub y_steps: usize,
+    /// scale of the random tril initialization of L
+    pub l_init_scale: f64,
+}
+
+impl Default for AdmmParams {
+    fn default() -> Self {
+        AdmmParams {
+            rho: 1.0,
+            sigma: 0.15,
+            sinkhorn_iters: 8,
+            l_steps: 8,
+            l_lr: 0.05,
+            clip: 10.0,
+            prox_eta: 5e-4,
+            y_lr: 0.15,
+            y_steps: 2,
+            l_init_scale: 0.1,
+        }
+    }
+}
+
+/// Outcome of an ADMM run (or a refinement pass extends the same fields).
+pub struct AdmmOutcome {
+    /// best scores found (standardized; argsort = returned ordering)
+    pub y: Vec<f64>,
+    /// discrete objective of `argsort(y)`
+    pub objective: f64,
+    /// outer iterations actually run (≤ budget; deadline may cut in)
+    pub outer_iters: usize,
+    /// augmented-Lagrangian value per outer iteration (diagnostic)
+    pub aug_lagrangian: Vec<f64>,
+}
+
+fn clip_norm(g: &mut [f64], clip: f64) {
+    let norm = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > clip {
+        let s = clip / norm;
+        for v in g.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+fn soft_threshold_tril(l: &mut [f64], n: usize, eta: f64) {
+    for i in 0..n {
+        for j in 0..n {
+            let v = &mut l[i * n + j];
+            *v = if j > i {
+                0.0
+            } else {
+                v.signum() * (v.abs() - eta).max(0.0)
+            };
+        }
+    }
+}
+
+/// Run the ADMM outer loop on the dense window of `win_src`, accepting on
+/// the discrete objective `obj` (which may evaluate a different matrix —
+/// the multilevel path optimizes a coarse window against the coarse
+/// objective; the unsymmetric path optimizes the symmetrized window
+/// against the true LU objective).
+///
+/// `y` must be standardized; `best_f` is the objective of `argsort(y0)`
+/// (the caller has evaluated the init). `trace` gets the best-so-far
+/// objective appended once per outer iteration.
+#[allow(clippy::too_many_arguments)]
+pub fn admm_optimize(
+    win: &DenseWindow,
+    obj: &mut OrderObjective,
+    y0: &[f64],
+    best_f: f64,
+    params: &AdmmParams,
+    outer: usize,
+    deadline: Option<Instant>,
+    rng: &mut Pcg64,
+    trace: &mut Vec<f64>,
+) -> AdmmOutcome {
+    let n = win.n;
+    assert_eq!(y0.len(), n);
+    let mut y = y0.to_vec();
+    let mut best_y = y.clone();
+    let mut best_f = best_f;
+
+    // L = tril(randn)·scale, Γ = 0 (trainer lines 6-7)
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            l[i * n + j] = params.l_init_scale * rng.next_gaussian();
+        }
+    }
+    let mut gamma = vec![0.0f64; n * n];
+    let mut aug = Vec::with_capacity(outer);
+    let mut iters = 0usize;
+
+    // carried across the iteration boundary: the dual-ascent refresh below
+    // is also the next L-update's permutation (y unchanged in between)
+    let mut sp = SoftPerm::forward(&y, params.sigma, params.sinkhorn_iters);
+    for _ in 0..outer {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            break;
+        }
+        iters += 1;
+
+        // --- L-update: projected clipped gradient steps on the smooth
+        // part, then the ‖·‖₁ prox. P is fixed here, so the O(n³) P A Pᵀ
+        // is hoisted out of the step loop; the gradient is projected onto
+        // the tril constraint set every step so the norm clip and the
+        // descent direction see exactly the matrix the residual scores ---
+        let a_theta = conjugate(&sp.p, &win.a, n);
+        for _ in 0..params.l_steps {
+            let r = residual_from(&a_theta, &l, n);
+            let g = smooth_grad_upstream(&r, &gamma, params.rho);
+            let mut gl = smooth_grad_l(&g, &l, n);
+            for i in 0..n {
+                for gv in &mut gl[i * n + i + 1..(i + 1) * n] {
+                    *gv = 0.0;
+                }
+            }
+            clip_norm(&mut gl, params.clip);
+            for (lv, gv) in l.iter_mut().zip(&gl) {
+                *lv -= params.l_lr * gv;
+            }
+        }
+        soft_threshold_tril(&mut l, n, params.prox_eta);
+
+        // --- score-update: smooth gradient through the Sinkhorn chain
+        // (the first step reuses the carried forward pass — y unchanged) ---
+        for step in 0..params.y_steps {
+            if step > 0 {
+                sp = SoftPerm::forward(&y, params.sigma, params.sinkhorn_iters);
+            }
+            let r = residual(&sp.p, &win.a, &l, n);
+            let g = smooth_grad_upstream(&r, &gamma, params.rho);
+            let gp = smooth_grad_p(&g, &sp.p, &win.a, n);
+            let mut dy = sp.backprop(&gp);
+            clip_norm(&mut dy, params.clip);
+            for (yv, gv) in y.iter_mut().zip(&dy) {
+                *yv -= params.y_lr * gv;
+            }
+            standardize(&mut y);
+        }
+
+        // --- dual ascent with the refreshed permutation ---
+        sp = SoftPerm::forward(&y, params.sigma, params.sinkhorn_iters);
+        let r = residual(&sp.p, &win.a, &l, n);
+        for (gm, rv) in gamma.iter_mut().zip(&r) {
+            *gm += params.rho * rv;
+        }
+        let l1: f64 = l.iter().map(|v| v.abs()).sum();
+        aug.push(l1 + smooth_value(&r, &gamma, params.rho));
+
+        // --- acceptance on the discrete golden criterion ---
+        let order = order_from_scores(&y);
+        let f = obj.eval(&order);
+        if f < best_f {
+            best_f = f;
+            best_y = y.clone();
+        }
+        trace.push(best_f);
+    }
+
+    AdmmOutcome { y: best_y, objective: best_f, outer_iters: iters, aug_lagrangian: aug }
+}
+
+/// Sampled-subgradient refinement: SPSA probes interleaved with rank-space
+/// segment moves, strict acceptance on the discrete objective. Returns the
+/// number of steps run; `y`/`best_f` are updated in place and `trace` gets
+/// one best-so-far entry per step.
+pub fn refine(
+    obj: &mut OrderObjective,
+    y: &mut Vec<f64>,
+    best_f: &mut f64,
+    steps: usize,
+    deadline: Option<Instant>,
+    rng: &mut Pcg64,
+    trace: &mut Vec<f64>,
+) -> usize {
+    let n = y.len();
+    if n < 4 {
+        return 0;
+    }
+    let mut eps = 0.35f64;
+    let mut run = 0usize;
+    for step in 0..steps {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            break;
+        }
+        run += 1;
+        if step % 3 < 2 {
+            // SPSA: two-sided probe + a normalized step along −ĝ
+            let (mut ghat, f_probe, y_probe) = sampled_subgradient(obj, y, eps, rng);
+            let mut improved = false;
+            if f_probe < *best_f {
+                *best_f = f_probe;
+                *y = y_probe;
+                standardize(y);
+                improved = true;
+            }
+            let gn = ghat.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if gn > 1e-9 {
+                let s = 0.5 / gn;
+                for g in ghat.iter_mut() {
+                    *g *= s;
+                }
+                let mut cand: Vec<f64> = y.iter().zip(&ghat).map(|(v, g)| v - g).collect();
+                standardize(&mut cand);
+                let f = obj.eval(&order_from_scores(&cand));
+                if f < *best_f {
+                    *best_f = f;
+                    *y = cand;
+                    improved = true;
+                }
+            }
+            eps = (eps * if improved { 1.3 } else { 0.85 }).clamp(0.02, 1.0);
+        } else {
+            // segment move: reverse or relocate a window of the ordering
+            let order = order_from_scores(y);
+            let len = 2 + rng.next_below((n / 8).max(2));
+            let len = len.min(n - 1);
+            let s = rng.next_below(n - len);
+            let mut cand_order = order.clone();
+            if rng.next_f64() < 0.5 {
+                cand_order[s..s + len].reverse();
+            } else {
+                let seg: Vec<usize> = cand_order.splice(s..s + len, std::iter::empty()).collect();
+                let at = rng.next_below(cand_order.len() + 1);
+                let tail = cand_order.split_off(at);
+                cand_order.extend(seg);
+                cand_order.extend(tail);
+            }
+            let f = obj.eval(&cand_order);
+            if f < *best_f {
+                *best_f = f;
+                // scores = ranks of the accepted ordering (argsort inverts)
+                *y = rank_scores(&cand_order);
+            }
+        }
+        trace.push(*best_f);
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::order::fiedler_order_with;
+    use crate::util::check::check_permutation;
+
+    #[test]
+    fn grad_p_matches_finite_differences() {
+        // close the loop on the one formula perm.rs can't see: d(smooth)/dP
+        let n = 6;
+        let mut rng = Pcg64::new(9);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_gaussian();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let p: Vec<f64> = (0..n * n).map(|_| rng.next_f64()).collect();
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                l[i * n + j] = rng.next_gaussian();
+            }
+        }
+        let gamma: Vec<f64> = (0..n * n).map(|_| rng.next_gaussian()).collect();
+        let r = residual(&p, &a, &l, n);
+        let g = smooth_grad_upstream(&r, &gamma, 1.0);
+        let gp = smooth_grad_p(&g, &p, &a, n);
+        let eps = 1e-6;
+        for e in [(0usize, 0usize), (1, 3), (4, 2), (5, 5), (2, 4)] {
+            let (i, j) = e;
+            let mut pp = p.clone();
+            pp[i * n + j] += eps;
+            let mut pm = p.clone();
+            pm[i * n + j] -= eps;
+            let fp = smooth_value(&residual(&pp, &a, &l, n), &gamma, 1.0);
+            let fm = smooth_value(&residual(&pm, &a, &l, n), &gamma, 1.0);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - gp[i * n + j]).abs() < 1e-5 * fd.abs().max(1.0),
+                "P[{i}][{j}]: fd {fd} vs analytic {}",
+                gp[i * n + j]
+            );
+        }
+    }
+
+    #[test]
+    fn admm_trace_is_non_increasing_and_never_worse_than_init() {
+        let a = laplacian_2d(9, 7);
+        let win = DenseWindow::from_csr(&a);
+        let mut obj = OrderObjective::new(&a);
+        let y0 = rank_scores(&fiedler_order_with(&a, 60, 1));
+        let init_f = obj.eval(&order_from_scores(&y0));
+        let mut rng = Pcg64::new(1);
+        let mut trace = vec![init_f];
+        let out = admm_optimize(
+            &win,
+            &mut obj,
+            &y0,
+            init_f,
+            &AdmmParams::default(),
+            4,
+            None,
+            &mut rng,
+            &mut trace,
+        );
+        assert_eq!(out.outer_iters, 4);
+        assert_eq!(trace.len(), 5);
+        for w in trace.windows(2) {
+            assert!(w[1] <= w[0], "trace increased: {trace:?}");
+        }
+        assert!(out.objective <= init_f);
+        check_permutation(&order_from_scores(&out.y)).unwrap();
+        assert_eq!(out.aug_lagrangian.len(), 4);
+    }
+
+    #[test]
+    fn refine_improves_or_holds_and_respects_deadline() {
+        let a = laplacian_2d(10, 10);
+        let mut obj = OrderObjective::new(&a);
+        let y0 = rank_scores(&fiedler_order_with(&a, 60, 2));
+        let init_f = obj.eval(&order_from_scores(&y0));
+        let mut y = y0.clone();
+        let mut best = init_f;
+        let mut rng = Pcg64::new(3);
+        let mut trace = vec![init_f];
+        let run = refine(&mut obj, &mut y, &mut best, 45, None, &mut rng, &mut trace);
+        assert_eq!(run, 45);
+        assert!(best <= init_f);
+        for w in trace.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+        // the returned scores argsort to a valid permutation achieving best
+        let order = order_from_scores(&y);
+        check_permutation(&order).unwrap();
+        assert_eq!(obj.eval(&order), best);
+
+        // an already-expired deadline runs zero steps
+        let mut y2 = y0;
+        let mut b2 = init_f;
+        let run2 = refine(
+            &mut obj,
+            &mut y2,
+            &mut b2,
+            50,
+            Some(Instant::now()),
+            &mut rng,
+            &mut trace,
+        );
+        assert_eq!(run2, 0);
+        assert_eq!(b2, init_f);
+    }
+}

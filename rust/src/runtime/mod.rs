@@ -7,7 +7,7 @@ pub mod pfm_order;
 pub mod xla_compat;
 
 pub use executor::{parse_artifact_name, BucketExecutable, PfmRuntime, RuntimeError};
-pub use pfm_order::{Learned, Provenance};
+pub use pfm_order::{Learned, OrderOutcome, Provenance};
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

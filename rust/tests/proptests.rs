@@ -530,3 +530,136 @@ fn prop_matrix_market_roundtrip() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_matrix_market_roundtrip_general_unsymmetric() {
+    // the `pfm` subcommand's ingest path: read∘write identity must hold on
+    // general (value-unsymmetric, even rectangular) patterns, not just the
+    // symmetric storage branch
+    use pfm_reorder::sparse::io::{read_matrix_market, write_matrix_market};
+    forall(12, |rng| {
+        let nrows = 5 + rng.next_below(40);
+        let ncols = if rng.next_f64() < 0.3 { 5 + rng.next_below(40) } else { nrows };
+        let mut coo = Coo::new(nrows, ncols);
+        for _ in 0..(2 * nrows + rng.next_below(3 * nrows)) {
+            let r = rng.next_below(nrows);
+            let c = rng.next_below(ncols);
+            // signed, wide-magnitude values exercise the float formatting
+            coo.push(r, c, rng.next_gaussian() * 10f64.powi(rng.next_below(7) as i32 - 3));
+        }
+        let a = coo.to_csr();
+        let dir = std::env::temp_dir().join(format!(
+            "pfm_prop_gen_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join("g.mtx");
+        write_matrix_market(&path, &a).map_err(|e| e.to_string())?;
+        let b = read_matrix_market(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_dir_all(&dir).ok();
+        if a != b {
+            return Err(format!(
+                "general roundtrip mismatch ({nrows}x{ncols}, nnz {})",
+                a.nnz()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Native PFM optimizer invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pfm_optimizer_valid_permutation_on_all_8_classes() {
+    use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
+    let classes: Vec<ProblemClass> = ProblemClass::ALL
+        .iter()
+        .chain(&ProblemClass::UNSYMMETRIC)
+        .copied()
+        .collect();
+    forall(10, |rng| {
+        let class = classes[rng.next_below(classes.len())];
+        let n = 60 + rng.next_below(80);
+        let a = class.generate(n, rng.next_u64());
+        let budget = OptBudget { outer: 1, refine: 6, time_ms: None };
+        let rep = PfmOptimizer::new(budget, rng.next_u64()).optimize(&a);
+        check_permutation(&rep.order).map_err(|e| format!("{class:?}: {e}"))?;
+        if rep.order.len() != a.nrows() {
+            return Err(format!("{class:?}: wrong length"));
+        }
+        let expect_kind = match class.symmetry() {
+            Symmetry::Symmetric => "cholesky",
+            Symmetry::Unsymmetric => "lu",
+        };
+        if rep.kind.label() != expect_kind {
+            return Err(format!("{class:?}: objective kind {}", rep.kind.label()));
+        }
+        if rep.objective > rep.init_objective {
+            return Err(format!(
+                "{class:?}: objective {} above init {}",
+                rep.objective, rep.init_objective
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pfm_admm_objective_non_increasing() {
+    use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
+    forall(6, |rng| {
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let a = class.generate(70 + rng.next_below(60), rng.next_u64());
+        let budget = OptBudget { outer: 4, refine: 12, time_ms: None };
+        let rep = PfmOptimizer::new(budget, rng.next_u64()).optimize(&a);
+        if rep.trace.is_empty() {
+            return Err(format!("{class:?}: empty trace"));
+        }
+        for w in rep.trace.windows(2) {
+            if w[1] > w[0] {
+                return Err(format!("{class:?}: trace increased {} -> {}", w[0], w[1]));
+            }
+        }
+        if rep.objective != *rep.trace.last().unwrap() {
+            return Err(format!(
+                "{class:?}: reported objective {} != trace tail {}",
+                rep.objective,
+                rep.trace.last().unwrap()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pfm_never_exceeds_spectral_init_fill_on_symmetric_suite() {
+    use pfm_reorder::order::fiedler_order_with;
+    use pfm_reorder::pfm::{OptBudget, PfmOptimizer, SPECTRAL_INIT_ITERS};
+    forall(6, |rng| {
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let a = class.generate(70 + rng.next_below(80), rng.next_u64());
+        let seed = rng.next_u64();
+        let budget = OptBudget { outer: 2, refine: 10, time_ms: None };
+        let rep = PfmOptimizer::new(budget, seed).optimize(&a);
+        let spectral = fiedler_order_with(&a, SPECTRAL_INIT_ITERS, seed);
+        let init_fill = fill_ratio_of_order(&a, &spectral);
+        let opt_fill = fill_ratio_of_order(&a, &rep.order);
+        if opt_fill > init_fill + 1e-12 {
+            return Err(format!(
+                "{class:?}: optimized fill {opt_fill} above spectral init {init_fill}"
+            ));
+        }
+        // the optimizer's recorded init matches the actual spectral fill
+        let init_lnnz = analyze(&a.permute_sym(&spectral)).lnnz as f64;
+        if rep.init_objective != init_lnnz {
+            return Err(format!(
+                "{class:?}: init objective {} != spectral lnnz {init_lnnz}",
+                rep.init_objective
+            ));
+        }
+        Ok(())
+    });
+}

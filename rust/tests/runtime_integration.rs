@@ -52,9 +52,15 @@ fn network_provenance_and_fallback() {
     assert_eq!(prov, Provenance::Network);
     check_permutation(&order).unwrap();
 
-    // way above the largest bucket → spectral fallback
+    // way above the largest bucket → the PFM variants now run the native
+    // in-Rust optimizer instead of the spectral fallback
     let big = laplacian_2d(40, 40); // n=1600 > 512
     let (order, prov) = Learned::Pfm.order(&mut rt, &big, 3).unwrap();
+    assert_eq!(prov, Provenance::NativeOptimizer);
+    check_permutation(&order).unwrap();
+
+    // surrogate-objective methods keep the spectral fallback
+    let (order, prov) = Learned::Udno.order(&mut rt, &big, 3).unwrap();
     assert_eq!(prov, Provenance::SpectralFallback);
     check_permutation(&order).unwrap();
 }

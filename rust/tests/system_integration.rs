@@ -59,8 +59,11 @@ fn service_survives_burst_larger_than_queue_window() {
 }
 
 #[test]
-fn learned_method_without_artifacts_falls_back_not_fails() {
-    // failure injection: empty artifact dir → spectral fallback, not error
+fn learned_method_without_artifacts_serves_native_or_fallback_not_fails() {
+    // failure injection: empty artifact dir → PFM is served by the native
+    // optimizer, surrogate methods by the spectral fallback — never an
+    // error, and the provenance counters tell the two apart
+    use pfm_reorder::runtime::Provenance;
     let dir = std::env::temp_dir().join(format!("pfm_noart_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let svc = ReorderService::start(ServiceConfig {
@@ -70,9 +73,18 @@ fn learned_method_without_artifacts_falls_back_not_fails() {
     });
     let a = ProblemClass::TwoDThreeD.generate(100, 1);
     let res = svc
-        .reorder_blocking(a, Method::Learned(Learned::Pfm), 1)
+        .reorder_blocking(a.clone(), Method::Learned(Learned::Pfm), 1)
+        .expect("native result");
+    check_permutation(&res.order).unwrap();
+    assert_eq!(res.provenance, Some(Provenance::NativeOptimizer));
+    assert_eq!(svc.metrics.native_optimized(), 1);
+    assert_eq!(svc.metrics.fallbacks(), 0);
+
+    let res = svc
+        .reorder_blocking(a, Method::Learned(Learned::Se), 1)
         .expect("fallback result");
     check_permutation(&res.order).unwrap();
+    assert_eq!(res.provenance, Some(Provenance::SpectralFallback));
     assert_eq!(svc.metrics.fallbacks(), 1);
     std::fs::remove_dir_all(&dir).ok();
 }
