@@ -27,6 +27,14 @@ struct Inner {
     /// hits ≫ misses)
     symbolic_hits: usize,
     symbolic_misses: usize,
+    /// coarsening + symbolic analyses *saved* by the network thread's
+    /// pattern-keyed batching (one per same-pattern request beyond the
+    /// first in a drain)
+    shared_analyses: usize,
+    /// V-cycle intermediate levels refined by native-PFM requests (total)
+    levels_refined: usize,
+    /// probe-pool width the service runs native-PFM refinement with
+    probe_threads: usize,
 }
 
 /// Shared metrics sink.
@@ -102,6 +110,36 @@ impl Metrics {
         self.inner.lock().unwrap().symbolic_misses
     }
 
+    /// Record analyses saved by pattern-keyed batch sharing (`k` = batch
+    /// members beyond the group lead).
+    pub fn record_shared_analyses(&self, k: usize) {
+        self.inner.lock().unwrap().shared_analyses += k;
+    }
+
+    pub fn shared_analyses(&self) -> usize {
+        self.inner.lock().unwrap().shared_analyses
+    }
+
+    /// Accumulate the V-cycle levels a native-PFM request refined.
+    pub fn record_levels_refined(&self, k: usize) {
+        self.inner.lock().unwrap().levels_refined += k;
+    }
+
+    pub fn levels_refined(&self) -> usize {
+        self.inner.lock().unwrap().levels_refined
+    }
+
+    /// Record the service's configured probe-pool width (set once at
+    /// startup; exported so the JSON snapshot documents how native-PFM
+    /// requests were run).
+    pub fn set_probe_threads(&self, threads: usize) {
+        self.inner.lock().unwrap().probe_threads = threads;
+    }
+
+    pub fn probe_threads(&self) -> usize {
+        self.inner.lock().unwrap().probe_threads
+    }
+
     /// Latency stats per method.
     pub fn latency_stats(&self) -> Vec<(&'static str, Stats)> {
         let m = self.inner.lock().unwrap();
@@ -146,6 +184,9 @@ impl Metrics {
             .set("mean_batch", self.mean_batch())
             .set("symbolic_cache_hits", self.symbolic_hits())
             .set("symbolic_cache_misses", self.symbolic_misses())
+            .set("shared_analyses", self.shared_analyses())
+            .set("levels_refined", self.levels_refined())
+            .set("probe_threads", self.probe_threads())
             .set("latency", per_method)
     }
 }
@@ -174,5 +215,23 @@ mod tests {
         assert!(json.contains("\"completed\":4"));
         assert!(json.contains("\"native_optimizer\":1"));
         assert!(json.contains("PFM"));
+    }
+
+    #[test]
+    fn batching_and_vcycle_counters_export() {
+        let m = Metrics::new();
+        m.set_probe_threads(4);
+        m.record_shared_analyses(3);
+        m.record_shared_analyses(2);
+        m.record_levels_refined(2);
+        m.record_levels_refined(0);
+        m.record_levels_refined(5);
+        assert_eq!(m.shared_analyses(), 5);
+        assert_eq!(m.levels_refined(), 7);
+        assert_eq!(m.probe_threads(), 4);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"shared_analyses\":5"));
+        assert!(json.contains("\"levels_refined\":7"));
+        assert!(json.contains("\"probe_threads\":4"));
     }
 }

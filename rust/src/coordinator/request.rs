@@ -110,6 +110,13 @@ pub struct ReorderResult {
     /// ADMM outer iterations the native PFM optimizer ran (0 for
     /// classical / network / fallback orderings)
     pub opt_iters: usize,
+    /// probe-pool width the native optimizer's refinement ran with (0 when
+    /// the native optimizer did not run; quality-neutral absent an
+    /// expiring wall-clock deadline — see `pfm::probes`)
+    pub probe_threads: usize,
+    /// intermediate V-cycle levels the native optimizer refined (0 unless
+    /// the multilevel path engaged with a per-level budget)
+    pub levels_refined: usize,
 }
 
 #[cfg(test)]

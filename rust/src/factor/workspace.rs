@@ -53,9 +53,26 @@ pub struct FactorWorkspace {
     factorizations: u64,
 }
 
+/// The probe pool hands each scoped worker an exclusive
+/// `&mut FactorWorkspace`; that requires `FactorWorkspace: Send` (all
+/// buffers are plain `Vec`s, so this holds by construction — the assertion
+/// turns an accidental non-Send field into a compile error here instead of
+/// an opaque one at the spawn site).
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<FactorWorkspace>();
+};
+
 impl FactorWorkspace {
     pub fn new() -> FactorWorkspace {
         FactorWorkspace::default()
+    }
+
+    /// One workspace per parallel worker (see `pfm::probes::ProbePool`):
+    /// created once, each scoped thread borrows exactly one, so repeated
+    /// batches reuse the grown buffers without locking.
+    pub fn pool(workers: usize) -> Vec<FactorWorkspace> {
+        (0..workers.max(1)).map(|_| FactorWorkspace::new()).collect()
     }
 
     /// Make every buffer usable for an n×n factorization and reset the

@@ -29,6 +29,26 @@ pub fn laplacian_2d(nx: usize, ny: usize) -> Csr {
     coo.to_csr()
 }
 
+/// [`laplacian_2d`] symmetrically rescaled by `D A D` with `d = scale` on
+/// one `node` and 1 elsewhere — still SPD with the identical pattern, but
+/// (for large `scale`) with a badly scaled value range: the max-normalized
+/// dense window used by the PFM ADMM becomes ~rank-1 and the smooth
+/// gradient signal collapses. This is the adaptive-ρ stress workload; the
+/// elimination orderings themselves are scale-invariant, so quality
+/// comparisons against the unscaled grid stay meaningful.
+pub fn scaled_node_laplacian_2d(nx: usize, ny: usize, node: usize, scale: f64) -> Csr {
+    let base = laplacian_2d(nx, ny);
+    let d = |i: usize| if i == node { scale } else { 1.0 };
+    let mut coo = Coo::square(base.nrows());
+    for r in 0..base.nrows() {
+        let (cols, vals) = base.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(r, c, v * d(r) * d(c));
+        }
+    }
+    coo.to_csr()
+}
+
 /// 3D 7-point Laplacian on an nx×ny×nz grid. SPD, n = nx·ny·nz.
 pub fn laplacian_3d(nx: usize, ny: usize, nz: usize) -> Csr {
     let n = nx * ny * nz;
@@ -235,6 +255,21 @@ mod tests {
         assert!(a.is_symmetric(1e-12));
         // center node (1,1,1) has 6 neighbours
         assert_eq!(a.off_diag_degree(13), 6);
+    }
+
+    #[test]
+    fn scaled_node_laplacian_keeps_pattern_and_symmetry() {
+        let base = laplacian_2d(5, 4);
+        let a = scaled_node_laplacian_2d(5, 4, 7, 1e6);
+        assert_eq!(a.nrows(), 20);
+        assert_eq!(a.indptr(), base.indptr());
+        assert_eq!(a.indices(), base.indices());
+        assert!(a.is_symmetric(1e-12));
+        // D A D: the scaled node's diagonal picks up scale², its incident
+        // edges scale¹, everything else is untouched
+        assert_eq!(a.get(7, 7), base.get(7, 7) * 1e12);
+        assert_eq!(a.get(7, 8), base.get(7, 8) * 1e6);
+        assert_eq!(a.get(0, 1), base.get(0, 1));
     }
 
     #[test]

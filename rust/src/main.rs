@@ -47,6 +47,9 @@ PFM OPTIONS:
     --init <spectral|random>  score initialization  [default: spectral]
     --outer <k>            ADMM outer iterations   [default: 6]
     --refine <k>           refinement steps        [default: 60]
+    --level-refine <k>     V-cycle per-level refinement steps [default: 8]
+    --threads <k>          probe-pool workers (same ordering at any k) [default: 1]
+    --adaptive-rho         residual-balancing ADMM penalty (mu=10, tau=2)
     --budget-ms <ms>       wall-clock cap
     --check-fill           exit nonzero unless optimized fill <= natural fill
     --out <dir>            also write pfm_perm.txt + pfm_report.json
@@ -95,6 +98,9 @@ struct Opts {
     init: Option<String>,
     outer: Option<usize>,
     refine: Option<usize>,
+    level_refine: Option<usize>,
+    threads: Option<usize>,
+    adaptive_rho: bool,
     budget_ms: Option<u64>,
     check_fill: bool,
     positional: Vec<String>,
@@ -114,6 +120,9 @@ impl Opts {
             init: None,
             outer: None,
             refine: None,
+            level_refine: None,
+            threads: None,
+            adaptive_rho: false,
             budget_ms: None,
             check_fill: false,
             positional: Vec::new(),
@@ -138,6 +147,9 @@ impl Opts {
                 "--init" => o.init = it.next().cloned(),
                 "--outer" => o.outer = it.next().and_then(|s| s.parse().ok()),
                 "--refine" => o.refine = it.next().and_then(|s| s.parse().ok()),
+                "--level-refine" => o.level_refine = it.next().and_then(|s| s.parse().ok()),
+                "--threads" => o.threads = it.next().and_then(|s| s.parse().ok()),
+                "--adaptive-rho" => o.adaptive_rho = true,
                 "--budget-ms" => o.budget_ms = it.next().and_then(|s| s.parse().ok()),
                 "--check-fill" => o.check_fill = true,
                 other => o.positional.push(other.to_string()),
@@ -324,33 +336,42 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
     if let Some(k) = o.refine {
         budget.refine = k;
     }
+    if let Some(k) = o.level_refine {
+        budget.level_refine = k;
+    }
+    budget.adaptive_rho |= o.adaptive_rho;
     budget.time_ms = o.budget_ms.or(budget.time_ms);
     let init = match o.init.as_deref() {
         None | Some("spectral") => ScoreInit::Spectral,
         Some("random") => ScoreInit::Random,
         Some(other) => return Err(format!("unknown init `{other}` (spectral|random)")),
     };
-    let opt = PfmOptimizer::new(budget, seed).with_init(init);
+    let opt = PfmOptimizer::new(budget, seed)
+        .with_init(init)
+        .with_threads(o.threads.unwrap_or(1));
     let t0 = std::time::Instant::now();
     let rep = opt.optimize(&a);
     let dt = t0.elapsed().as_secs_f64();
     // the optimizer already evaluated the identity as its free candidate
     let natural = rep.natural_objective;
     println!(
-        "matrix {} {}x{} nnz={} [{}] | native PFM ({:?} init): factor nnz {:.0} \
-         (init {:.0}, natural {:.0}) | {} ADMM iters{}, {} refine steps, {} evals, {:.1} ms",
+        "matrix {} {}x{} nnz={} [{}] | native PFM ({:?} init, {} probe threads): \
+         factor nnz {:.0} (init {:.0}, natural {:.0}) | {} ADMM iters{}, {} refine steps, \
+         {} levels refined, {} evals, {:.1} ms",
         name,
         a.nrows(),
         a.ncols(),
         a.nnz(),
         rep.kind.label(),
         opt.init,
+        rep.probe_threads,
         rep.objective,
         rep.init_objective,
         natural,
         rep.outer_iters,
         rep.coarse_n.map(|cn| format!(" (coarse n={cn})")).unwrap_or_default(),
         rep.refine_steps,
+        rep.levels_refined,
         rep.evals,
         dt * 1e3,
     );
@@ -369,6 +390,8 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
             .set("natural_objective", natural)
             .set("outer_iters", rep.outer_iters)
             .set("refine_steps", rep.refine_steps)
+            .set("levels_refined", rep.levels_refined)
+            .set("probe_threads", rep.probe_threads)
             .set("evals", rep.evals)
             .set("wall_ms", dt * 1e3);
         std::fs::write(format!("{}/pfm_report.json", o.out), json.to_string())

@@ -23,22 +23,46 @@
 //! than its init — the property the serving path and the ablation tests
 //! rely on.
 //!
-//! [`refine`] is the large-n workhorse: two-sided SPSA probes of the
-//! discrete objective (`objective::sampled_subgradient`) interleaved with
-//! rank-space segment moves (reverse / relocate a window of the current
-//! ordering), all under the same strict-acceptance rule. It needs only
-//! sparse symbolic work per probe, so it scales with nnz(L) rather than
-//! n² and keeps working far above the dense-window cap.
+//! When `AdmmParams::adaptive_rho` is set (the `OptBudget::adaptive_rho`
+//! flag), the penalty follows the standard residual-balancing update
+//! (Boyd et al. §3.4.1, μ=10, τ=2): after each dual ascent, ρ doubles when
+//! the primal residual ‖R‖ dominates the dual residual ρ‖Δ(LLᵀ)‖ by more
+//! than μ× and halves in the mirrored case, clamped to [1e-4, 1e4]. The
+//! unscaled dual Γ is kept as-is across ρ changes. Acceptance is untouched,
+//! so the trace stays non-increasing either way — adaptation can only
+//! change *which* score iterates get proposed, never let a worse ordering
+//! through. The paper's fixed ρ=1 stalls dual convergence on badly scaled
+//! windows (a max-normalized window with one dominant node crushes the
+//! gradient signal to ~‖A‖/amax); growing ρ restores it.
+//!
+//! [`refine`] is the large-n workhorse: per step, a *batch* of candidates
+//! is generated from the current state — [`PROBES_PER_STEP`] two-sided
+//! SPSA probe pairs of the discrete objective, or as many rank-space
+//! segment moves (reverse / relocate a window of the current ordering) —
+//! and evaluated in parallel by [`ProbePool`], then reduced in
+//! probe-index order under the same strict-acceptance rule (see
+//! `pfm::probes` for the determinism argument). The averaged multi-probe
+//! SPSA estimate has lower variance than PR 4's single-direction probe,
+//! so the parallel width buys quality as well as wall clock. Each probe
+//! needs only sparse symbolic work, so cost scales with nnz(L) rather
+//! than n² and the pass keeps working far above the dense-window cap.
 
 use std::time::Instant;
 
+use crate::factor::FactorKind;
 use crate::order::order_from_scores;
 use crate::pfm::objective::{
-    conjugate, residual, residual_from, sampled_subgradient, smooth_grad_l, smooth_grad_p,
-    smooth_grad_upstream, smooth_value, DenseWindow, OrderObjective,
+    conjugate, residual, residual_from, smooth_grad_l, smooth_grad_p, smooth_grad_upstream,
+    smooth_value, DenseWindow, OrderObjective,
 };
 use crate::pfm::perm::{rank_scores, standardize, SoftPerm};
+use crate::pfm::probes::{ProbePool, PROBES_PER_STEP};
+use crate::sparse::Csr;
 use crate::util::rng::Pcg64;
+
+/// Clamp range of the adaptive penalty parameter.
+const RHO_MIN: f64 = 1e-4;
+const RHO_MAX: f64 = 1e4;
 
 /// ADMM + proximal-gradient hyperparameters (defaults mirror the Python
 /// trainer where the two share a knob).
@@ -64,6 +88,12 @@ pub struct AdmmParams {
     pub y_steps: usize,
     /// scale of the random tril initialization of L
     pub l_init_scale: f64,
+    /// residual-balancing ρ adaptation (off = the paper's fixed ρ)
+    pub adaptive_rho: bool,
+    /// residual-imbalance trigger μ of the adaptive update
+    pub adapt_mu: f64,
+    /// multiplicative ρ step τ of the adaptive update
+    pub adapt_tau: f64,
 }
 
 impl Default for AdmmParams {
@@ -79,6 +109,9 @@ impl Default for AdmmParams {
             y_lr: 0.15,
             y_steps: 2,
             l_init_scale: 0.1,
+            adaptive_rho: false,
+            adapt_mu: 10.0,
+            adapt_tau: 2.0,
         }
     }
 }
@@ -93,6 +126,9 @@ pub struct AdmmOutcome {
     pub outer_iters: usize,
     /// augmented-Lagrangian value per outer iteration (diagnostic)
     pub aug_lagrangian: Vec<f64>,
+    /// penalty parameter after the last iteration (= `params.rho` unless
+    /// the adaptive update fired)
+    pub rho_final: f64,
 }
 
 fn clip_norm(g: &mut [f64], clip: f64) {
@@ -144,6 +180,7 @@ pub fn admm_optimize(
     let mut y = y0.to_vec();
     let mut best_y = y.clone();
     let mut best_f = best_f;
+    let mut rho = params.rho;
 
     // L = tril(randn)·scale, Γ = 0 (trainer lines 6-7)
     let mut l = vec![0.0f64; n * n];
@@ -155,6 +192,7 @@ pub fn admm_optimize(
     let mut gamma = vec![0.0f64; n * n];
     let mut aug = Vec::with_capacity(outer);
     let mut iters = 0usize;
+    let mut prev_llt: Option<Vec<f64>> = None;
 
     // carried across the iteration boundary: the dual-ascent refresh below
     // is also the next L-update's permutation (y unchanged in between)
@@ -173,7 +211,7 @@ pub fn admm_optimize(
         let a_theta = conjugate(&sp.p, &win.a, n);
         for _ in 0..params.l_steps {
             let r = residual_from(&a_theta, &l, n);
-            let g = smooth_grad_upstream(&r, &gamma, params.rho);
+            let g = smooth_grad_upstream(&r, &gamma, rho);
             let mut gl = smooth_grad_l(&g, &l, n);
             for i in 0..n {
                 for gv in &mut gl[i * n + i + 1..(i + 1) * n] {
@@ -194,7 +232,7 @@ pub fn admm_optimize(
                 sp = SoftPerm::forward(&y, params.sigma, params.sinkhorn_iters);
             }
             let r = residual(&sp.p, &win.a, &l, n);
-            let g = smooth_grad_upstream(&r, &gamma, params.rho);
+            let g = smooth_grad_upstream(&r, &gamma, rho);
             let gp = smooth_grad_p(&g, &sp.p, &win.a, n);
             let mut dy = sp.backprop(&gp);
             clip_norm(&mut dy, params.clip);
@@ -208,10 +246,26 @@ pub fn admm_optimize(
         sp = SoftPerm::forward(&y, params.sigma, params.sinkhorn_iters);
         let r = residual(&sp.p, &win.a, &l, n);
         for (gm, rv) in gamma.iter_mut().zip(&r) {
-            *gm += params.rho * rv;
+            *gm += rho * rv;
         }
         let l1: f64 = l.iter().map(|v| v.abs()).sum();
-        aug.push(l1 + smooth_value(&r, &gamma, params.rho));
+        aug.push(l1 + smooth_value(&r, &gamma, rho));
+
+        // --- residual-balancing ρ update (Γ is the unscaled dual, so it
+        // carries over a ρ change unchanged) ---
+        if params.adaptive_rho {
+            let cur = llt(&l, n);
+            let r_norm = frob(&r);
+            if let Some(prev) = &prev_llt {
+                let s_norm = rho * dist(&cur, prev);
+                if r_norm > params.adapt_mu * s_norm {
+                    rho = (rho * params.adapt_tau).min(RHO_MAX);
+                } else if s_norm > params.adapt_mu * r_norm {
+                    rho = (rho / params.adapt_tau).max(RHO_MIN);
+                }
+            }
+            prev_llt = Some(cur);
+        }
 
         // --- acceptance on the discrete golden criterion ---
         let order = order_from_scores(&y);
@@ -223,15 +277,58 @@ pub fn admm_optimize(
         trace.push(best_f);
     }
 
-    AdmmOutcome { y: best_y, objective: best_f, outer_iters: iters, aug_lagrangian: aug }
+    AdmmOutcome {
+        y: best_y,
+        objective: best_f,
+        outer_iters: iters,
+        aug_lagrangian: aug,
+        rho_final: rho,
+    }
 }
 
-/// Sampled-subgradient refinement: SPSA probes interleaved with rank-space
-/// segment moves, strict acceptance on the discrete objective. Returns the
-/// number of steps run; `y`/`best_f` are updated in place and `trace` gets
-/// one best-so-far entry per step.
+/// `L Lᵀ` over L's lower-triangular support (row-major n×n).
+fn llt(l: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..=i.min(j) {
+                s += l[i * n + k] * l[j * n + k];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+fn frob(m: &[f64]) -> f64 {
+    m.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+/// Sampled-subgradient refinement: multi-direction SPSA probe batches
+/// interleaved with batches of rank-space segment moves, all evaluated by
+/// the probe pool and reduced under strict acceptance on the discrete
+/// objective of `a` (any permutation-symmetric level matrix — the fine
+/// matrix or a V-cycle level). Returns the number of steps run; `y` /
+/// `best_f` are updated in place and `trace` gets one best-so-far entry
+/// per step.
+///
+/// Every RNG draw happens in the single-threaded generation phase and the
+/// batch shape is fixed ([`PROBES_PER_STEP`]), so the result is
+/// bit-identical at any pool thread count as long as no wall-clock
+/// deadline expires mid-run (see `pfm::probes`). One step
+/// costs `2·PROBES_PER_STEP + 1` evaluations (SPSA) or `PROBES_PER_STEP`
+/// (segment moves) — wider than PR 4's single-probe step, but the batch
+/// runs in parallel and the averaged subgradient is lower-variance.
+#[allow(clippy::too_many_arguments)]
 pub fn refine(
-    obj: &mut OrderObjective,
+    a: &Csr,
+    kind: FactorKind,
+    pool: &mut ProbePool,
     y: &mut Vec<f64>,
     best_f: &mut f64,
     steps: usize,
@@ -245,30 +342,61 @@ pub fn refine(
     }
     let mut eps = 0.35f64;
     let mut run = 0usize;
+    let mut orders: Vec<Vec<usize>> = Vec::with_capacity(2 * PROBES_PER_STEP);
     for step in 0..steps {
         if deadline.is_some_and(|d| Instant::now() >= d) {
             break;
         }
         run += 1;
         if step % 3 < 2 {
-            // SPSA: two-sided probe + a normalized step along −ĝ
-            let (mut ghat, f_probe, y_probe) = sampled_subgradient(obj, y, eps, rng);
+            // --- SPSA batch: two-sided probes around the current scores ---
+            let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(PROBES_PER_STEP);
+            let mut cands: Vec<Vec<f64>> = Vec::with_capacity(2 * PROBES_PER_STEP);
+            for _ in 0..PROBES_PER_STEP {
+                let delta: Vec<f64> =
+                    (0..n).map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }).collect();
+                cands.push(y.iter().zip(&delta).map(|(v, d)| v + eps * d).collect());
+                cands.push(y.iter().zip(&delta).map(|(v, d)| v - eps * d).collect());
+                deltas.push(delta);
+            }
+            orders.clear();
+            orders.extend(cands.iter().map(|c| order_from_scores(c)));
+            let fs = pool.eval_orders(a, kind, &orders, deadline);
             let mut improved = false;
-            if f_probe < *best_f {
-                *best_f = f_probe;
-                *y = y_probe;
+            // best probe: strict < keeps the lowest index on ties
+            let mut bi = 0;
+            for (i, f) in fs.iter().enumerate() {
+                if *f < fs[bi] {
+                    bi = i;
+                }
+            }
+            if fs[bi] < *best_f {
+                *best_f = fs[bi];
+                *y = cands[bi].clone();
                 standardize(y);
                 improved = true;
+            }
+            // averaged subgradient over the finite probe pairs (a pair may
+            // be ∞ only when the deadline cut its evaluation short)
+            let mut ghat = vec![0.0f64; n];
+            let inv = 1.0 / (2.0 * eps * PROBES_PER_STEP as f64);
+            for (k, delta) in deltas.iter().enumerate() {
+                let (fp, fm) = (fs[2 * k], fs[2 * k + 1]);
+                if !fp.is_finite() || !fm.is_finite() {
+                    continue;
+                }
+                let scale = (fp - fm) * inv;
+                for (g, d) in ghat.iter_mut().zip(delta) {
+                    *g += scale * d;
+                }
             }
             let gn = ghat.iter().map(|v| v * v).sum::<f64>().sqrt();
             if gn > 1e-9 {
                 let s = 0.5 / gn;
-                for g in ghat.iter_mut() {
-                    *g *= s;
-                }
-                let mut cand: Vec<f64> = y.iter().zip(&ghat).map(|(v, g)| v - g).collect();
+                let mut cand: Vec<f64> = y.iter().zip(&ghat).map(|(v, g)| v - s * g).collect();
                 standardize(&mut cand);
-                let f = obj.eval(&order_from_scores(&cand));
+                let gorder = vec![order_from_scores(&cand)];
+                let f = pool.eval_orders(a, kind, &gorder, deadline)[0];
                 if f < *best_f {
                     *best_f = f;
                     *y = cand;
@@ -277,26 +405,37 @@ pub fn refine(
             }
             eps = (eps * if improved { 1.3 } else { 0.85 }).clamp(0.02, 1.0);
         } else {
-            // segment move: reverse or relocate a window of the ordering
+            // --- segment-move batch: reverse/relocate windows of the
+            // current ordering, best-of-batch acceptance ---
             let order = order_from_scores(y);
-            let len = 2 + rng.next_below((n / 8).max(2));
-            let len = len.min(n - 1);
-            let s = rng.next_below(n - len);
-            let mut cand_order = order.clone();
-            if rng.next_f64() < 0.5 {
-                cand_order[s..s + len].reverse();
-            } else {
-                let seg: Vec<usize> = cand_order.splice(s..s + len, std::iter::empty()).collect();
-                let at = rng.next_below(cand_order.len() + 1);
-                let tail = cand_order.split_off(at);
-                cand_order.extend(seg);
-                cand_order.extend(tail);
+            orders.clear();
+            for _ in 0..PROBES_PER_STEP {
+                let len = (2 + rng.next_below((n / 8).max(2))).min(n - 1);
+                let s = rng.next_below(n - len);
+                let mut cand_order = order.clone();
+                if rng.next_f64() < 0.5 {
+                    cand_order[s..s + len].reverse();
+                } else {
+                    let seg: Vec<usize> =
+                        cand_order.splice(s..s + len, std::iter::empty()).collect();
+                    let at = rng.next_below(cand_order.len() + 1);
+                    let tail = cand_order.split_off(at);
+                    cand_order.extend(seg);
+                    cand_order.extend(tail);
+                }
+                orders.push(cand_order);
             }
-            let f = obj.eval(&cand_order);
-            if f < *best_f {
-                *best_f = f;
+            let fs = pool.eval_orders(a, kind, &orders, deadline);
+            let mut bi = 0;
+            for (i, f) in fs.iter().enumerate() {
+                if *f < fs[bi] {
+                    bi = i;
+                }
+            }
+            if fs[bi] < *best_f {
+                *best_f = fs[bi];
                 // scores = ranks of the accepted ordering (argsort inverts)
-                *y = rank_scores(&cand_order);
+                *y = rank_scores(&orders[bi]);
             }
         }
         trace.push(*best_f);
@@ -381,21 +520,34 @@ mod tests {
         assert!(out.objective <= init_f);
         check_permutation(&order_from_scores(&out.y)).unwrap();
         assert_eq!(out.aug_lagrangian.len(), 4);
+        assert_eq!(out.rho_final, 1.0, "fixed-ρ run must not move the penalty");
     }
 
     #[test]
     fn refine_improves_or_holds_and_respects_deadline() {
         let a = laplacian_2d(10, 10);
         let mut obj = OrderObjective::new(&a);
+        let mut pool = ProbePool::new(1);
         let y0 = rank_scores(&fiedler_order_with(&a, 60, 2));
         let init_f = obj.eval(&order_from_scores(&y0));
         let mut y = y0.clone();
         let mut best = init_f;
         let mut rng = Pcg64::new(3);
         let mut trace = vec![init_f];
-        let run = refine(&mut obj, &mut y, &mut best, 45, None, &mut rng, &mut trace);
+        let run = refine(
+            &a,
+            FactorKind::Cholesky,
+            &mut pool,
+            &mut y,
+            &mut best,
+            45,
+            None,
+            &mut rng,
+            &mut trace,
+        );
         assert_eq!(run, 45);
         assert!(best <= init_f);
+        assert!(pool.evals() > 45, "each step evaluates a whole probe batch");
         for w in trace.windows(2) {
             assert!(w[1] <= w[0]);
         }
@@ -408,7 +560,9 @@ mod tests {
         let mut y2 = y0;
         let mut b2 = init_f;
         let run2 = refine(
-            &mut obj,
+            &a,
+            FactorKind::Cholesky,
+            &mut pool,
             &mut y2,
             &mut b2,
             50,
@@ -418,5 +572,104 @@ mod tests {
         );
         assert_eq!(run2, 0);
         assert_eq!(b2, init_f);
+    }
+
+    #[test]
+    fn refine_is_bit_identical_across_thread_counts() {
+        // nnz ≈ 3k keeps the batches above the pool's parallel cutoff, so
+        // the threaded path is what's being compared
+        let a = laplacian_2d(26, 24);
+        let y0 = rank_scores(&fiedler_order_with(&a, 60, 4));
+        let mut obj = OrderObjective::new(&a);
+        let init_f = obj.eval(&order_from_scores(&y0));
+        let mut reference: Option<(Vec<usize>, f64, Vec<f64>)> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut pool = ProbePool::new(threads);
+            let mut y = y0.clone();
+            let mut best = init_f;
+            let mut rng = Pcg64::new(17);
+            let mut trace = vec![init_f];
+            refine(
+                &a,
+                FactorKind::Cholesky,
+                &mut pool,
+                &mut y,
+                &mut best,
+                30,
+                None,
+                &mut rng,
+                &mut trace,
+            );
+            let got = (order_from_scores(&y), best, trace);
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "threads={threads} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_rho_fires_on_badly_scaled_window_and_never_hurts() {
+        // a max-normalized window with one dominant node: the window is
+        // ~rank-1, L fits it in a few steps (dual residual → 0) while the
+        // primal residual plateaus — exactly the imbalance the
+        // residual-balancing update corrects by growing ρ
+        let a = crate::gen::grid::scaled_node_laplacian_2d(10, 10, 37, 1e6);
+        let win = DenseWindow::from_csr(&a);
+        let y0 = rank_scores(&fiedler_order_with(&a, 60, 1));
+
+        let fixed = AdmmParams::default();
+        let adaptive = AdmmParams { adaptive_rho: true, ..AdmmParams::default() };
+        // whether the trigger crosses μ=10 within a short run depends on
+        // the L-init draws (mirror-validated: most seeds fire here, some
+        // stay balanced), so the firing assertion quantifies over a seed
+        // set while the quality assertions hold per seed
+        let mut fired = false;
+        for seed in [1u64, 2, 3, 5, 7] {
+            let mut obj_f = OrderObjective::new(&a);
+            let mut obj_a = OrderObjective::new(&a);
+            let init_f = obj_f.eval(&order_from_scores(&y0));
+            assert_eq!(init_f, obj_a.eval(&order_from_scores(&y0)));
+            let mut tr_f = vec![init_f];
+            let out_f = admm_optimize(
+                &win,
+                &mut obj_f,
+                &y0,
+                init_f,
+                &fixed,
+                12,
+                None,
+                &mut Pcg64::new(seed),
+                &mut tr_f,
+            );
+            let mut tr_a = vec![init_f];
+            let out_a = admm_optimize(
+                &win,
+                &mut obj_a,
+                &y0,
+                init_f,
+                &adaptive,
+                12,
+                None,
+                &mut Pcg64::new(seed),
+                &mut tr_a,
+            );
+            assert_eq!(out_f.rho_final, 1.0, "fixed-ρ run moved the penalty");
+            fired |= out_a.rho_final != 1.0;
+            for w in tr_a.windows(2) {
+                assert!(w[1] <= w[0], "seed {seed}: adaptive trace increased: {tr_a:?}");
+            }
+            // strict acceptance: neither run can end above the init, and
+            // on this window the adaptive run never loses to the fixed one
+            // (mirror-validated across seeds before the port)
+            assert!(out_f.objective <= init_f && out_a.objective <= init_f);
+            assert!(
+                out_a.objective <= out_f.objective,
+                "seed {seed}: adaptive {} worse than fixed {}",
+                out_a.objective,
+                out_f.objective
+            );
+        }
+        assert!(fired, "ρ adaptation never fired on the badly scaled window");
     }
 }

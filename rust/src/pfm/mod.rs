@@ -15,12 +15,16 @@
 //!   n ≤ cap ──────┤────── n > cap
 //!      │          │          │
 //!      ▼          │          ▼
-//!  dense ADMM     │   coarsen (heavy-edge) → dense ADMM on the
-//!  (perm+admm)    │   coarse window → prolong scores  (multilevel)
-//!      │          │          │
+//!  dense ADMM     │   coarsen keeping every level (Hierarchy) →
+//!  (perm+admm,    │   dense ADMM on the coarsest window →
+//!   adaptive ρ    │   V-cycle back up: prolong + budgeted probe-pool
+//!   optional)     │   refinement per level, each accepted on that
+//!      │          │   level's discrete criterion        (multilevel)
 //!      └──────────┼──────────┘
 //!                 ▼
-//!   sampled-subgradient refinement (SPSA + segment moves)   [admm::refine]
+//!   sampled-subgradient refinement (multi-probe SPSA + segment-move
+//!   batches through probes::ProbePool — parallel, bit-identical at any
+//!   thread count)                                       [admm::refine]
 //!                 │
 //!                 ▼
 //!   argsort(y) — every step accepted only if it lowers the exact
@@ -32,17 +36,19 @@ pub mod admm;
 pub mod multilevel;
 pub mod objective;
 pub mod perm;
+pub mod probes;
 
 use std::time::{Duration, Instant};
 
 pub use admm::AdmmParams;
-pub use multilevel::DEFAULT_DENSE_CAP;
+pub use multilevel::{Hierarchy, DEFAULT_DENSE_CAP};
 pub use objective::OrderObjective;
+pub use probes::{ProbePool, PROBES_PER_STEP};
 
-use crate::factor::FactorKind;
+use crate::factor::{FactorKind, SymbolicCache};
 use crate::order::{fiedler_order_with, order_from_scores};
 use crate::pfm::admm::{admm_optimize, refine};
-use crate::pfm::multilevel::{coarsen, prolong, restrict};
+use crate::pfm::multilevel::prolong;
 use crate::pfm::objective::DenseWindow;
 use crate::pfm::perm::{rank_scores, standardize};
 use crate::sparse::Csr;
@@ -55,29 +61,46 @@ pub const SPECTRAL_INIT_ITERS: usize = 60;
 
 /// Optimization budget: how much work one `optimize` call may spend.
 /// Iteration budgets bound work deterministically; the optional wall-clock
-/// cap bounds serving latency (checked between iterations — an iteration
-/// in flight completes).
+/// cap bounds serving latency (checked between iterations *and* before
+/// every probe inside a parallel batch, so overshoot is bounded by one
+/// in-flight probe per worker, not one batch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OptBudget {
     /// ADMM outer iterations (dense or coarse window)
     pub outer: usize,
-    /// sampled-subgradient refinement steps at the native scale
+    /// sampled-subgradient refinement steps at the native scale (one step
+    /// evaluates a whole probe batch — see `admm::refine`)
     pub refine: usize,
+    /// refinement steps per intermediate level on the V-cycle way up
+    /// (0 = the PR 4 coarsest-only multilevel behavior)
+    pub level_refine: usize,
+    /// residual-balancing adaptive ρ in the ADMM loop (μ=10, τ=2);
+    /// off = the paper's fixed ρ=1
+    pub adaptive_rho: bool,
     /// wall-clock cap in milliseconds
     pub time_ms: Option<u64>,
 }
 
 impl Default for OptBudget {
     fn default() -> Self {
-        OptBudget { outer: 6, refine: 60, time_ms: None }
+        OptBudget { outer: 6, refine: 60, level_refine: 8, adaptive_rho: false, time_ms: None }
     }
 }
 
 impl OptBudget {
     /// The coordinator's default: bounded in both iterations and wall
     /// clock, so a serving request can never stall the network thread.
+    /// Adaptive ρ is on — serving sees arbitrarily scaled inputs, and the
+    /// strict-acceptance rule means adaptation can never serve a worse
+    /// ordering than the fixed-ρ schedule's init.
     pub fn serving() -> OptBudget {
-        OptBudget { outer: 4, refine: 24, time_ms: Some(250) }
+        OptBudget {
+            outer: 4,
+            refine: 24,
+            level_refine: 6,
+            adaptive_rho: true,
+            time_ms: Some(250),
+        }
     }
 }
 
@@ -100,6 +123,11 @@ pub struct PfmOptimizer {
     pub params: AdmmParams,
     /// dense-window / multilevel cap
     pub dense_cap: usize,
+    /// probe-pool workers for the refinement passes — threads buy wall
+    /// clock, not quality: results are bit-identical at any value unless
+    /// a wall-clock budget expires mid-run (where results are timing-
+    /// dependent at *any* thread count; see `pfm::probes`)
+    pub probe_threads: usize,
 }
 
 impl PfmOptimizer {
@@ -110,6 +138,7 @@ impl PfmOptimizer {
             init: ScoreInit::Spectral,
             params: AdmmParams::default(),
             dense_cap: DEFAULT_DENSE_CAP,
+            probe_threads: 1,
         }
     }
 
@@ -118,11 +147,29 @@ impl PfmOptimizer {
         self
     }
 
+    /// Set the probe-pool width. Determinism: for a given seed and budget
+    /// the permutation is identical at any thread count, as long as no
+    /// wall-clock deadline expires mid-run — an expiring `time_ms` makes
+    /// the skip-set timing-dependent at any width (never-worse-than-init
+    /// still holds; see `pfm::probes`).
+    pub fn with_threads(mut self, threads: usize) -> PfmOptimizer {
+        self.probe_threads = threads.max(1);
+        self
+    }
+
     /// Optimize an elimination ordering for `a`. Symmetric matrices are
     /// driven by the exact Cholesky criterion; unsymmetric ones order on
     /// their symmetrized proxy (like every score-based method here) while
     /// accepting on the true LU criterion.
     pub fn optimize(&self, a: &Csr) -> PfmReport {
+        self.optimize_shared(a, None)
+    }
+
+    /// Like [`optimize`](Self::optimize), reusing a [`SharedPrep`] computed
+    /// once for a batch of identical-matrix requests (the coordinator's
+    /// network-thread batching). Since hierarchies are seed-independent,
+    /// a shared run is bit-identical to a solo run on the same matrix.
+    pub fn optimize_shared(&self, a: &Csr, prep: Option<&SharedPrep>) -> PfmReport {
         let n = a.nrows();
         let deadline = self.budget.time_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         if n <= 2 {
@@ -135,9 +182,11 @@ impl PfmOptimizer {
                 natural_objective: objective,
                 outer_iters: 0,
                 refine_steps: 0,
+                levels_refined: 0,
                 evals: usize::from(n > 0),
                 trace: vec![objective],
                 coarse_n: None,
+                probe_threads: self.probe_threads.max(1),
                 kind: FactorKind::for_matrix(a),
             };
         }
@@ -151,6 +200,7 @@ impl PfmOptimizer {
         };
         let gm = proxy.as_ref().unwrap_or(a);
 
+        let mut pool = ProbePool::new(self.probe_threads);
         let mut rng = Pcg64::new(self.seed);
         let mut y = match self.init {
             ScoreInit::Spectral => {
@@ -168,9 +218,15 @@ impl PfmOptimizer {
         let mut best_f = init_objective;
         let mut trace = vec![init_objective];
 
-        // free candidate: never return something worse than no reordering
+        // free candidate: never return something worse than no reordering.
+        // The symbolic Cholesky count of the identity is pattern-keyed
+        // shareable (SharedPrep); the LU count is numeric, so unsymmetric
+        // matrices always evaluate it themselves.
         let identity: Vec<usize> = (0..n).collect();
-        let id_f = obj.eval(&identity);
+        let id_f = prep
+            .and_then(|p| p.natural_objective)
+            .filter(|_| obj.kind() == FactorKind::Cholesky)
+            .unwrap_or_else(|| obj.eval(&identity));
         if id_f < best_f {
             best_f = id_f;
             y = rank_scores(&identity);
@@ -181,41 +237,62 @@ impl PfmOptimizer {
         let mut outer_iters = 0usize;
         let mut coarse_n = None;
         let mut coarse_evals = 0usize;
-        if self.budget.outer > 0 && !deadline.is_some_and(|d| Instant::now() >= d) {
+        let mut levels_refined = 0usize;
+        let mut params = self.params.clone();
+        params.adaptive_rho |= self.budget.adaptive_rho;
+        let multilevel_wanted = self.budget.outer > 0 || self.budget.level_refine > 0;
+        if multilevel_wanted && !deadline.is_some_and(|d| Instant::now() >= d) {
             if n <= self.dense_cap {
-                let win = DenseWindow::from_csr(gm);
-                let out = admm_optimize(
-                    &win,
-                    &mut obj,
-                    &y,
-                    best_f,
-                    &self.params,
-                    self.budget.outer,
-                    deadline,
-                    &mut rng,
-                    &mut trace,
-                );
-                outer_iters = out.outer_iters;
-                best_f = out.objective;
-                y = out.y;
-            } else if let Some(c) = coarsen(gm, self.dense_cap, &mut rng) {
-                let cn = c.matrix.nrows();
+                if self.budget.outer > 0 {
+                    let win = DenseWindow::from_csr(gm);
+                    let out = admm_optimize(
+                        &win,
+                        &mut obj,
+                        &y,
+                        best_f,
+                        &params,
+                        self.budget.outer,
+                        deadline,
+                        &mut rng,
+                        &mut trace,
+                    );
+                    outer_iters = out.outer_iters;
+                    best_f = out.objective;
+                    y = out.y;
+                }
+            } else {
+                // the hierarchy is seed-independent, so a prep computed
+                // once for a batch of requests carrying this same matrix
+                // slots in for the local build exactly
+                let built;
+                let hier: Option<&Hierarchy> = match prep.and_then(|p| p.hierarchy.as_ref()) {
+                    Some(h) => Some(h),
+                    None => {
+                        built = Hierarchy::build(gm, self.dense_cap);
+                        built.as_ref()
+                    }
+                };
                 // partial contraction can stall above the cap (no edges to
                 // merge) — only pay for the dense window when it is small
-                if cn >= 4 && cn <= 2 * self.dense_cap {
+                if let Some(h) = hier.filter(|h| {
+                    let cn = h.coarsest().nrows();
+                    cn >= 4 && cn <= 2 * self.dense_cap
+                }) {
+                    let cn = h.coarsest().nrows();
                     coarse_n = Some(cn);
-                    let mut cobj = OrderObjective::new(&c.matrix);
-                    let mut yc = restrict(&y, &c.fine_to_coarse, cn);
+                    let rests = h.restrict_all(&y);
+                    let mut yc = rests.last().expect("nonempty hierarchy").clone();
                     standardize(&mut yc);
+                    let mut cobj = OrderObjective::new(h.coarsest());
                     let cf = cobj.eval(&order_from_scores(&yc));
                     let mut ctrace = vec![cf];
-                    let win = DenseWindow::from_csr(&c.matrix);
+                    let win = DenseWindow::from_csr(h.coarsest());
                     let out = admm_optimize(
                         &win,
                         &mut cobj,
                         &yc,
                         cf,
-                        &self.params,
+                        &params,
                         self.budget.outer,
                         deadline,
                         &mut rng,
@@ -223,9 +300,12 @@ impl PfmOptimizer {
                     );
                     outer_iters = out.outer_iters;
                     coarse_evals = cobj.evals;
-                    // prolonged scores are a candidate, accepted only if
-                    // they improve the *fine* golden criterion
-                    let mut cand = prolong(&out.y, &c.fine_to_coarse, &y);
+                    // candidate A — direct prolongation through the
+                    // composed map (the coarsest-only path), evaluated
+                    // first so the V-cycle below can refine but never
+                    // regress it; accepted only if it improves the *fine*
+                    // golden criterion
+                    let mut cand = prolong(&out.y, &h.composed(), &y);
                     standardize(&mut cand);
                     let f = obj.eval(&order_from_scores(&cand));
                     if f < best_f {
@@ -233,13 +313,59 @@ impl PfmOptimizer {
                         y = cand;
                     }
                     trace.push(best_f);
+                    // candidate B — V-cycle walk: prolong level by level,
+                    // refining each intermediate level under its own
+                    // discrete criterion with the probe pool
+                    if self.budget.level_refine > 0 && h.levels() >= 2 {
+                        let mut yl = out.y;
+                        let mut ltrace: Vec<f64> = Vec::new();
+                        for lvl in (0..h.levels() - 1).rev() {
+                            yl = prolong(&yl, &h.maps[lvl + 1], &rests[lvl]);
+                            standardize(&mut yl);
+                            let lm = &h.matrices[lvl];
+                            let lorder = vec![order_from_scores(&yl)];
+                            let mut lf =
+                                pool.eval_orders(lm, FactorKind::Cholesky, &lorder, deadline)[0];
+                            // ∞ = the deadline already passed: keep
+                            // prolonging (cheap, keeps the walk well-formed)
+                            // but skip the level's refinement work
+                            if lf.is_finite() {
+                                ltrace.clear();
+                                ltrace.push(lf);
+                                let steps = refine(
+                                    lm,
+                                    FactorKind::Cholesky,
+                                    &mut pool,
+                                    &mut yl,
+                                    &mut lf,
+                                    self.budget.level_refine,
+                                    deadline,
+                                    &mut rng,
+                                    &mut ltrace,
+                                );
+                                if steps > 0 {
+                                    levels_refined += 1;
+                                }
+                            }
+                        }
+                        let mut cand = prolong(&yl, &h.maps[0], &y);
+                        standardize(&mut cand);
+                        let f = obj.eval(&order_from_scores(&cand));
+                        if f < best_f {
+                            best_f = f;
+                            y = cand;
+                        }
+                        trace.push(best_f);
+                    }
                 }
             }
         }
 
         // --- sampled-subgradient refinement at the native scale ---
         let refine_steps = refine(
-            &mut obj,
+            a,
+            obj.kind(),
+            &mut pool,
             &mut y,
             &mut best_f,
             self.budget.refine,
@@ -256,12 +382,57 @@ impl PfmOptimizer {
             natural_objective: id_f,
             outer_iters,
             refine_steps,
-            evals: obj.evals + coarse_evals,
+            levels_refined,
+            evals: obj.evals + coarse_evals + pool.evals(),
             trace,
             coarse_n,
+            probe_threads: pool.threads(),
             kind: obj.kind(),
         }
     }
+}
+
+/// Work shareable across a batch of native-PFM requests for the same
+/// matrix: the identity ordering's symbolic Cholesky objective and the
+/// coarsening hierarchy of the (symmetrized) matrix. Hierarchies are
+/// driven by a constant seed (`multilevel::COARSEN_SEED`), so sharing a
+/// prep computed from an *identical* matrix is bit-transparent — each
+/// request still runs its own seed, init, and budget (the coordinator
+/// keys groups on exact pattern + values for precisely this reason). A
+/// prep from a same-pattern, different-value matrix is still *safe* —
+/// every shared candidate is re-accepted on the request's own golden
+/// criterion — but no longer bit-identical to a solo run.
+pub struct SharedPrep {
+    /// discrete objective of the identity ordering — `Some` only for the
+    /// symbolic (Cholesky) kind; the LU natural objective is numeric and
+    /// therefore evaluated per request
+    pub natural_objective: Option<f64>,
+    /// coarsening hierarchy, when the matrix is above the dense cap
+    pub hierarchy: Option<Hierarchy>,
+}
+
+/// Compute the shareable prep for `a`. When `cache` is given, the identity
+/// analysis goes through the pattern-keyed [`SymbolicCache`] — repeated
+/// preps for one topology become cache hits, which is how the
+/// coordinator's `shared_analyses` accounting stays observable.
+pub fn prepare_shared(a: &Csr, dense_cap: usize, cache: Option<&mut SymbolicCache>) -> SharedPrep {
+    let kind = FactorKind::for_matrix(a);
+    let natural_objective = match kind {
+        FactorKind::Cholesky => Some(match cache {
+            Some(c) => c.analyze(a).sym.lnnz as f64,
+            None => crate::factor::analyze(a).lnnz as f64,
+        }),
+        FactorKind::Lu => None,
+    };
+    let hierarchy = if a.nrows() > dense_cap {
+        match kind {
+            FactorKind::Cholesky => Hierarchy::build(a, dense_cap),
+            FactorKind::Lu => Hierarchy::build(&a.symmetrize(), dense_cap),
+        }
+    } else {
+        None
+    };
+    SharedPrep { natural_objective, hierarchy }
 }
 
 /// What one `optimize` call did and found.
@@ -279,14 +450,19 @@ pub struct PfmReport {
     pub natural_objective: f64,
     /// ADMM outer iterations run
     pub outer_iters: usize,
-    /// refinement steps run
+    /// refinement steps run at the native scale
     pub refine_steps: usize,
-    /// discrete objective evaluations (fine + coarse)
+    /// intermediate V-cycle levels that received a refinement pass
+    pub levels_refined: usize,
+    /// discrete objective evaluations (fine + coarse + probe pool)
     pub evals: usize,
     /// best-so-far objective trace (non-increasing)
     pub trace: Vec<f64>,
     /// coarse problem size when the multilevel path engaged
     pub coarse_n: Option<usize>,
+    /// probe-pool width the refinement ran with (quality-neutral absent
+    /// an expiring wall-clock deadline)
+    pub probe_threads: usize,
     /// factorization kind the objective ran
     pub kind: FactorKind,
 }
@@ -302,7 +478,8 @@ mod tests {
     #[test]
     fn optimize_returns_valid_permutation_never_worse_than_init() {
         let a = laplacian_2d(12, 10);
-        let opt = PfmOptimizer::new(OptBudget { outer: 3, refine: 30, time_ms: None }, 7);
+        let budget = OptBudget { outer: 3, refine: 30, ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 7);
         let rep = opt.optimize(&a);
         check_permutation(&rep.order).unwrap();
         assert!(rep.objective <= rep.init_objective);
@@ -314,19 +491,58 @@ mod tests {
         }
         assert!(rep.coarse_n.is_none(), "n=120 is under the dense cap");
         assert_eq!(rep.kind, FactorKind::Cholesky);
+        assert_eq!(rep.levels_refined, 0, "dense path has no levels");
+        assert_eq!(rep.probe_threads, 1);
         assert!(rep.evals >= 2);
     }
 
     #[test]
-    fn multilevel_engages_above_the_cap() {
+    fn multilevel_engages_above_the_cap_and_vcycle_refines_levels() {
         let a = laplacian_2d(24, 24); // n = 576 > 160
-        let opt = PfmOptimizer::new(OptBudget { outer: 2, refine: 12, time_ms: None }, 3);
+        let budget = OptBudget { outer: 2, refine: 12, level_refine: 6, ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 3);
         let rep = opt.optimize(&a);
         check_permutation(&rep.order).unwrap();
         assert!(rep.objective <= rep.init_objective);
         let cn = rep.coarse_n.expect("multilevel must engage at n=576");
         assert!(cn <= 2 * DEFAULT_DENSE_CAP);
         assert!(rep.outer_iters > 0, "coarse ADMM must run");
+        assert!(rep.levels_refined >= 1, "V-cycle must refine intermediate levels");
+    }
+
+    #[test]
+    fn optimize_is_deterministic_across_thread_counts() {
+        // quick in-module determinism check (the cross-class proptest and
+        // the CI job live in tests/); covers the V-cycle + fine refinement,
+        // and at n=576 the fine batches take the pool's threaded path
+        let a = laplacian_2d(24, 24);
+        let budget = OptBudget { outer: 1, refine: 9, level_refine: 4, ..OptBudget::default() };
+        let base = PfmOptimizer::new(budget, 11).with_threads(1).optimize(&a);
+        for threads in [2usize, 4, 8] {
+            let rep = PfmOptimizer::new(budget, 11).with_threads(threads).optimize(&a);
+            assert_eq!(rep.order, base.order, "threads={threads} changed the ordering");
+            assert_eq!(rep.objective, base.objective);
+            assert_eq!(rep.trace, base.trace, "threads={threads} changed the trace");
+            assert_eq!(rep.evals, base.evals);
+            assert_eq!(rep.probe_threads, threads);
+        }
+    }
+
+    #[test]
+    fn shared_prep_is_bit_transparent() {
+        let a = laplacian_2d(19, 18); // n = 342 → hierarchy in the prep
+        let budget = OptBudget { outer: 1, refine: 6, level_refine: 3, ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 5);
+        let solo = opt.optimize(&a);
+        let prep = prepare_shared(&a, DEFAULT_DENSE_CAP, None);
+        assert_eq!(prep.natural_objective, Some(solo.natural_objective));
+        assert!(prep.hierarchy.is_some());
+        let shared = opt.optimize_shared(&a, Some(&prep));
+        assert_eq!(shared.order, solo.order);
+        assert_eq!(shared.objective, solo.objective);
+        assert_eq!(shared.trace, solo.trace);
+        // the shared run skips its own identity evaluation
+        assert_eq!(shared.evals + 1, solo.evals);
     }
 
     #[test]
@@ -334,7 +550,7 @@ mod tests {
         // the Table 3 ablation: randinit must be a genuinely different
         // method, not a silent alias of the spectral path
         let a = ProblemClass::Other.generate(120, 5);
-        let budget = OptBudget { outer: 2, refine: 10, time_ms: None };
+        let budget = OptBudget { outer: 2, refine: 10, ..OptBudget::default() };
         let spec = PfmOptimizer::new(budget, 11).optimize(&a);
         let rand = PfmOptimizer::new(budget, 11).with_init(ScoreInit::Random).optimize(&a);
         check_permutation(&spec.order).unwrap();
@@ -346,11 +562,13 @@ mod tests {
     #[test]
     fn zero_budget_returns_init_and_tiny_inputs_are_identity() {
         let a = laplacian_2d(8, 8);
-        let opt = PfmOptimizer::new(OptBudget { outer: 0, refine: 0, time_ms: None }, 1);
+        let budget = OptBudget { outer: 0, refine: 0, level_refine: 0, ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 1);
         let rep = opt.optimize(&a);
         check_permutation(&rep.order).unwrap();
         assert_eq!(rep.outer_iters, 0);
         assert_eq!(rep.refine_steps, 0);
+        assert_eq!(rep.levels_refined, 0);
         assert!(rep.objective <= rep.init_objective);
 
         for n in [0usize, 1, 2] {
@@ -367,7 +585,8 @@ mod tests {
     #[test]
     fn unsymmetric_input_optimizes_on_lu_criterion() {
         let a = ProblemClass::ConvDiff.generate(100, 9);
-        let opt = PfmOptimizer::new(OptBudget { outer: 2, refine: 16, time_ms: None }, 2);
+        let budget = OptBudget { outer: 2, refine: 16, ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 2);
         let rep = opt.optimize(&a);
         check_permutation(&rep.order).unwrap();
         assert_eq!(rep.kind, FactorKind::Lu);
@@ -378,10 +597,9 @@ mod tests {
     #[test]
     fn time_budget_bounds_the_run() {
         let a = laplacian_2d(20, 20);
-        let opt = PfmOptimizer::new(
-            OptBudget { outer: 1000, refine: 100_000, time_ms: Some(0) },
-            1,
-        );
+        let budget =
+            OptBudget { outer: 1000, refine: 100_000, time_ms: Some(0), ..OptBudget::default() };
+        let opt = PfmOptimizer::new(budget, 1);
         let t0 = Instant::now();
         let rep = opt.optimize(&a);
         // expired deadline: init + identity evals only, no iterations

@@ -4,14 +4,24 @@
 //! The dense ADMM window is O(n²) memory and O(n³) per iteration, so it is
 //! capped. Above the cap the matrix's graph is coarsened with the existing
 //! heavy-edge machinery ([`crate::graph::coarsen::coarsen_to`]) down to the
-//! cap, the ADMM loop runs on the coarsest level's weighted-Laplacian
-//! window (accepting on the *coarse* discrete objective), and the
-//! optimized coarse scores are prolonged back: every fine node inherits
-//! its aggregate's score, with the fine init scores as an infinitesimal
-//! tie-break so the within-aggregate order is preserved. The prolonged
-//! scores are a *candidate* — the caller accepts them only if they improve
-//! the fine-level golden criterion, then polishes with the sampled-
-//! subgradient refinement that works at any n.
+//! cap — and, new in the V-cycle path, **every intermediate level is kept**
+//! ([`Hierarchy`]): per-level fine→coarse maps plus each level's
+//! SPD-shifted weighted-Laplacian matrix. The ADMM loop runs on the
+//! coarsest window (accepting on the *coarsest* discrete objective), and
+//! the optimized scores walk back up level by level: prolong to the next
+//! finer level (aggregate score + infinitesimal fine tie-break, preserving
+//! within-aggregate order), then a budgeted probe-pool refinement pass
+//! accepted on *that level's* discrete criterion. Both the direct
+//! prolongation (the PR 4 coarsest-only candidate) and the V-cycle result
+//! are candidates at the finest level, each accepted only if it improves
+//! the fine golden criterion — so the V-cycle can refine but never
+//! regress the coarsest-only path.
+//!
+//! Coarsening is driven by a **dedicated constant-seeded RNG**
+//! ([`COARSEN_SEED`]), not the request seed: the hierarchy is a structural
+//! property of the matrix, identical for every seed — which is what lets
+//! the coordinator compute it once per pattern and share it across a
+//! same-pattern batch with bit-identical results to solo runs.
 
 use crate::graph::coarsen::coarsen_to;
 use crate::graph::Graph;
@@ -27,6 +37,11 @@ pub const DEFAULT_DENSE_CAP: usize = 160;
 /// small enough that aggregates never interleave (coarse scores are
 /// standardized ranks, gap ≥ 1/n ≫ 1e-3·σ-range/n for the caps in use).
 const TIEBREAK: f64 = 1e-3;
+
+/// Seed of the dedicated coarsening RNG (heavy-edge matching visit order).
+/// Constant so a hierarchy depends only on the matrix — shareable across
+/// same-pattern requests, identical between shared and solo runs.
+pub const COARSEN_SEED: u64 = 0xC0A2_5EED;
 
 /// Weighted graph Laplacian of a coarse level, shifted to be SPD — the
 /// matrix whose fill the coarse ADMM optimizes against.
@@ -48,41 +63,71 @@ pub fn coarse_matrix(g: &Graph) -> Csr {
     coo.to_csr()
 }
 
-/// A coarsening of a fine graph down to (at most around) `cap` nodes.
-pub struct Coarsening {
-    /// composed fine node → coarsest node map
-    pub fine_to_coarse: Vec<usize>,
-    /// coarsest-level matrix (weighted Laplacian, SPD-shifted)
-    pub matrix: Csr,
-    /// number of levels contracted
-    pub levels: usize,
+/// The full coarsening hierarchy of a matrix's graph, finest to coarsest.
+/// Level `i` has matrix `matrices[i]`; `maps[0]` sends original nodes to
+/// level 0 and `maps[i]` sends level `i-1` nodes to level `i`.
+pub struct Hierarchy {
+    /// per-level fine→coarse aggregation maps (see type docs)
+    pub maps: Vec<Vec<usize>>,
+    /// per-level SPD-shifted weighted Laplacians
+    pub matrices: Vec<Csr>,
 }
 
-/// Coarsen the graph of `a` until ≤ `cap` nodes. Returns `None` when no
-/// contraction is possible (edgeless graph) or `a` is already small.
-pub fn coarsen(a: &Csr, cap: usize, rng: &mut Pcg64) -> Option<Coarsening> {
-    let n = a.nrows();
-    if n <= cap {
-        return None;
-    }
-    let g = Graph::from_matrix(a);
-    let levels = coarsen_to(&g, cap, rng);
-    if levels.is_empty() {
-        return None;
-    }
-    // compose the per-level maps into fine → coarsest
-    let mut map: Vec<usize> = levels[0].fine_to_coarse.clone();
-    for level in &levels[1..] {
-        for m in map.iter_mut() {
-            *m = level.fine_to_coarse[*m];
+impl Hierarchy {
+    /// Coarsen `a`'s graph until ≤ `cap` nodes, keeping every level.
+    /// Deterministic per matrix (driven by [`COARSEN_SEED`]). Returns
+    /// `None` when `a` is already small or no contraction is possible
+    /// (edgeless graph).
+    pub fn build(a: &Csr, cap: usize) -> Option<Hierarchy> {
+        let n = a.nrows();
+        if n <= cap {
+            return None;
         }
+        let mut rng = Pcg64::new(COARSEN_SEED);
+        let g = Graph::from_matrix(a);
+        let levels = coarsen_to(&g, cap, &mut rng);
+        if levels.is_empty() {
+            return None;
+        }
+        Some(Hierarchy {
+            maps: levels.iter().map(|l| l.fine_to_coarse.clone()).collect(),
+            matrices: levels.iter().map(|l| coarse_matrix(&l.graph)).collect(),
+        })
     }
-    let coarsest = &levels[levels.len() - 1].graph;
-    Some(Coarsening {
-        fine_to_coarse: map,
-        matrix: coarse_matrix(coarsest),
-        levels: levels.len(),
-    })
+
+    /// Number of coarse levels.
+    pub fn levels(&self) -> usize {
+        self.maps.len()
+    }
+
+    /// The coarsest level's matrix (the ADMM window source).
+    pub fn coarsest(&self) -> &Csr {
+        self.matrices.last().expect("hierarchy has at least one level")
+    }
+
+    /// Composed original → coarsest map (the PR 4 single-shot
+    /// prolongation path).
+    pub fn composed(&self) -> Vec<usize> {
+        let mut map = self.maps[0].clone();
+        for lvl in &self.maps[1..] {
+            for m in map.iter_mut() {
+                *m = lvl[*m];
+            }
+        }
+        map
+    }
+
+    /// Restrict fine scores through every level. `out[i]` holds the scores
+    /// at level `i` (mean per aggregate of the next finer level) — the
+    /// V-cycle's per-level prolongation tie-breaks.
+    pub fn restrict_all(&self, y_fine: &[f64]) -> Vec<Vec<f64>> {
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(self.levels());
+        for (i, (map, m)) in self.maps.iter().zip(&self.matrices).enumerate() {
+            let src: &[f64] = if i == 0 { y_fine } else { &out[i - 1] };
+            out.push(restrict(src, map, m.nrows()));
+        }
+        out
+    }
 }
 
 /// Restrict fine scores to the coarse level: mean per aggregate.
@@ -118,49 +163,83 @@ mod tests {
     use crate::util::check::check_permutation;
 
     #[test]
-    fn coarsen_respects_cap_and_maps_every_node() {
+    fn hierarchy_respects_cap_and_maps_every_node() {
         let a = laplacian_2d(24, 24); // n = 576
-        let mut rng = Pcg64::new(1);
-        let c = coarsen(&a, 160, &mut rng).expect("must coarsen");
-        let cn = c.matrix.nrows();
+        let h = Hierarchy::build(&a, 160).expect("must coarsen");
+        let cn = h.coarsest().nrows();
         assert!(cn <= 160 + 160 / 2, "coarse n {cn} way over cap");
         assert!(cn < 576);
-        assert_eq!(c.fine_to_coarse.len(), 576);
-        assert!(c.fine_to_coarse.iter().all(|&m| m < cn));
-        assert!(c.levels >= 1);
-        // coarse matrix is symmetric and SPD-shifted (diag dominant)
-        assert!(c.matrix.is_symmetric(1e-12));
-        assert!(c.matrix.diag_dominance_margin() > 0.0);
+        assert!(h.levels() >= 2, "576 → ≤160 needs ≥ 2 halvings");
+        // every level's map covers the finer level and lands in range
+        let mut fine_n = 576;
+        for (map, m) in h.maps.iter().zip(&h.matrices) {
+            assert_eq!(map.len(), fine_n);
+            let coarse_n = m.nrows();
+            assert!(coarse_n < fine_n);
+            assert!(map.iter().all(|&c| c < coarse_n));
+            // level matrices are symmetric and SPD-shifted
+            assert!(m.is_symmetric(1e-12));
+            assert!(m.diag_dominance_margin() > 0.0);
+            fine_n = coarse_n;
+        }
+        // composed map equals walking the per-level maps
+        let composed = h.composed();
+        assert_eq!(composed.len(), 576);
+        for u in 0..576 {
+            let mut c = h.maps[0][u];
+            for lvl in &h.maps[1..] {
+                c = lvl[c];
+            }
+            assert_eq!(composed[u], c);
+        }
+    }
+
+    #[test]
+    fn hierarchy_is_deterministic_per_matrix() {
+        let a = laplacian_2d(20, 20);
+        let h1 = Hierarchy::build(&a, 100).unwrap();
+        let h2 = Hierarchy::build(&a, 100).unwrap();
+        assert_eq!(h1.maps, h2.maps);
+        assert_eq!(h1.levels(), h2.levels());
+        assert_eq!(h1.coarsest().nrows(), h2.coarsest().nrows());
     }
 
     #[test]
     fn small_or_edgeless_inputs_do_not_coarsen() {
         let a = laplacian_2d(5, 5);
-        let mut rng = Pcg64::new(2);
-        assert!(coarsen(&a, 160, &mut rng).is_none(), "already under cap");
+        assert!(Hierarchy::build(&a, 160).is_none(), "already under cap");
         let mut coo = Coo::square(40);
         for i in 0..40 {
             coo.push(i, i, 1.0);
         }
-        assert!(coarsen(&coo.to_csr(), 10, &mut rng).is_none(), "edgeless");
+        assert!(Hierarchy::build(&coo.to_csr(), 10).is_none(), "edgeless");
     }
 
     #[test]
-    fn restrict_prolong_roundtrip_preserves_order() {
+    fn restrict_prolong_roundtrip_preserves_order_at_every_level() {
         let a = laplacian_2d(20, 20); // n = 400
-        let mut rng = Pcg64::new(3);
-        let c = coarsen(&a, 100, &mut rng).unwrap();
+        let h = Hierarchy::build(&a, 100).unwrap();
         let y_fine: Vec<f64> = (0..400).map(|u| u as f64 / 400.0).collect();
-        let y_c = restrict(&y_fine, &c.fine_to_coarse, c.matrix.nrows());
-        assert_eq!(y_c.len(), c.matrix.nrows());
-        let y_back = prolong(&y_c, &c.fine_to_coarse, &y_fine);
-        // prolonged scores argsort to a valid permutation (tie-break makes
-        // all scores distinct within an aggregate)
+        let rests = h.restrict_all(&y_fine);
+        assert_eq!(rests.len(), h.levels());
+        for (r, m) in rests.iter().zip(&h.matrices) {
+            assert_eq!(r.len(), m.nrows());
+        }
+        // walk back up level by level: every prolongation argsorts to a
+        // valid permutation of its level
+        let mut y = rests.last().unwrap().clone();
+        for lvl in (0..h.levels() - 1).rev() {
+            y = prolong(&y, &h.maps[lvl + 1], &rests[lvl]);
+            check_permutation(&order_from_scores(&y))
+                .unwrap_or_else(|e| panic!("level {lvl}: {e}"));
+        }
+        let y_back = prolong(&y, &h.maps[0], &y_fine);
         check_permutation(&order_from_scores(&y_back)).unwrap();
-        // nodes of the same aggregate stay in their fine relative order
+        // nodes of the same level-0 aggregate stay in their fine relative
+        // order (tie-break makes all scores distinct within an aggregate)
         for u in 0..399 {
             for v in (u + 1)..400 {
-                if c.fine_to_coarse[u] == c.fine_to_coarse[v] {
+                if h.maps[0][u] == h.maps[0][v] {
                     assert!(
                         (y_back[u] < y_back[v]) == (y_fine[u] < y_fine[v]),
                         "aggregate-internal order flipped for ({u},{v})"

@@ -15,16 +15,21 @@
 //!   gradients w.r.t. the dense factor `L` and the soft permutation `P`
 //!   (the ‖L‖₁ term is handled by the proximal operator in `admm`). The
 //!   dense window is what the score gradient flows through for small n;
-//!   beyond the multilevel cap the optimizer switches to the **sampled
-//!   subgradient** ([`sampled_subgradient`]) — a two-sided SPSA estimate
-//!   of the discrete objective, which needs only sparse symbolic work and
-//!   therefore scales with nnz(L), not n².
+//!   beyond the multilevel cap the optimizer switches to sampled
+//!   subgradients — two-sided SPSA probes of the discrete objective
+//!   (generated in `admm::refine`, evaluated by `probes::ProbePool`),
+//!   which need only sparse symbolic work and therefore scale with
+//!   nnz(L), not n².
+//!
+//! [`eval_order`] is the shared work unit: a pure function of
+//! `(matrix, kind, order)` over caller-owned scratch, which is exactly
+//! what lets the probe pool evaluate candidates in parallel with
+//! per-worker workspaces while [`OrderObjective`] keeps the convenient
+//! owning wrapper for the sequential paths.
 
 use crate::factor::lu::{self, LuOptions};
 use crate::factor::{analyze, analyze_lu, FactorKind, FactorWorkspace};
-use crate::order::order_from_scores;
 use crate::sparse::Csr;
-use crate::util::rng::Pcg64;
 
 /// Discrete objective evaluator: hard ordering → structural factor nnz.
 /// Owns the scratch workspace so repeated evaluations (the SPSA inner
@@ -53,17 +58,7 @@ impl<'a> OrderObjective<'a> {
     /// golden criterion the paper's ‖L‖₁ approximates.
     pub fn eval(&mut self, order: &[usize]) -> f64 {
         self.evals += 1;
-        let pap = self.a.permute_sym(order);
-        match self.kind {
-            FactorKind::Cholesky => analyze(&pap).lnnz as f64,
-            FactorKind::Lu => {
-                let lsym = analyze_lu(&pap);
-                match lu::factorize(&pap, &lsym, LuOptions::default(), &mut self.ws) {
-                    Ok(f) => f.lu_nnz() as f64,
-                    Err(_) => lsym.lu_nnz_bound as f64,
-                }
-            }
-        }
+        eval_order(self.a, self.kind, &mut self.ws, order)
     }
 
     /// Entrywise ℓ₁ norm of the factors under `order` (‖L‖₁ + ‖Lᵀ‖₁ for
@@ -83,6 +78,24 @@ impl<'a> OrderObjective<'a> {
                 lu::factorize(&pap, &lsym, LuOptions::default(), &mut self.ws)
                     .ok()
                     .map(|f| f.l1_norm())
+            }
+        }
+    }
+}
+
+/// The golden criterion as a pure function over caller-owned scratch —
+/// the probe pool's work unit. Equals [`OrderObjective::eval`] exactly
+/// (that method delegates here), so parallel probe results are
+/// interchangeable with sequential ones.
+pub fn eval_order(a: &Csr, kind: FactorKind, ws: &mut FactorWorkspace, order: &[usize]) -> f64 {
+    let pap = a.permute_sym(order);
+    match kind {
+        FactorKind::Cholesky => analyze(&pap).lnnz as f64,
+        FactorKind::Lu => {
+            let lsym = analyze_lu(&pap);
+            match lu::factorize(&pap, &lsym, LuOptions::default(), ws) {
+                Ok(f) => f.lu_nnz() as f64,
+                Err(_) => lsym.lu_nnz_bound as f64,
             }
         }
     }
@@ -211,38 +224,12 @@ pub fn smooth_grad_l(g: &[f64], l: &[f64], n: usize) -> Vec<f64> {
     matmul(&gs, l, n)
 }
 
-/// One two-sided SPSA probe of the discrete objective: perturb the scores
-/// along a random ±1 direction, evaluate both sides, and return the
-/// sampled subgradient together with the better probe (candidate for the
-/// caller's acceptance test).
-///
-/// Returns `(ghat, best_probe_value, best_probe_scores)`.
-pub fn sampled_subgradient(
-    obj: &mut OrderObjective,
-    y: &[f64],
-    eps: f64,
-    rng: &mut Pcg64,
-) -> (Vec<f64>, f64, Vec<f64>) {
-    let n = y.len();
-    let delta: Vec<f64> = (0..n).map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }).collect();
-    let yp: Vec<f64> = y.iter().zip(&delta).map(|(v, d)| v + eps * d).collect();
-    let ym: Vec<f64> = y.iter().zip(&delta).map(|(v, d)| v - eps * d).collect();
-    let fp = obj.eval(&order_from_scores(&yp));
-    let fm = obj.eval(&order_from_scores(&ym));
-    let scale = (fp - fm) / (2.0 * eps);
-    let ghat: Vec<f64> = delta.iter().map(|d| scale * d).collect();
-    if fp <= fm {
-        (ghat, fp, yp)
-    } else {
-        (ghat, fm, ym)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen::grid::laplacian_2d;
     use crate::gen::ProblemClass;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn discrete_objective_matches_symbolic_lnnz() {
@@ -362,16 +349,17 @@ mod tests {
     }
 
     #[test]
-    fn sampled_subgradient_probes_are_finite() {
-        let a = laplacian_2d(6, 6);
+    fn eval_order_free_function_matches_owning_evaluator() {
+        // the probe pool's work unit must equal the sequential evaluator
+        // on both factorization kinds
+        let mut ws = FactorWorkspace::new();
+        let a = laplacian_2d(7, 9);
         let mut obj = OrderObjective::new(&a);
-        let y: Vec<f64> = (0..36).map(|i| i as f64 / 36.0).collect();
-        let mut rng = Pcg64::new(6);
-        let (ghat, fbest, ybest) = sampled_subgradient(&mut obj, &y, 0.3, &mut rng);
-        assert_eq!(ghat.len(), 36);
-        assert_eq!(ybest.len(), 36);
-        assert!(fbest.is_finite() && fbest > 0.0);
-        assert_eq!(obj.evals, 2);
-        assert!(ghat.iter().all(|g| g.is_finite()));
+        let rev: Vec<usize> = (0..a.nrows()).rev().collect();
+        assert_eq!(eval_order(&a, FactorKind::Cholesky, &mut ws, &rev), obj.eval(&rev));
+        let u = ProblemClass::Circuit.generate(50, 8);
+        let mut uobj = OrderObjective::new(&u);
+        let id: Vec<usize> = (0..u.nrows()).collect();
+        assert_eq!(eval_order(&u, FactorKind::Lu, &mut ws, &id), uobj.eval(&id));
     }
 }

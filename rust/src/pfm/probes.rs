@@ -1,0 +1,197 @@
+//! Zero-dependency scoped worker pool for parallel probe evaluation.
+//!
+//! The refinement loop's work unit is "evaluate the discrete objective of
+//! one candidate ordering": a `permute_sym` + symbolic analysis (Cholesky)
+//! or numeric Gilbert–Peierls factorization (LU). Candidates inside one
+//! refinement step are independent by construction — they are all
+//! generated *before* any of them is evaluated — so a step's batch fans
+//! out over `std::thread::scope` workers and the results are reduced in
+//! probe-index order afterwards.
+//!
+//! # Determinism
+//!
+//! Orderings are **bit-identical to the sequential path at any thread
+//! count** because the three phases are strictly separated:
+//!
+//! 1. *generation* (single-threaded): every RNG draw happens here, in a
+//!    fixed order that does not depend on the thread count;
+//! 2. *evaluation* (parallel): each probe is a pure function of
+//!    `(matrix, order)` — no RNG, no shared mutable state — and writes its
+//!    result to its own index of the result vector;
+//! 3. *reduction* (single-threaded): acceptance decisions scan the result
+//!    vector in probe-index order with strict `<` comparisons, so ties
+//!    resolve to the lowest index regardless of which worker finished
+//!    first.
+//!
+//! The one caveat is an **expiring wall-clock deadline**: which probes get
+//! skipped depends on when each one starts, which is timing — two runs
+//! differ under an expiring deadline even at the same thread count, so no
+//! thread count can promise bit-equality there. What always holds, budget
+//! or not, is the strict-acceptance invariant (skipped probes are `∞` and
+//! never accepted, so the result is never worse than the init). The
+//! determinism tests and the speedup bench therefore pin `time_ms: None`.
+//!
+//! # Thread safety
+//!
+//! The scoped pool needs no `unsafe` and no locks: the matrix is a shared
+//! `&Csr` (all `Vec`-backed, `Sync`), each worker takes an exclusive
+//! `&mut FactorWorkspace` from the pool's per-worker set (created once,
+//! reused across batches — the steady state allocates nothing), and the
+//! result vector is split into disjoint `&mut` chunks. `thread::scope`
+//! joins every worker before returning, so no borrow outlives the call.
+//!
+//! # Deadlines
+//!
+//! A worker checks the optional deadline *before each probe* and returns
+//! `f64::INFINITY` for probes it skips (never accepted — every real
+//! objective value is finite). This bounds budget overshoot by one
+//! in-flight probe per worker instead of one full batch (the
+//! `OptBudget::serving()` wall-clock contract).
+
+use std::time::Instant;
+
+use crate::factor::{FactorKind, FactorWorkspace};
+use crate::pfm::objective::eval_order;
+use crate::sparse::Csr;
+
+/// Two-sided SPSA directions (and segment-move candidates) generated per
+/// refinement step. Fixed — the batch shape must not depend on the thread
+/// count or determinism across thread counts would be lost.
+pub const PROBES_PER_STEP: usize = 4;
+
+/// Minimum nnz(A) for which a probe batch fans out to scoped threads.
+/// Below this a probe (permute + symbolic analysis) costs little more
+/// than a thread spawn, so the pool runs the batch sequentially — same
+/// results by construction (the phases are identical), just without
+/// paying spawn/join per batch on small serving matrices and the deepest
+/// V-cycle levels.
+const PAR_MIN_NNZ: usize = 2_000;
+
+/// A reusable worker pool: per-worker factorization workspaces plus the
+/// configured parallelism. Threads are scoped per batch (no long-lived
+/// channels to keep alive); the workspaces persist across batches.
+pub struct ProbePool {
+    threads: usize,
+    workspaces: Vec<FactorWorkspace>,
+    evals: usize,
+}
+
+impl ProbePool {
+    /// Pool with `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> ProbePool {
+        let threads = threads.max(1);
+        ProbePool { threads, workspaces: FactorWorkspace::pool(threads), evals: 0 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Discrete-objective evaluations actually performed (deadline-skipped
+    /// probes are not counted).
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    /// Evaluate the discrete objective of every candidate ordering.
+    /// `results[i]` corresponds to `orders[i]`; probes skipped because
+    /// `deadline` passed come back as `f64::INFINITY`.
+    pub fn eval_orders(
+        &mut self,
+        a: &Csr,
+        kind: FactorKind,
+        orders: &[Vec<usize>],
+        deadline: Option<Instant>,
+    ) -> Vec<f64> {
+        if orders.is_empty() {
+            return Vec::new();
+        }
+        let nw = if a.nnz() < PAR_MIN_NNZ { 1 } else { self.threads.min(orders.len()) };
+        let mut results = vec![f64::INFINITY; orders.len()];
+        if nw <= 1 {
+            let ws = &mut self.workspaces[0];
+            for (o, r) in orders.iter().zip(results.iter_mut()) {
+                *r = eval_probe(a, kind, ws, o, deadline);
+            }
+        } else {
+            let chunk = orders.len().div_ceil(nw);
+            std::thread::scope(|s| {
+                for (ws, (ord_chunk, res_chunk)) in self
+                    .workspaces
+                    .iter_mut()
+                    .zip(orders.chunks(chunk).zip(results.chunks_mut(chunk)))
+                {
+                    s.spawn(move || {
+                        for (o, r) in ord_chunk.iter().zip(res_chunk.iter_mut()) {
+                            *r = eval_probe(a, kind, ws, o, deadline);
+                        }
+                    });
+                }
+            });
+        }
+        self.evals += results.iter().filter(|f| f.is_finite()).count();
+        results
+    }
+}
+
+/// One probe: deadline check, then the golden criterion of `order` on `a`.
+fn eval_probe(
+    a: &Csr,
+    kind: FactorKind,
+    ws: &mut FactorWorkspace,
+    order: &[usize],
+    deadline: Option<Instant>,
+) -> f64 {
+    if deadline.is_some_and(|d| Instant::now() >= d) {
+        return f64::INFINITY;
+    }
+    eval_order(a, kind, ws, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::analyze;
+    use crate::gen::grid::laplacian_2d;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pool_matches_sequential_at_every_thread_count() {
+        let a = laplacian_2d(32, 32); // nnz ≈ 5k: above the parallel cutoff
+        assert!(a.nnz() >= PAR_MIN_NNZ, "test must exercise the threaded path");
+        let n = a.nrows();
+        let mut rng = Pcg64::new(3);
+        let orders: Vec<Vec<usize>> = (0..11).map(|_| rng.permutation(n)).collect();
+        let mut seq = ProbePool::new(1);
+        let base = seq.eval_orders(&a, FactorKind::Cholesky, &orders, None);
+        assert_eq!(seq.evals(), 11);
+        // ground truth through the direct symbolic path
+        for (o, f) in orders.iter().zip(&base) {
+            assert_eq!(*f, analyze(&a.permute_sym(o)).lnnz as f64);
+        }
+        for threads in [2, 3, 4, 8, 16] {
+            let mut pool = ProbePool::new(threads);
+            let fs = pool.eval_orders(&a, FactorKind::Cholesky, &orders, None);
+            assert_eq!(fs, base, "threads={threads}");
+            assert_eq!(pool.evals(), 11);
+        }
+    }
+
+    #[test]
+    fn expired_deadline_skips_probes() {
+        let a = laplacian_2d(8, 8);
+        let orders: Vec<Vec<usize>> = vec![(0..64).collect(); 6];
+        let mut pool = ProbePool::new(4);
+        let fs = pool.eval_orders(&a, FactorKind::Cholesky, &orders, Some(Instant::now()));
+        assert!(fs.iter().all(|f| f.is_infinite()), "{fs:?}");
+        assert_eq!(pool.evals(), 0, "skipped probes must not count as evals");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let a = laplacian_2d(4, 4);
+        let mut pool = ProbePool::new(4);
+        assert!(pool.eval_orders(&a, FactorKind::Cholesky, &[], None).is_empty());
+        assert_eq!(pool.evals(), 0);
+    }
+}

@@ -6,7 +6,7 @@
 //! from is always recorded in the returned provenance.
 
 use crate::order::{fiedler_order_with, order_from_scores_f32};
-use crate::pfm::{OptBudget, PfmOptimizer, ScoreInit, SPECTRAL_INIT_ITERS};
+use crate::pfm::{OptBudget, PfmOptimizer, ScoreInit, SharedPrep, SPECTRAL_INIT_ITERS};
 use crate::runtime::executor::{PfmRuntime, RuntimeError};
 use crate::sparse::Csr;
 
@@ -44,6 +44,8 @@ pub struct OrderOutcome {
     pub opt_iters: usize,
     /// discrete objective evaluations the native optimizer spent
     pub opt_evals: usize,
+    /// intermediate V-cycle levels the native optimizer refined
+    pub levels_refined: usize,
 }
 
 /// The learned reordering methods of the paper's Table 2 / Table 3.
@@ -125,6 +127,13 @@ impl Learned {
         }
     }
 
+    /// Whether this variant runs the native in-Rust optimizer when no
+    /// artifact covers a matrix (the coordinator's batched path only
+    /// prepares shared work for such variants).
+    pub fn has_native_path(&self) -> bool {
+        self.native_init().is_some()
+    }
+
     /// Compute the ordering with full provenance. Artifact-covered sizes
     /// run the network; PFM variants without artifact coverage run the
     /// native optimizer under `budget` (default budget when `None`);
@@ -136,6 +145,24 @@ impl Learned {
         seed: u64,
         budget: Option<OptBudget>,
     ) -> Result<OrderOutcome, RuntimeError> {
+        self.order_detailed_shared(rt, a, seed, budget, 1, None)
+    }
+
+    /// [`order_detailed`](Self::order_detailed) with the coordinator's
+    /// extra levers: a probe-pool width for the native optimizer's
+    /// refinement passes (quality-neutral — results are bit-identical at
+    /// any width unless a wall-clock deadline expires mid-run) and an
+    /// optional [`SharedPrep`] computed once for an identical-matrix
+    /// batch.
+    pub fn order_detailed_shared(
+        &self,
+        rt: &mut PfmRuntime,
+        a: &Csr,
+        seed: u64,
+        budget: Option<OptBudget>,
+        probe_threads: usize,
+        prep: Option<&SharedPrep>,
+    ) -> Result<OrderOutcome, RuntimeError> {
         if rt.covers(self.variant(), a.nrows()) {
             let scores = rt.scores(self.variant(), a, seed)?;
             return Ok(OrderOutcome {
@@ -143,16 +170,20 @@ impl Learned {
                 provenance: Provenance::Network,
                 opt_iters: 0,
                 opt_evals: 0,
+                levels_refined: 0,
             });
         }
         if let Some(init) = self.native_init() {
-            let opt = PfmOptimizer::new(budget.unwrap_or_default(), seed).with_init(init);
-            let rep = opt.optimize(a);
+            let opt = PfmOptimizer::new(budget.unwrap_or_default(), seed)
+                .with_init(init)
+                .with_threads(probe_threads);
+            let rep = opt.optimize_shared(a, prep);
             return Ok(OrderOutcome {
                 order: rep.order,
                 provenance: Provenance::NativeOptimizer,
                 opt_iters: rep.outer_iters,
                 opt_evals: rep.evals,
+                levels_refined: rep.levels_refined,
             });
         }
         // Surrogate-objective methods approximate a spectral ordering;
@@ -162,6 +193,7 @@ impl Learned {
             provenance: Provenance::SpectralFallback,
             opt_iters: 0,
             opt_evals: 0,
+            levels_refined: 0,
         })
     }
 
@@ -212,9 +244,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let mut rt = PfmRuntime::new(&dir).unwrap();
         let a = laplacian_2d(9, 9);
-        let out = Learned::Pfm
-            .order_detailed(&mut rt, &a, 1, Some(OptBudget { outer: 2, refine: 10, time_ms: None }))
-            .unwrap();
+        let budget = Some(OptBudget { outer: 2, refine: 10, ..OptBudget::default() });
+        let out = Learned::Pfm.order_detailed(&mut rt, &a, 1, budget).unwrap();
         assert_eq!(out.provenance, Provenance::NativeOptimizer);
         check_permutation(&out.order).unwrap();
         assert!(out.opt_evals > 0, "native path must spend objective evaluations");
@@ -251,7 +282,7 @@ mod tests {
         let base = laplacian_2d(10, 10);
         let shuffle = crate::util::rng::Pcg64::new(40).permutation(100);
         let a = base.permute_sym(&shuffle);
-        let budget = Some(OptBudget { outer: 2, refine: 8, time_ms: None });
+        let budget = Some(OptBudget { outer: 2, refine: 8, ..OptBudget::default() });
         let pfm = Learned::Pfm.order_detailed(&mut rt, &a, 5, budget).unwrap();
         let ri = Learned::PfmRandinit.order_detailed(&mut rt, &a, 5, budget).unwrap();
         assert_eq!(pfm.provenance, Provenance::NativeOptimizer);

@@ -1,0 +1,197 @@
+//! The determinism-and-quality test layer locking in the parallel V-cycle
+//! PFM optimizer:
+//!
+//! * V-cycle per-level refinement never loses to the PR 4 coarsest-only
+//!   multilevel path (exact nnz(L), per matrix, across the symmetric
+//!   suite) — the fine-refinement budget is zeroed in both runs so the
+//!   comparison isolates the V-cycle itself, and the V-cycle evaluates
+//!   the coarsest-only candidate first, so ≤ holds by construction.
+//! * Adaptive-ρ ADMM keeps the non-increasing trace and never ends above
+//!   the fixed-ρ schedule on a badly scaled window.
+//! * A single oversized probe batch cannot overshoot `OptBudget::time_ms`
+//!   by more than ~2× one probe's cost (the probe-level deadline check).
+//!
+//! The `#[ignore]` variants widen the sweeps for the nightly
+//! (`workflow_dispatch`) CI job: `cargo test -q -- --include-ignored`.
+
+use std::time::Instant;
+
+use pfm_reorder::factor::analyze;
+use pfm_reorder::gen::grid::{laplacian_2d, scaled_node_laplacian_2d};
+use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::pfm::{OptBudget, OrderObjective, PfmOptimizer};
+use pfm_reorder::sparse::Csr;
+use pfm_reorder::util::check::check_permutation;
+
+/// Zero-fine-refinement budgets isolating the multilevel stage: the two
+/// runs share every RNG draw up to (and including) the coarse ADMM, so
+/// the V-cycle run's result is the coarsest-only run's result with extra
+/// strictly-accepted candidates.
+fn coarsest_only_budget() -> OptBudget {
+    OptBudget { outer: 2, refine: 0, level_refine: 0, adaptive_rho: false, time_ms: None }
+}
+
+fn vcycle_budget() -> OptBudget {
+    OptBudget { level_refine: 10, ..coarsest_only_budget() }
+}
+
+fn assert_vcycle_never_worse(a: &Csr, seed: u64, label: &str) -> (f64, f64) {
+    let coarse = PfmOptimizer::new(coarsest_only_budget(), seed).optimize(a);
+    let vcycle = PfmOptimizer::new(vcycle_budget(), seed).optimize(a);
+    check_permutation(&coarse.order).unwrap();
+    check_permutation(&vcycle.order).unwrap();
+    // exact nnz(L): the reported objective is re-verified symbolically
+    let coarse_lnnz = analyze(&a.permute_sym(&coarse.order)).lnnz as f64;
+    let vcycle_lnnz = analyze(&a.permute_sym(&vcycle.order)).lnnz as f64;
+    assert_eq!(coarse.objective, coarse_lnnz, "{label}: coarsest-only objective drifted");
+    assert_eq!(vcycle.objective, vcycle_lnnz, "{label}: V-cycle objective drifted");
+    assert!(
+        vcycle.objective <= coarse.objective,
+        "{label}: V-cycle nnz(L) {} above coarsest-only {}",
+        vcycle.objective,
+        coarse.objective
+    );
+    assert_eq!(coarse.levels_refined, 0);
+    assert!(vcycle.levels_refined >= 1, "{label}: V-cycle refined no levels");
+    (vcycle.objective, coarse.objective)
+}
+
+#[test]
+fn vcycle_never_worse_than_coarsest_only_on_symmetric_suite() {
+    let mut v_sum = 0.0;
+    let mut c_sum = 0.0;
+    for (i, class) in ProblemClass::ALL.iter().enumerate() {
+        // n = 400: the first heavy-edge contraction can at best halve the
+        // graph, so the coarsest level needs ≥ 2 contractions — the
+        // V-cycle is guaranteed an intermediate level to refine
+        let a = class.generate(400, 0x7AB2E2 + i as u64);
+        assert!(a.nrows() > 2 * 160, "{class:?} must exercise the V-cycle path");
+        let (v, c) = assert_vcycle_never_worse(&a, 0x7AB2E2, &format!("{class:?}"));
+        v_sum += v;
+        c_sum += c;
+    }
+    // per-matrix ≤ implies the suite mean can only improve (the PR's
+    // acceptance criterion against the PR 4 coarsest-only path)
+    assert!(v_sum <= c_sum, "suite mean regressed: {v_sum} vs {c_sum}");
+}
+
+#[test]
+#[ignore = "nightly quality sweep: larger sizes and more seeds"]
+fn vcycle_never_worse_full_sweep() {
+    for &n in &[400usize, 576] {
+        for (i, class) in ProblemClass::ALL.iter().enumerate() {
+            for seed in [1u64, 9, 0x7AB2E2] {
+                let a = class.generate(n, seed ^ ((i as u64) << 4));
+                assert_vcycle_never_worse(&a, seed, &format!("{class:?} n={n} seed={seed}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_rho_not_worse_than_fixed_on_badly_scaled_window() {
+    // one huge node (D·A·D, d = 1e6): the max-normalized ADMM window
+    // becomes ~rank-1, which crushes the fixed-ρ gradient signal — the
+    // badly scaled regime the residual balancing targets (same generator
+    // as the admm-level firing test)
+    let a = scaled_node_laplacian_2d(10, 10, 37, 1e6);
+    for seed in [1u64, 2, 5] {
+        let fixed =
+            OptBudget { outer: 10, refine: 0, level_refine: 0, adaptive_rho: false, time_ms: None };
+        let adaptive = OptBudget { adaptive_rho: true, ..fixed };
+        let rf = PfmOptimizer::new(fixed, seed).optimize(&a);
+        let ra = PfmOptimizer::new(adaptive, seed).optimize(&a);
+        for w in ra.trace.windows(2) {
+            assert!(w[1] <= w[0], "seed {seed}: adaptive trace increased: {:?}", ra.trace);
+        }
+        // strict acceptance caps both at the init; on this window the
+        // adaptive schedule never loses (mirror-validated across seeds)
+        assert!(ra.objective <= ra.init_objective);
+        assert!(
+            ra.objective <= rf.objective,
+            "seed {seed}: adaptive {} worse than fixed {}",
+            ra.objective,
+            rf.objective
+        );
+    }
+}
+
+#[test]
+#[ignore = "wall-clock sensitive: CI runs it explicitly in the release --test-threads=1 step"]
+fn probe_deadline_bounds_overshoot_to_two_probe_costs() {
+    // the satellite fix: `time_ms` used to be checked only between outer
+    // iterations / steps, so one oversized parallel probe batch could
+    // overshoot by a whole batch. The pool's per-probe deadline check
+    // bounds the overshoot by ~one in-flight probe per worker; this pins
+    // it at < 2× one probe's cost (plus scheduler slack for CI).
+    let a = laplacian_2d(48, 48); // n = 2304: one probe is genuinely costly
+    let mut obj = OrderObjective::new(&a);
+    let probe_order = pfm_reorder::order::fiedler_order_with(&a, 60, 1);
+    let t = Instant::now();
+    obj.eval(&probe_order);
+    let probe_cost = t.elapsed().as_secs_f64();
+
+    // baseline: the budget-independent prologue (spectral init + the two
+    // free candidate evaluations), measured with zero iteration budget
+    let none =
+        OptBudget { outer: 0, refine: 0, level_refine: 0, adaptive_rho: false, time_ms: None };
+    let t = Instant::now();
+    PfmOptimizer::new(none, 1).optimize(&a);
+    let prologue = t.elapsed().as_secs_f64();
+
+    let budget_ms = 40u64;
+    let capped = OptBudget { refine: 100_000, time_ms: Some(budget_ms), ..none };
+    let t = Instant::now();
+    let rep = PfmOptimizer::new(capped, 1).with_threads(2).optimize(&a);
+    let elapsed = t.elapsed().as_secs_f64();
+    check_permutation(&rep.order).unwrap();
+
+    let overshoot = elapsed - prologue - budget_ms as f64 / 1e3;
+    assert!(
+        overshoot < 2.0 * probe_cost + 0.25,
+        "deadline overshoot {overshoot:.3}s exceeds 2 probes ({:.3}s) + slack",
+        2.0 * probe_cost
+    );
+}
+
+#[test]
+fn parallel_determinism_grid_all_thread_counts() {
+    // CI runs this with --test-threads=1 so the timing (and any future
+    // timing-sensitive assertion) is honest; the pure determinism check
+    // itself is timing-free because no wall-clock budget is set
+    let a = laplacian_2d(24, 24); // n = 576: V-cycle + fine refinement
+    let budget =
+        OptBudget { outer: 1, refine: 12, level_refine: 4, adaptive_rho: true, time_ms: None };
+    let base = PfmOptimizer::new(budget, 42).with_threads(1).optimize(&a);
+    check_permutation(&base.order).unwrap();
+    for threads in [2usize, 4, 8] {
+        let rep = PfmOptimizer::new(budget, 42).with_threads(threads).optimize(&a);
+        assert_eq!(rep.order, base.order, "threads={threads}");
+        assert_eq!(rep.objective, base.objective, "threads={threads}");
+        assert_eq!(rep.trace, base.trace, "threads={threads}");
+        assert_eq!(rep.evals, base.evals, "threads={threads}");
+    }
+}
+
+#[test]
+#[ignore = "nightly determinism sweep: every symmetric class, both paths"]
+fn parallel_determinism_full_sweep() {
+    for (i, class) in ProblemClass::ALL.iter().enumerate() {
+        for &n in &[140usize, 400] {
+            let a = class.generate(n, 7 + i as u64);
+            let budget = OptBudget {
+                outer: 2,
+                refine: 18,
+                level_refine: 6,
+                adaptive_rho: i % 2 == 0,
+                time_ms: None,
+            };
+            let base = PfmOptimizer::new(budget, 13).with_threads(1).optimize(&a);
+            for threads in [2usize, 4, 8] {
+                let rep = PfmOptimizer::new(budget, 13).with_threads(threads).optimize(&a);
+                assert_eq!(rep.order, base.order, "{class:?} n={n} threads={threads}");
+                assert_eq!(rep.trace, base.trace, "{class:?} n={n} threads={threads}");
+            }
+        }
+    }
+}

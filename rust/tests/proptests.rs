@@ -584,7 +584,7 @@ fn prop_pfm_optimizer_valid_permutation_on_all_8_classes() {
         let class = classes[rng.next_below(classes.len())];
         let n = 60 + rng.next_below(80);
         let a = class.generate(n, rng.next_u64());
-        let budget = OptBudget { outer: 1, refine: 6, time_ms: None };
+        let budget = OptBudget { outer: 1, refine: 6, ..OptBudget::default() };
         let rep = PfmOptimizer::new(budget, rng.next_u64()).optimize(&a);
         check_permutation(&rep.order).map_err(|e| format!("{class:?}: {e}"))?;
         if rep.order.len() != a.nrows() {
@@ -613,7 +613,7 @@ fn prop_pfm_admm_objective_non_increasing() {
     forall(6, |rng| {
         let class = ProblemClass::ALL[rng.next_below(6)];
         let a = class.generate(70 + rng.next_below(60), rng.next_u64());
-        let budget = OptBudget { outer: 4, refine: 12, time_ms: None };
+        let budget = OptBudget { outer: 4, refine: 12, ..OptBudget::default() };
         let rep = PfmOptimizer::new(budget, rng.next_u64()).optimize(&a);
         if rep.trace.is_empty() {
             return Err(format!("{class:?}: empty trace"));
@@ -635,6 +635,110 @@ fn prop_pfm_admm_objective_non_increasing() {
 }
 
 #[test]
+fn prop_pfm_parallel_refinement_is_deterministic_across_thread_counts() {
+    // the PR's headline invariant: for random SPD and grid classes, the
+    // parallel refinement returns the *same permutation* as the sequential
+    // path (threads = 1) for the same seed and budget — bit-identical, via
+    // single-threaded generation + fixed-order reduction
+    use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
+    forall(6, |rng| {
+        // alternate random SPD (dense-window path, sequential-probe sizes)
+        // with grids above the multilevel cap AND the pool's parallel
+        // cutoff (V-cycle + per-level refinement, genuinely threaded)
+        let (label, a) = if rng.next_f64() < 0.5 {
+            ("random_spd", random_spd(rng))
+        } else {
+            let side = 21 + rng.next_below(6); // n in [441, 676], nnz > 2000
+            ("grid", pfm_reorder::gen::grid::laplacian_2d(side, side))
+        };
+        let seed = rng.next_u64();
+        let budget = OptBudget {
+            outer: 1,
+            refine: 9,
+            level_refine: 4,
+            adaptive_rho: rng.next_f64() < 0.5,
+            time_ms: None,
+        };
+        let base = PfmOptimizer::new(budget, seed).with_threads(1).optimize(&a);
+        check_permutation(&base.order)?;
+        for threads in [2usize, 4, 8] {
+            let rep = PfmOptimizer::new(budget, seed).with_threads(threads).optimize(&a);
+            if rep.order != base.order {
+                return Err(format!(
+                    "{label} n={}: threads={threads} changed the ordering",
+                    a.nrows()
+                ));
+            }
+            if rep.objective != base.objective || rep.trace != base.trace {
+                return Err(format!("{label}: threads={threads} changed the trace"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pfm_hierarchy_prolongation_valid_on_all_8_classes() {
+    // quality-regression satellite (c): walking scores down and back up the
+    // V-cycle hierarchy yields a valid permutation at every level
+    use pfm_reorder::order::order_from_scores;
+    use pfm_reorder::pfm::multilevel::{prolong, Hierarchy};
+    let classes: Vec<ProblemClass> = ProblemClass::ALL
+        .iter()
+        .chain(&ProblemClass::UNSYMMETRIC)
+        .copied()
+        .collect();
+    forall(12, |rng| {
+        let class = classes[rng.next_below(classes.len())];
+        let n = 90 + rng.next_below(120);
+        let a = class.generate(n, rng.next_u64());
+        let gm = if a.is_symmetric(1e-12) { a.clone() } else { a.symmetrize() };
+        let cap = 24 + rng.next_below(40);
+        let Some(h) = Hierarchy::build(&gm, cap) else {
+            return Err(format!("{class:?} n={n} cap={cap}: hierarchy must build"));
+        };
+        let y: Vec<f64> = (0..gm.nrows()).map(|_| rng.next_gaussian()).collect();
+        let rests = h.restrict_all(&y);
+        let mut cur = rests.last().unwrap().clone();
+        for lvl in (0..h.levels() - 1).rev() {
+            cur = prolong(&cur, &h.maps[lvl + 1], &rests[lvl]);
+            // prolonged scores live on the level's node set, stay finite,
+            // and argsort to a valid permutation of that level
+            if cur.len() != h.matrices[lvl].nrows() {
+                return Err(format!("{class:?} level {lvl}: wrong length"));
+            }
+            if cur.iter().any(|v| !v.is_finite()) {
+                return Err(format!("{class:?} level {lvl}: non-finite score"));
+            }
+            let order = order_from_scores(&cur);
+            check_permutation(&order).map_err(|e| format!("{class:?} level {lvl}: {e}"))?;
+        }
+        let fine = prolong(&cur, &h.maps[0], &y);
+        if fine.len() != gm.nrows() {
+            return Err(format!("{class:?}: fine prolongation wrong length"));
+        }
+        check_permutation(&order_from_scores(&fine))
+            .map_err(|e| format!("{class:?} fine: {e}"))?;
+        // the tie-break must keep same-aggregate nodes in their fine
+        // relative order (distinct fine scores ⇒ distinct prolonged order)
+        for _ in 0..40 {
+            let u = rng.next_below(fine.len());
+            let v = rng.next_below(fine.len());
+            if u != v
+                && h.maps[0][u] == h.maps[0][v]
+                && y[u] != y[v]
+                && (fine[u] < fine[v]) != (y[u] < y[v])
+            {
+                return Err(format!(
+                    "{class:?}: aggregate-internal order flipped for ({u},{v})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pfm_never_exceeds_spectral_init_fill_on_symmetric_suite() {
     use pfm_reorder::order::fiedler_order_with;
     use pfm_reorder::pfm::{OptBudget, PfmOptimizer, SPECTRAL_INIT_ITERS};
@@ -642,7 +746,7 @@ fn prop_pfm_never_exceeds_spectral_init_fill_on_symmetric_suite() {
         let class = ProblemClass::ALL[rng.next_below(6)];
         let a = class.generate(70 + rng.next_below(80), rng.next_u64());
         let seed = rng.next_u64();
-        let budget = OptBudget { outer: 2, refine: 10, time_ms: None };
+        let budget = OptBudget { outer: 2, refine: 10, ..OptBudget::default() };
         let rep = PfmOptimizer::new(budget, seed).optimize(&a);
         let spectral = fiedler_order_with(&a, SPECTRAL_INIT_ITERS, seed);
         let init_fill = fill_ratio_of_order(&a, &spectral);

@@ -114,6 +114,57 @@ fn corrupt_artifact_reports_error_gracefully() {
 }
 
 #[test]
+fn shutdown_mid_burst_answers_every_inflight_request() {
+    // regression for the PR 1 dispatcher-drop bug, now under the batched
+    // native-PFM path: a burst larger than one drain window is in flight
+    // when shutdown fires — every receiver must still get *a* response
+    // (success for requests already past the dispatcher, an explicit
+    // shutdown error for the rest), never a silent drop
+    use pfm_reorder::pfm::OptBudget;
+    use std::time::Duration;
+    let dir = std::env::temp_dir().join(format!("pfm_shutmid_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let svc = ReorderService::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: dir.to_string_lossy().to_string(),
+        ..Default::default()
+    });
+    let a = ProblemClass::TwoDThreeD.generate(324, 3);
+    let budget = OptBudget { outer: 1, refine: 4, level_refine: 2, ..OptBudget::default() };
+    let mut rxs = Vec::new();
+    for i in 0..16u64 {
+        rxs.push(svc.submit_with_budget(
+            a.clone(),
+            Method::Learned(Learned::Pfm),
+            i,
+            false,
+            None,
+            Some(budget),
+        ));
+    }
+    svc.shutdown();
+    let mut served = 0usize;
+    let mut refused = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(resp) => match resp.result {
+                Ok(res) => {
+                    check_permutation(&res.order).unwrap();
+                    served += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("shut"), "unexpected error: {e}");
+                    refused += 1;
+                }
+            },
+            Err(e) => panic!("an in-flight request was dropped without a response: {e}"),
+        }
+    }
+    assert_eq!(served + refused, 16, "every request must be answered");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn full_pipeline_order_factor_solve_all_methods() {
     // the complete downstream workflow on a mid-size FEM-like system
     let a = ProblemClass::Cfd.generate(300, 9);
