@@ -10,14 +10,16 @@
 
 use std::sync::Arc;
 
+use pfm_reorder::coordinator::Method;
 use pfm_reorder::factor::lu::{self, LuOptions};
 use pfm_reorder::factor::supernodal::{self, SupernodalSymbolic};
 use pfm_reorder::factor::{
     analyze, cholesky_with_ws, fundamental_supernodes, refactor_into, FactorWorkspace,
 };
+use pfm_reorder::gateway::wire;
 use pfm_reorder::gen::grid::{convection_diffusion_2d, laplacian_2d, laplacian_3d};
 use pfm_reorder::gen::ProblemClass;
-use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm};
+use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm, Classical};
 use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
 use pfm_reorder::util::json::Json;
 use pfm_reorder::util::rng::Pcg64;
@@ -189,6 +191,27 @@ fn main() {
     bench(&mut results, "to_dense_padded/n512", warm, it(20), || {
         let a = ProblemClass::TwoDThreeD.generate(484, 3);
         a.to_dense_padded_f32(512)
+    });
+
+    // --- gateway wire codec: one serving-sized request frame payload ---
+    // decode includes the full structural validation the gateway performs
+    // on untrusted input, so this is the per-request ingest overhead
+    let wire_req = wire::WireRequest {
+        id: 1,
+        method: Method::Classical(Classical::Amd),
+        seed: 7,
+        eval_fill: true,
+        factor_kind: None,
+        opt_budget: None,
+        matrix: grid2d.clone(),
+    };
+    let payload = wire::encode_request(&wire_req).unwrap();
+    println!("  gateway request payload for 2d_n4096: {} bytes", payload.len());
+    bench(&mut results, "gateway_wire/encode_request_2d_n4096", warm, it(20), || {
+        wire::encode_request(&wire_req).unwrap()
+    });
+    bench(&mut results, "gateway_wire/decode_request_2d_n4096", warm, it(20), || {
+        wire::decode_request(&payload).unwrap()
     });
 
     // --- machine-readable baseline: name → ns/iter (median) ---

@@ -1,13 +1,26 @@
 //! Service metrics: counters and latency histograms, JSON-exportable.
 //! Lock-coarse (one mutex) — the coordinator serves ordering requests, not
-//! packets; contention is negligible next to the work per request.
+//! packets; contention is negligible next to the work per request. The
+//! mutex is taken through `lock_unpoisoned`, so a panic inside any holder
+//! (worker, network thread, gateway connection) can never make the metrics
+//! sink itself start panicking.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::runtime::Provenance;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 use crate::util::timer::Stats;
+
+/// Why the gateway answered a request with a `Busy` frame instead of a
+/// result: the service's bounded queue was full, or the client exceeded
+/// its token bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BusyKind {
+    QueueFull,
+    RateLimited,
+}
 
 #[derive(Default)]
 struct Inner {
@@ -35,6 +48,20 @@ struct Inner {
     levels_refined: usize,
     /// probe-pool width the service runs native-PFM refinement with
     probe_threads: usize,
+    /// requests whose serving thread panicked (caught and answered with an
+    /// error — the request is lost, the thread is not)
+    worker_panics: usize,
+    /// submissions currently sitting in the bounded queue (enqueued minus
+    /// dispatched — an approximate live gauge, exported for admin)
+    queue_depth: usize,
+    /// TCP gateway counters (zero unless a gateway fronts this service)
+    gw_connections: usize,
+    gw_frames_rx: usize,
+    gw_frames_tx: usize,
+    gw_busy_queue: usize,
+    gw_busy_throttled: usize,
+    gw_malformed: usize,
+    gw_admin: usize,
 }
 
 /// Shared metrics sink.
@@ -58,7 +85,7 @@ impl Metrics {
         batch: usize,
         provenance: Option<Provenance>,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         m.latencies.entry(method).or_default().push(latency);
         *m.completed.entry(method).or_default() += 1;
         if batch > 0 {
@@ -72,29 +99,29 @@ impl Metrics {
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        lock_unpoisoned(&self.inner).errors += 1;
     }
 
     pub fn total_completed(&self) -> usize {
-        self.inner.lock().unwrap().completed.values().sum()
+        lock_unpoisoned(&self.inner).completed.values().sum()
     }
 
     pub fn errors(&self) -> usize {
-        self.inner.lock().unwrap().errors
+        lock_unpoisoned(&self.inner).errors
     }
 
     pub fn fallbacks(&self) -> usize {
-        self.inner.lock().unwrap().fallbacks
+        lock_unpoisoned(&self.inner).fallbacks
     }
 
     /// Orderings served by the native PFM optimizer.
     pub fn native_optimized(&self) -> usize {
-        self.inner.lock().unwrap().native_opts
+        lock_unpoisoned(&self.inner).native_opts
     }
 
     /// Record one symbolic-cache lookup outcome (fill evaluation path).
     pub fn record_symbolic(&self, hit: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         if hit {
             m.symbolic_hits += 1;
         } else {
@@ -103,46 +130,133 @@ impl Metrics {
     }
 
     pub fn symbolic_hits(&self) -> usize {
-        self.inner.lock().unwrap().symbolic_hits
+        lock_unpoisoned(&self.inner).symbolic_hits
     }
 
     pub fn symbolic_misses(&self) -> usize {
-        self.inner.lock().unwrap().symbolic_misses
+        lock_unpoisoned(&self.inner).symbolic_misses
     }
 
     /// Record analyses saved by pattern-keyed batch sharing (`k` = batch
     /// members beyond the group lead).
     pub fn record_shared_analyses(&self, k: usize) {
-        self.inner.lock().unwrap().shared_analyses += k;
+        lock_unpoisoned(&self.inner).shared_analyses += k;
     }
 
     pub fn shared_analyses(&self) -> usize {
-        self.inner.lock().unwrap().shared_analyses
+        lock_unpoisoned(&self.inner).shared_analyses
     }
 
     /// Accumulate the V-cycle levels a native-PFM request refined.
     pub fn record_levels_refined(&self, k: usize) {
-        self.inner.lock().unwrap().levels_refined += k;
+        lock_unpoisoned(&self.inner).levels_refined += k;
     }
 
     pub fn levels_refined(&self) -> usize {
-        self.inner.lock().unwrap().levels_refined
+        lock_unpoisoned(&self.inner).levels_refined
     }
 
     /// Record the service's configured probe-pool width (set once at
     /// startup; exported so the JSON snapshot documents how native-PFM
     /// requests were run).
     pub fn set_probe_threads(&self, threads: usize) {
-        self.inner.lock().unwrap().probe_threads = threads;
+        lock_unpoisoned(&self.inner).probe_threads = threads;
     }
 
     pub fn probe_threads(&self) -> usize {
-        self.inner.lock().unwrap().probe_threads
+        lock_unpoisoned(&self.inner).probe_threads
+    }
+
+    /// Record a caught panic in a serving thread (the request was answered
+    /// with an error; the thread kept running).
+    pub fn record_worker_panic(&self) {
+        lock_unpoisoned(&self.inner).worker_panics += 1;
+    }
+
+    pub fn worker_panics(&self) -> usize {
+        lock_unpoisoned(&self.inner).worker_panics
+    }
+
+    /// A request entered the bounded submission queue.
+    pub fn record_enqueued(&self) {
+        lock_unpoisoned(&self.inner).queue_depth += 1;
+    }
+
+    /// The dispatcher pulled a request off the bounded submission queue.
+    pub fn record_dequeued(&self) {
+        let mut m = lock_unpoisoned(&self.inner);
+        m.queue_depth = m.queue_depth.saturating_sub(1);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        lock_unpoisoned(&self.inner).queue_depth
+    }
+
+    /// One accepted gateway connection.
+    pub fn record_gateway_connection(&self) {
+        lock_unpoisoned(&self.inner).gw_connections += 1;
+    }
+
+    /// One well-framed gateway frame read off a connection.
+    pub fn record_gateway_frame_rx(&self) {
+        lock_unpoisoned(&self.inner).gw_frames_rx += 1;
+    }
+
+    /// One gateway frame written to a connection.
+    pub fn record_gateway_frame_tx(&self) {
+        lock_unpoisoned(&self.inner).gw_frames_tx += 1;
+    }
+
+    /// One request answered `Busy` instead of being served.
+    pub fn record_gateway_busy(&self, kind: BusyKind) {
+        let mut m = lock_unpoisoned(&self.inner);
+        match kind {
+            BusyKind::QueueFull => m.gw_busy_queue += 1,
+            BusyKind::RateLimited => m.gw_busy_throttled += 1,
+        }
+    }
+
+    /// One malformed frame or payload rejected by the gateway codec.
+    pub fn record_gateway_malformed(&self) {
+        lock_unpoisoned(&self.inner).gw_malformed += 1;
+    }
+
+    /// One admin-protocol request served.
+    pub fn record_gateway_admin(&self) {
+        lock_unpoisoned(&self.inner).gw_admin += 1;
+    }
+
+    pub fn gateway_connections(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_connections
+    }
+
+    pub fn gateway_frames_rx(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_frames_rx
+    }
+
+    pub fn gateway_frames_tx(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_frames_tx
+    }
+
+    pub fn gateway_busy_queue(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_busy_queue
+    }
+
+    pub fn gateway_busy_throttled(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_busy_throttled
+    }
+
+    pub fn gateway_malformed(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_malformed
+    }
+
+    pub fn gateway_admin(&self) -> usize {
+        lock_unpoisoned(&self.inner).gw_admin
     }
 
     /// Latency stats per method.
     pub fn latency_stats(&self) -> Vec<(&'static str, Stats)> {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         let mut out: Vec<(&'static str, Stats)> = m
             .latencies
             .iter()
@@ -155,7 +269,7 @@ impl Metrics {
 
     /// Mean network batch occupancy.
     pub fn mean_batch(&self) -> f64 {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         if m.batch_sizes.is_empty() {
             return 0.0;
         }
@@ -176,9 +290,22 @@ impl Metrics {
                     .set("max_s", s.max),
             );
         }
+        let gateway = {
+            let m = lock_unpoisoned(&self.inner);
+            Json::obj()
+                .set("connections", m.gw_connections)
+                .set("frames_rx", m.gw_frames_rx)
+                .set("frames_tx", m.gw_frames_tx)
+                .set("busy_queue_full", m.gw_busy_queue)
+                .set("busy_rate_limited", m.gw_busy_throttled)
+                .set("malformed_frames", m.gw_malformed)
+                .set("admin_requests", m.gw_admin)
+        };
         Json::obj()
             .set("completed", self.total_completed())
             .set("errors", self.errors())
+            .set("worker_panics", self.worker_panics())
+            .set("queue_depth", self.queue_depth())
             .set("fallbacks", self.fallbacks())
             .set("native_optimizer", self.native_optimized())
             .set("mean_batch", self.mean_batch())
@@ -187,6 +314,7 @@ impl Metrics {
             .set("shared_analyses", self.shared_analyses())
             .set("levels_refined", self.levels_refined())
             .set("probe_threads", self.probe_threads())
+            .set("gateway", gateway)
             .set("latency", per_method)
     }
 }
@@ -233,5 +361,46 @@ mod tests {
         assert!(json.contains("\"shared_analyses\":5"));
         assert!(json.contains("\"levels_refined\":7"));
         assert!(json.contains("\"probe_threads\":4"));
+    }
+
+    #[test]
+    fn gateway_and_panic_counters_export() {
+        let m = Metrics::new();
+        m.record_worker_panic();
+        m.record_enqueued();
+        m.record_enqueued();
+        m.record_dequeued();
+        m.record_gateway_connection();
+        m.record_gateway_frame_rx();
+        m.record_gateway_frame_rx();
+        m.record_gateway_frame_tx();
+        m.record_gateway_busy(BusyKind::QueueFull);
+        m.record_gateway_busy(BusyKind::RateLimited);
+        m.record_gateway_busy(BusyKind::RateLimited);
+        m.record_gateway_malformed();
+        m.record_gateway_admin();
+        assert_eq!(m.worker_panics(), 1);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.gateway_connections(), 1);
+        assert_eq!(m.gateway_frames_rx(), 2);
+        assert_eq!(m.gateway_frames_tx(), 1);
+        assert_eq!(m.gateway_busy_queue(), 1);
+        assert_eq!(m.gateway_busy_throttled(), 2);
+        assert_eq!(m.gateway_malformed(), 1);
+        assert_eq!(m.gateway_admin(), 1);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"worker_panics\":1"));
+        assert!(json.contains("\"queue_depth\":1"));
+        assert!(json.contains("\"busy_queue_full\":1"));
+        assert!(json.contains("\"busy_rate_limited\":2"));
+        assert!(json.contains("\"malformed_frames\":1"));
+        assert!(json.contains("\"admin_requests\":1"));
+    }
+
+    #[test]
+    fn queue_depth_never_underflows() {
+        let m = Metrics::new();
+        m.record_dequeued();
+        assert_eq!(m.queue_depth(), 0);
     }
 }

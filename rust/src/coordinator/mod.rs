@@ -6,6 +6,6 @@ pub mod metrics;
 pub mod request;
 pub mod service;
 
-pub use metrics::Metrics;
-pub use request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+pub use metrics::{BusyKind, Metrics};
+pub use request::{Method, ReorderRequest, ReorderResponse, ReorderResult, TrySubmitError};
 pub use service::{ReorderService, ServiceConfig};

@@ -61,6 +61,26 @@ impl Method {
     }
 }
 
+/// Why a non-blocking submission was refused. The gateway maps
+/// `Saturated` to an explicit `Busy` frame (backpressure is always
+/// answered, never a silent drop) and `ShutDown` to an error frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrySubmitError {
+    /// The bounded submission queue is full right now — retry later.
+    Saturated,
+    /// The service's dispatcher is gone; no request will ever be served.
+    ShutDown,
+}
+
+impl std::fmt::Display for TrySubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrySubmitError::Saturated => write!(f, "service saturated (bounded queue full)"),
+            TrySubmitError::ShutDown => write!(f, "service shut down"),
+        }
+    }
+}
+
 /// A reorder request submitted to the coordinator.
 pub struct ReorderRequest {
     pub id: u64,

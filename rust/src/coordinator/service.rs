@@ -27,19 +27,24 @@
 //! * Backpressure: the submission queue is bounded; `submit` blocks when
 //!   the service is saturated.
 
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Method, ReorderRequest, ReorderResponse, ReorderResult};
+use crate::coordinator::request::{
+    Method, ReorderRequest, ReorderResponse, ReorderResult, TrySubmitError,
+};
 use crate::factor::lu::{self, LuOptions};
 use crate::factor::symbolic::fill_ratio;
 use crate::factor::{FactorContext, FactorKind};
 use crate::pfm::{prepare_shared, OptBudget, SharedPrep, DEFAULT_DENSE_CAP};
 use crate::runtime::PfmRuntime;
 use crate::sparse::Csr;
+use crate::util::sync::lock_unpoisoned;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -66,6 +71,11 @@ pub struct ServiceConfig {
     /// mid-run — deadline expiry makes results timing-dependent at any
     /// width (never worse than the init either way; see `pfm::probes`)
     pub probe_threads: usize,
+    /// Test-only fault injection: a request carrying exactly this seed
+    /// panics inside its serving thread, exercising the panic-isolation
+    /// path (the request is answered with an error, the thread survives,
+    /// `Metrics::worker_panics` increments). `None` in production.
+    pub fault_seed: Option<u64>,
 }
 
 impl Default for ServiceConfig {
@@ -78,6 +88,7 @@ impl Default for ServiceConfig {
             artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
             opt_budget: OptBudget::serving(),
             probe_threads: 2,
+            fault_seed: None,
         }
     }
 }
@@ -100,22 +111,27 @@ impl ReorderService {
         metrics.set_probe_threads(config.probe_threads.max(1));
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        // classical pool channel
-        let (ctx, crx) = mpsc::channel::<ReorderRequest>();
+        // classical pool channel — bounded like the submission queue, so
+        // saturation propagates backwards (pool full → dispatcher blocks →
+        // submission queue fills → `try_submit` reports `Saturated`)
+        // instead of piling up in an unbounded buffer
+        let (ctx, crx) = mpsc::sync_channel::<ReorderRequest>(config.queue_capacity.max(1));
         let crx = Arc::new(Mutex::new(crx));
-        // network channel
-        let (ntx, nrx) = mpsc::channel::<ReorderRequest>();
+        // network channel (bounded, same reasoning)
+        let (ntx, nrx) = mpsc::sync_channel::<ReorderRequest>(config.queue_capacity.max(1));
 
         let mut threads = Vec::new();
 
         // dispatcher: route by method class
         {
             let shutdown = shutdown.clone();
+            let metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("pfm-dispatch".into())
                     .spawn(move || {
                         while let Ok(req) = rx.recv() {
+                            metrics.record_dequeued();
                             if shutdown.load(Ordering::Relaxed) {
                                 // an already-received request must not be
                                 // dropped silently: tell the caller and
@@ -145,6 +161,7 @@ impl ReorderService {
         for w in 0..config.workers {
             let crx = crx.clone();
             let metrics = metrics.clone();
+            let fault_seed = config.fault_seed;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pfm-worker-{w}"))
@@ -152,46 +169,78 @@ impl ReorderService {
                         let mut fctx = FactorContext::new();
                         loop {
                             let req = {
-                                let guard = crx.lock().unwrap();
+                                // poison-recovering: a panic elsewhere in
+                                // the pool must not cascade through this
+                                // shared receiver lock
+                                let guard = lock_unpoisoned(&crx);
                                 guard.recv()
                             };
                             let Ok(req) = req else { break };
                             let Method::Classical(method) = req.method else {
                                 unreachable!("dispatcher routed learned to classical pool")
                             };
-                            let order = method.order(&req.matrix);
-                            // latency = queue wait + ordering compute; the
-                            // optional fill evaluation is bookkeeping and
-                            // must not skew method-vs-method latencies
-                            let latency = req.submitted.elapsed().as_secs_f64();
-                            let (fill, fill_kind) = if req.eval_fill {
-                                let (f, k) = eval_fill(
-                                    &req.matrix,
-                                    &order,
-                                    req.factor_kind,
-                                    &mut fctx,
-                                    &metrics,
-                                );
-                                (Some(f), Some(k))
-                            } else {
-                                (None, None)
-                            };
-                            metrics.record(method.label(), latency, 0, None);
-                            let _ = req.respond.send(ReorderResponse {
-                                id: req.id,
-                                result: Ok(ReorderResult {
-                                    order,
-                                    method: method.label(),
-                                    provenance: None,
-                                    latency,
-                                    batch_size: 0,
-                                    fill_ratio: fill,
-                                    factor_kind: fill_kind,
-                                    opt_iters: 0,
-                                    probe_threads: 0,
-                                    levels_refined: 0,
-                                }),
-                            });
+                            // panic isolation: a fault while serving one
+                            // request is answered as an error on that
+                            // request; the worker (and its siblings) keep
+                            // serving
+                            let work = catch_unwind(AssertUnwindSafe(|| {
+                                if fault_seed == Some(req.seed) {
+                                    panic!("injected worker fault (ServiceConfig::fault_seed)");
+                                }
+                                let order = method.order(&req.matrix);
+                                // latency = queue wait + ordering compute;
+                                // the optional fill evaluation is
+                                // bookkeeping and must not skew
+                                // method-vs-method latencies
+                                let latency = req.submitted.elapsed().as_secs_f64();
+                                let (fill, fill_kind) = if req.eval_fill {
+                                    let (f, k) = eval_fill(
+                                        &req.matrix,
+                                        &order,
+                                        req.factor_kind,
+                                        &mut fctx,
+                                        &metrics,
+                                    );
+                                    (Some(f), Some(k))
+                                } else {
+                                    (None, None)
+                                };
+                                (order, latency, fill, fill_kind)
+                            }));
+                            match work {
+                                Ok((order, latency, fill, fill_kind)) => {
+                                    metrics.record(method.label(), latency, 0, None);
+                                    let _ = req.respond.send(ReorderResponse {
+                                        id: req.id,
+                                        result: Ok(ReorderResult {
+                                            order,
+                                            method: method.label(),
+                                            provenance: None,
+                                            latency,
+                                            batch_size: 0,
+                                            fill_ratio: fill,
+                                            factor_kind: fill_kind,
+                                            opt_iters: 0,
+                                            probe_threads: 0,
+                                            levels_refined: 0,
+                                        }),
+                                    });
+                                }
+                                Err(p) => {
+                                    metrics.record_worker_panic();
+                                    metrics.record_error();
+                                    // the interrupted request may have left
+                                    // scratch/cache mid-mutation — rebuild
+                                    fctx = FactorContext::new();
+                                    let _ = req.respond.send(ReorderResponse {
+                                        id: req.id,
+                                        result: Err(format!(
+                                            "worker panicked while serving request: {}",
+                                            panic_message(p.as_ref())
+                                        )),
+                                    });
+                                }
+                            }
                         }
                     })
                     .expect("spawn worker"),
@@ -221,7 +270,12 @@ impl ReorderService {
 
     /// Submit a reorder request; returns a receiver for the response.
     /// Blocks when the queue is full (backpressure).
-    pub fn submit(&self, matrix: Csr, method: Method, seed: u64) -> mpsc::Receiver<ReorderResponse> {
+    pub fn submit(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+    ) -> mpsc::Receiver<ReorderResponse> {
         self.submit_with_fill(matrix, method, seed, false)
     }
 
@@ -280,10 +334,50 @@ impl ReorderService {
             submitted: Instant::now(),
             respond: rtx,
         };
-        if self.tx.send(req).is_err() {
-            // service shut down: respond channel dropped → receiver errors
+        if self.tx.send(req).is_ok() {
+            self.metrics.record_enqueued();
         }
+        // on error the service shut down: respond channel dropped →
+        // receiver errors
         rrx
+    }
+
+    /// Non-blocking submission: like
+    /// [`submit_with_budget`](Self::submit_with_budget), but when the
+    /// bounded queue is full it returns [`TrySubmitError::Saturated`]
+    /// immediately instead of blocking the caller. This is the gateway's
+    /// entry point — saturation becomes an explicit `Busy` frame on the
+    /// wire rather than an unbounded pile-up of reader threads.
+    pub fn try_submit_with_budget(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+        factor_kind: Option<FactorKind>,
+        opt_budget: Option<OptBudget>,
+    ) -> Result<mpsc::Receiver<ReorderResponse>, TrySubmitError> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = ReorderRequest {
+            id,
+            matrix,
+            method,
+            seed,
+            eval_fill,
+            factor_kind,
+            opt_budget,
+            submitted: Instant::now(),
+            respond: rtx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.record_enqueued();
+                Ok(rrx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => Err(TrySubmitError::Saturated),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(TrySubmitError::ShutDown),
+        }
     }
 
     /// Convenience: submit and wait.
@@ -320,11 +414,23 @@ impl ReorderService {
         // dropping tx unblocks dispatcher only when all handles drop; we
         // instead rely on queue drain: send nothing further. Join what we
         // can without deadlocking on ourselves.
-        let mut threads = self.threads.lock().unwrap();
+        let mut threads = lock_unpoisoned(&self.threads);
         // Close the pipeline by dropping our sender clone — achieved by
         // replacing it is not possible (owned); threads exit when channels
         // disconnect at Drop. Here we only join already-finished threads.
         threads.retain(|t| !t.is_finished());
+    }
+}
+
+/// Best-effort human-readable panic payload (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -459,11 +565,22 @@ fn network_loop(
                 for (&lead, &count) in leads.iter().zip(&counts) {
                     if count >= 2 {
                         let (h0, m0) = (fctx.cache.hits(), fctx.cache.misses());
-                        let prep = prepare_shared(
-                            &reqs[lead].matrix,
-                            DEFAULT_DENSE_CAP,
-                            Some(&mut fctx.cache),
-                        );
+                        // panic isolation: a fault in the shared prep only
+                        // costs the group its sharing (each request then
+                        // prepares solo), never the network thread
+                        let prep = catch_unwind(AssertUnwindSafe(|| {
+                            prepare_shared(
+                                &reqs[lead].matrix,
+                                DEFAULT_DENSE_CAP,
+                                Some(&mut fctx.cache),
+                            )
+                        }));
+                        let Ok(prep) = prep else {
+                            metrics.record_worker_panic();
+                            fctx = FactorContext::new();
+                            preps.push(None);
+                            continue;
+                        };
                         if fctx.cache.hits() > h0 {
                             metrics.record_symbolic(true);
                         } else if fctx.cache.misses() > m0 {
@@ -488,15 +605,22 @@ fn network_loop(
                 let Method::Learned(l) = req.method else { unreachable!() };
                 let budget = req.opt_budget.unwrap_or(cfg.opt_budget);
                 let prep = pgroup_of.get(i).and_then(|&g| preps[g].as_ref());
-                match l.order_detailed_shared(
-                    &mut runtime,
-                    &req.matrix,
-                    req.seed,
-                    Some(budget),
-                    cfg.probe_threads.max(1),
-                    prep,
-                ) {
-                    Ok(out) => {
+                // panic isolation, same contract as the classical pool: a
+                // fault while serving one learned request becomes an error
+                // reply on that request; the network thread keeps draining
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if cfg.fault_seed == Some(req.seed) {
+                        panic!("injected network-thread fault (ServiceConfig::fault_seed)");
+                    }
+                    l.order_detailed_shared(
+                        &mut runtime,
+                        &req.matrix,
+                        req.seed,
+                        Some(budget),
+                        cfg.probe_threads.max(1),
+                        prep,
+                    )
+                    .map(|out| {
                         // latency before fill evaluation (see worker note)
                         let latency = req.submitted.elapsed().as_secs_f64();
                         let (fill, fill_kind) = if req.eval_fill {
@@ -511,6 +635,27 @@ fn network_loop(
                         } else {
                             (None, None)
                         };
+                        (out, latency, fill, fill_kind)
+                    })
+                }));
+                let computed = match outcome {
+                    Ok(computed) => computed,
+                    Err(p) => {
+                        metrics.record_worker_panic();
+                        metrics.record_error();
+                        fctx = FactorContext::new();
+                        let _ = req.respond.send(ReorderResponse {
+                            id: req.id,
+                            result: Err(format!(
+                                "network thread panicked while serving request: {}",
+                                panic_message(p.as_ref())
+                            )),
+                        });
+                        continue;
+                    }
+                };
+                match computed {
+                    Ok((out, latency, fill, fill_kind)) => {
                         metrics.record(l.label(), latency, batch_size, Some(out.provenance));
                         metrics.record_levels_refined(out.levels_refined);
                         let native_run =
@@ -778,5 +923,84 @@ mod tests {
         assert!(orders.iter().any(|(_, b)| *b >= 2));
         let json = service.metrics.to_json().to_string();
         assert!(json.contains("\"shared_analyses\""));
+    }
+
+    #[test]
+    fn injected_worker_panic_is_answered_and_service_survives() {
+        // regression: pre-fix, a panicking worker died silently (its
+        // request was dropped) and could poison the shared receiver lock,
+        // cascading into the whole pool. Now the panicking request is
+        // answered with an error and every thread keeps serving.
+        let service = ReorderService::start(ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-svc-panic".into(),
+            fault_seed: Some(0xDEAD_BEEF),
+            ..Default::default()
+        });
+        let a = laplacian_2d(8, 8);
+        let err = service
+            .reorder_blocking(a.clone(), Method::Classical(Classical::Amd), 0xDEAD_BEEF)
+            .expect_err("panicking request must surface an error, not a dropped channel");
+        assert!(err.contains("panic"), "error should name the panic: {err}");
+        // the pool keeps serving: more requests than workers, all answered
+        for i in 0..8 {
+            let res = service
+                .reorder_blocking(a.clone(), Method::Classical(Classical::Amd), i)
+                .expect("post-panic requests must still be served");
+            check_permutation(&res.order).unwrap();
+        }
+        // the network thread recovers the same way
+        let err2 = service
+            .reorder_blocking(a.clone(), Method::Learned(Learned::Pfm), 0xDEAD_BEEF)
+            .expect_err("panicking learned request must surface an error");
+        assert!(err2.contains("panic"), "error should name the panic: {err2}");
+        let res = service
+            .reorder_blocking(a, Method::Learned(Learned::Pfm), 3)
+            .expect("network thread must survive the panic");
+        check_permutation(&res.order).unwrap();
+        assert_eq!(service.metrics.worker_panics(), 2);
+        let json = service.metrics.to_json().to_string();
+        assert!(json.contains("\"worker_panics\":2"));
+    }
+
+    #[test]
+    fn try_submit_reports_saturation_instead_of_blocking() {
+        // 1-slot queue + 1-slot pool channel + 1 worker wedged on slow
+        // requests: the non-blocking path must answer `Saturated` quickly
+        // instead of blocking the caller — this is the precondition for
+        // the gateway's `Busy` frame.
+        let service = ReorderService::start(ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            artifact_dir: "nonexistent-dir-ok-svc-sat".into(),
+            ..Default::default()
+        });
+        let a = laplacian_2d(30, 30); // Fiedler on n=900: a few ms per request
+        let mut accepted = Vec::new();
+        let mut saturated = 0usize;
+        for i in 0..50u64 {
+            match service.try_submit_with_budget(
+                a.clone(),
+                Method::Classical(Classical::Fiedler),
+                i,
+                false,
+                None,
+                None,
+            ) {
+                Ok(rx) => accepted.push(rx),
+                Err(TrySubmitError::Saturated) => saturated += 1,
+                Err(TrySubmitError::ShutDown) => panic!("service must still be up"),
+            }
+        }
+        assert!(
+            saturated >= 1,
+            "50 instant submissions into a 1-slot queue must saturate at least once"
+        );
+        assert!(!accepted.is_empty(), "some submissions must get through");
+        // accepted requests are all answered — saturation never drops work
+        for rx in accepted {
+            let res = rx.recv().expect("response").result.expect("ok");
+            check_permutation(&res.order).unwrap();
+        }
     }
 }

@@ -1,0 +1,90 @@
+//! Blocking client for the gateway protocol — used by the `admin` and
+//! `remote` CLI subcommands, the integration tests, and the CI smoke
+//! check. One connection, synchronous request/reply.
+
+use std::io;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::gateway::frame::{read_frame, write_frame, FrameError, FrameType};
+use crate::gateway::wire::{self, AdminCmd, BusyReason, WireRequest, WireResult};
+
+/// Any reply the gateway can send for one submitted frame.
+#[derive(Debug)]
+pub enum Reply {
+    /// A served reorder request.
+    Result(WireResult),
+    /// Explicit backpressure: the request was not served — retry later.
+    Busy { id: u64, reason: BusyReason },
+    /// A request-scoped error (decode failure, worker panic, shutdown).
+    Error { id: u64, message: String },
+    /// An admin reply (UTF-8 JSON).
+    Admin(String),
+}
+
+/// A blocking gateway connection.
+pub struct GatewayClient {
+    stream: TcpStream,
+}
+
+impl GatewayClient {
+    /// Connect to a running gateway.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<GatewayClient> {
+        Ok(GatewayClient { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Like [`connect`](Self::connect) with a connect timeout (admin CLI:
+    /// fail fast when no gateway is listening).
+    pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> io::Result<GatewayClient> {
+        Ok(GatewayClient { stream: TcpStream::connect_timeout(addr, timeout)? })
+    }
+
+    /// Send one reorder request frame (does not wait for the reply).
+    pub fn send_request(&mut self, req: &WireRequest) -> Result<(), String> {
+        let payload = wire::encode_request(req)?;
+        write_frame(&mut self.stream, FrameType::Request, &payload)
+            .map_err(|e| format!("send failed: {e}"))
+    }
+
+    /// Read the next reply frame, whatever it is.
+    pub fn recv_reply(&mut self) -> Result<Reply, String> {
+        let frame = read_frame(&mut self.stream).map_err(|e| match e {
+            FrameError::CleanEof => "gateway closed the connection".to_string(),
+            other => format!("receive failed: {other}"),
+        })?;
+        match frame.ftype {
+            FrameType::Response => Ok(Reply::Result(wire::decode_result(&frame.payload)?)),
+            FrameType::Busy => {
+                let (id, reason) = wire::decode_busy(&frame.payload)?;
+                Ok(Reply::Busy { id, reason })
+            }
+            FrameType::Error => {
+                let (id, message) = wire::decode_error(&frame.payload)?;
+                Ok(Reply::Error { id, message })
+            }
+            FrameType::AdminResponse => {
+                Ok(Reply::Admin(wire::decode_admin_response(&frame.payload)))
+            }
+            FrameType::Request | FrameType::Admin => {
+                Err(format!("gateway sent a client-only frame type {:?}", frame.ftype))
+            }
+        }
+    }
+
+    /// Submit one request and wait for its reply.
+    pub fn request(&mut self, req: &WireRequest) -> Result<Reply, String> {
+        self.send_request(req)?;
+        self.recv_reply()
+    }
+
+    /// Run one admin command and return the JSON reply.
+    pub fn admin(&mut self, cmd: AdminCmd) -> Result<String, String> {
+        write_frame(&mut self.stream, FrameType::Admin, &wire::encode_admin(cmd))
+            .map_err(|e| format!("send failed: {e}"))?;
+        match self.recv_reply()? {
+            Reply::Admin(json) => Ok(json),
+            Reply::Error { message, .. } => Err(message),
+            other => Err(format!("unexpected reply to admin command: {other:?}")),
+        }
+    }
+}

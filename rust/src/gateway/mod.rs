@@ -1,0 +1,24 @@
+//! L4 gateway: the coordinator on the wire. A zero-dependency TCP front
+//! end (`std::net` only) that speaks a length-prefixed binary framing
+//! protocol, feeds the [`ReorderService`](crate::coordinator::ReorderService)
+//! through its non-blocking submission path, and extends the service's
+//! "every accepted request gets answered" contract across the network
+//! boundary. See DESIGN.md §Gateway.
+//!
+//! * [`frame`] — versioned frame header + panic-free frame codec
+//! * [`wire`] — payload codecs (requests, results, busy/error/admin)
+//! * [`rate_limit`] — per-client token buckets
+//! * [`server`] — acceptor + per-connection reader/writer threads
+//! * [`client`] — blocking client (CLI, tests, CI smoke)
+
+pub mod client;
+pub mod frame;
+pub mod rate_limit;
+pub mod server;
+pub mod wire;
+
+pub use client::{GatewayClient, Reply};
+pub use frame::{Frame, FrameError, FrameType, MAX_PAYLOAD};
+pub use rate_limit::RateLimiter;
+pub use server::{Gateway, GatewayConfig, DEFAULT_ADDR};
+pub use wire::{AdminCmd, BusyReason, WireRequest, WireResult};

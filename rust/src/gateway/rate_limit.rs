@@ -1,0 +1,175 @@
+//! Per-client token-bucket rate limiting for the gateway.
+//!
+//! Each client (keyed by peer address string) gets its own bucket holding
+//! up to `burst` tokens, refilled continuously at `rate` tokens/second. A
+//! request spends one token; an empty bucket means the request is answered
+//! with an explicit `Busy(RateLimited)` frame — one hot client is
+//! throttled without slowing anyone else down.
+//!
+//! The refill clock is passed in (`admit_at`) so tests are deterministic;
+//! `admit` is the wall-clock convenience wrapper.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+
+/// One client's bucket plus its lifetime admit/throttle counters.
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+    allowed: u64,
+    throttled: u64,
+}
+
+/// Token-bucket limiter shared by all connection threads.
+pub struct RateLimiter {
+    /// tokens per second; `<= 0` disables limiting entirely
+    rate: f64,
+    /// bucket capacity (a fresh client can burst this many requests)
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl RateLimiter {
+    /// `rate` in requests/second, `burst` the bucket capacity. A
+    /// non-positive `rate` turns the limiter off (every request admitted,
+    /// still counted).
+    pub fn new(rate: f64, burst: f64) -> RateLimiter {
+        RateLimiter { rate, burst: burst.max(1.0), buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Whether limiting is active.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Admit or throttle one request from `client` at wall-clock now.
+    pub fn admit(&self, client: &str) -> bool {
+        self.admit_at(client, Instant::now())
+    }
+
+    /// Admit or throttle one request from `client` at time `now`. `now`
+    /// values may arrive out of order across threads; elapsed time is
+    /// clamped at zero so the bucket never refills backwards.
+    pub fn admit_at(&self, client: &str, now: Instant) -> bool {
+        let mut buckets = lock_unpoisoned(&self.buckets);
+        let b = buckets.entry(client.to_string()).or_insert(Bucket {
+            tokens: self.burst,
+            last: now,
+            allowed: 0,
+            throttled: 0,
+        });
+        if self.rate > 0.0 {
+            let dt = now.saturating_duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+            b.last = now;
+            if b.tokens < 1.0 {
+                b.throttled += 1;
+                return false;
+            }
+            b.tokens -= 1.0;
+        }
+        b.allowed += 1;
+        true
+    }
+
+    /// Total requests throttled across all clients.
+    pub fn total_throttled(&self) -> u64 {
+        lock_unpoisoned(&self.buckets).values().map(|b| b.throttled).sum()
+    }
+
+    /// Per-client stats as JSON — the admin `throttle` reply.
+    pub fn stats_json(&self) -> String {
+        let buckets = lock_unpoisoned(&self.buckets);
+        let mut clients: Vec<_> = buckets.iter().collect();
+        clients.sort_by(|a, b| a.0.cmp(b.0));
+        let obj = Json::obj()
+            .set("rate", self.rate)
+            .set("burst", self.burst)
+            .set("enabled", self.rate > 0.0);
+        let mut list = Json::obj();
+        for (name, b) in clients {
+            list = list.set(
+                name,
+                Json::obj()
+                    .set("allowed", b.allowed as i64)
+                    .set("throttled", b.throttled as i64),
+            );
+        }
+        obj.set("clients", list).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::time::Duration;
+
+    #[test]
+    fn burst_then_throttle_then_refill() {
+        let rl = RateLimiter::new(10.0, 3.0);
+        let t0 = Instant::now();
+        // a fresh client can spend its whole burst instantly
+        for i in 0..3 {
+            assert!(rl.admit_at("a", t0), "burst admit {i}");
+        }
+        // the fourth request at the same instant is throttled
+        assert!(!rl.admit_at("a", t0));
+        assert_eq!(rl.total_throttled(), 1);
+        // 100 ms at 10 req/s refills exactly one token
+        assert!(rl.admit_at("a", t0 + Duration::from_millis(100)));
+        assert!(!rl.admit_at("a", t0 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn clients_are_isolated() {
+        let rl = RateLimiter::new(5.0, 2.0);
+        let t0 = Instant::now();
+        assert!(rl.admit_at("hog", t0));
+        assert!(rl.admit_at("hog", t0));
+        assert!(!rl.admit_at("hog", t0), "hog exhausted its bucket");
+        // a different client is untouched by the hog's throttling
+        assert!(rl.admit_at("calm", t0));
+        assert!(rl.admit_at("calm", t0));
+    }
+
+    #[test]
+    fn non_positive_rate_disables_limiting() {
+        let rl = RateLimiter::new(0.0, 1.0);
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            assert!(rl.admit_at("any", t0));
+        }
+        assert_eq!(rl.total_throttled(), 0);
+        assert!(!rl.enabled());
+    }
+
+    #[test]
+    fn out_of_order_timestamps_never_refill_backwards() {
+        let rl = RateLimiter::new(1.0, 1.0);
+        let t0 = Instant::now();
+        assert!(rl.admit_at("a", t0 + Duration::from_secs(5)));
+        // an earlier timestamp arriving late must not panic or mint tokens
+        assert!(!rl.admit_at("a", t0));
+        assert!(!rl.admit_at("a", t0 + Duration::from_secs(5)));
+    }
+
+    #[test]
+    fn stats_json_reports_per_client_counts() {
+        let rl = RateLimiter::new(10.0, 1.0);
+        let t0 = Instant::now();
+        assert!(rl.admit_at("b", t0));
+        assert!(!rl.admit_at("b", t0));
+        assert!(rl.admit_at("a", t0));
+        let s = rl.stats_json();
+        assert!(s.contains("\"rate\":10"), "{s}");
+        assert!(s.contains("\"clients\""), "{s}");
+        assert!(s.contains("\"throttled\":1"), "{s}");
+        // deterministic client order (sorted by name)
+        assert!(s.find("\"a\"").unwrap() < s.find("\"b\"").unwrap(), "{s}");
+    }
+}

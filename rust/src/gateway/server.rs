@@ -1,0 +1,555 @@
+//! The TCP reorder gateway: an acceptor thread plus a reader/writer
+//! thread pair per connection, fronting a [`ReorderService`].
+//!
+//! ```text
+//!                     accept            frames              try_submit
+//!   clients ──TCP──► [acceptor] ──► [reader thread] ───────► service
+//!                                        │    ▲                  │
+//!                                 Outgoing│    │rate limiter      │responses
+//!                                        ▼    │                  ▼
+//!                                   [writer thread] ◄── mpsc::Receiver
+//! ```
+//!
+//! Contracts (tested in `tests/gateway_integration.rs`):
+//!
+//! * **Exactly one reply per frame.** Every decoded request frame is
+//!   answered with a `Response`, `Error`, or `Busy` — saturation and
+//!   throttling are explicit `Busy` frames, never silent drops.
+//! * **Replies preserve submission order per connection** (the writer
+//!   drains its queue FIFO); the echoed request id is still the
+//!   correlation key.
+//! * **Malformed input never panics the gateway.** Payload-level garbage
+//!   gets an `Error` frame and the connection stays open; framing-level
+//!   garbage (bad magic/version/type, oversize prefix) gets a final
+//!   `Error` and the connection closes, because byte sync is gone.
+//! * **Shutdown answers every in-flight request** — the coordinator's
+//!   drain contract extended across the network boundary: readers stop
+//!   accepting work, writers flush every pending reply while the service
+//!   is still live, and only then does the service itself shut down.
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{
+    BusyKind, Metrics, ReorderResponse, ReorderService, ServiceConfig, TrySubmitError,
+};
+use crate::gateway::frame::{self, Frame, FrameError, FrameType, HEADER_LEN};
+use crate::gateway::rate_limit::RateLimiter;
+use crate::gateway::wire::{self, AdminCmd, BusyReason};
+use crate::util::sync::lock_unpoisoned;
+
+/// Default listen address of `pfm serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7744";
+
+/// How many poll ticks a reader waits for the rest of a half-received
+/// frame once shutdown has begun, before giving the connection up as
+/// truncated (bounds shutdown latency against a stalled client).
+const SHUTDOWN_PATIENCE_TICKS: u32 = 100;
+
+/// Gateway configuration.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// listen address, e.g. `"127.0.0.1:7744"` (port 0 for tests)
+    pub addr: String,
+    /// configuration of the fronted reorder service
+    pub service: ServiceConfig,
+    /// per-client token-bucket refill rate, requests/second; `<= 0`
+    /// disables rate limiting
+    pub rate: f64,
+    /// token-bucket capacity (burst head-room of a fresh client)
+    pub burst: f64,
+    /// reader poll tick: how often a blocked read re-checks the shutdown
+    /// flag (also the shutdown-latency granularity)
+    pub poll: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: DEFAULT_ADDR.to_string(),
+            service: ServiceConfig::default(),
+            rate: 0.0,
+            burst: 32.0,
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Shared per-connection context.
+struct ConnCtx {
+    service: Arc<ReorderService>,
+    limiter: Arc<RateLimiter>,
+    shutdown: Arc<AtomicBool>,
+    poll: Duration,
+}
+
+/// A running gateway. Call [`shutdown`](Gateway::shutdown) (or send the
+/// admin `shutdown` command and let [`serve_until_shutdown`] notice) to
+/// stop it; both run the full graceful drain.
+///
+/// [`serve_until_shutdown`]: Gateway::serve_until_shutdown
+pub struct Gateway {
+    addr: SocketAddr,
+    service: Arc<ReorderService>,
+    limiter: Arc<RateLimiter>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Gateway {
+    /// Bind the listener, start the fronted service, spawn the acceptor.
+    pub fn start(config: GatewayConfig) -> io::Result<Gateway> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let addr = listener.local_addr()?;
+        let service = ReorderService::start(config.service);
+        let limiter = Arc::new(RateLimiter::new(config.rate, config.burst));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let ctx = Arc::new(ConnCtx {
+            service: service.clone(),
+            limiter: limiter.clone(),
+            shutdown: shutdown.clone(),
+            poll: config.poll.max(Duration::from_millis(1)),
+        });
+        let acceptor = {
+            let ctx = ctx.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("pfm-gw-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if ctx.shutdown.load(Ordering::Relaxed) {
+                            break; // the wake-up connection from shutdown()
+                        }
+                        let Ok(stream) = stream else { continue };
+                        ctx.service.metrics.record_gateway_connection();
+                        let ctx = ctx.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("pfm-gw-conn".into())
+                            .spawn(move || connection_loop(stream, &ctx));
+                        if let Ok(handle) = spawned {
+                            let mut c = lock_unpoisoned(&conns);
+                            c.retain(|t| !t.is_finished());
+                            c.push(handle);
+                        }
+                    }
+                })
+                .expect("spawn gateway acceptor")
+        };
+
+        Ok(Gateway {
+            addr,
+            service,
+            limiter,
+            shutdown,
+            acceptor: Mutex::new(Some(acceptor)),
+            conns,
+        })
+    }
+
+    /// The bound listen address (resolves port 0 for tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live metrics of the fronted service (includes gateway counters).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.service.metrics.clone()
+    }
+
+    /// Per-client throttle stats as JSON.
+    pub fn throttle_stats(&self) -> String {
+        self.limiter.stats_json()
+    }
+
+    /// Whether shutdown has been requested (locally or via admin frame).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Block until something requests shutdown (the admin `shutdown`
+    /// command, or [`shutdown`](Gateway::shutdown) from another thread),
+    /// then run the graceful drain.
+    pub fn serve_until_shutdown(&self) {
+        while !self.shutdown.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.shutdown();
+    }
+
+    /// Graceful shutdown (idempotent): stop accepting, let every reader
+    /// exit at its next poll tick, let every writer flush every in-flight
+    /// reply *while the service is still live*, then shut the service
+    /// down. No accepted request is ever dropped unanswered.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // wake the acceptor out of its blocking accept
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(h) = lock_unpoisoned(&self.acceptor).take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = lock_unpoisoned(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        self.service.shutdown();
+    }
+}
+
+/// What the per-connection writer sends, in FIFO order.
+enum Outgoing {
+    /// An already-encoded frame (errors, busy, admin replies).
+    Immediate(FrameType, Vec<u8>),
+    /// A submitted request: the writer blocks on the service's reply and
+    /// encodes it. FIFO consumption is what makes per-connection reply
+    /// order match submission order.
+    Pending { id: u64, rx: mpsc::Receiver<ReorderResponse> },
+}
+
+/// Reader side of one connection: frames in, handling, `Outgoing` out.
+fn connection_loop(mut stream: TcpStream, ctx: &ConnCtx) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "unknown".to_string());
+    if stream.set_read_timeout(Some(ctx.poll)).is_err() {
+        return;
+    }
+    let Ok(wstream) = stream.try_clone() else { return };
+    let metrics = ctx.service.metrics.clone();
+    let (wtx, wrx) = mpsc::channel::<Outgoing>();
+    let writer = {
+        let metrics = metrics.clone();
+        std::thread::Builder::new()
+            .name("pfm-gw-write".into())
+            .spawn(move || writer_loop(wstream, wrx, &metrics))
+    };
+    let Ok(writer) = writer else { return };
+
+    loop {
+        match read_frame_interruptible(&mut stream, &ctx.shutdown) {
+            Ok(ReadOutcome::Closed) | Ok(ReadOutcome::ShutdownIdle) => break,
+            Ok(ReadOutcome::Frame(f)) => {
+                metrics.record_gateway_frame_rx();
+                if !handle_frame(f, &peer, ctx, &wtx) {
+                    break;
+                }
+            }
+            Err(FrameError::Io(_)) | Err(FrameError::CleanEof) => break,
+            Err(e) => {
+                // framing-level failure: byte sync is gone — answer once,
+                // best-effort, and close the connection
+                metrics.record_gateway_malformed();
+                let _ = wtx.send(Outgoing::Immediate(
+                    FrameType::Error,
+                    wire::encode_error(0, &e.to_string()),
+                ));
+                break;
+            }
+        }
+    }
+    // dropping our sender ends the writer once it has flushed everything
+    drop(wtx);
+    let _ = writer.join();
+}
+
+/// Handle one well-framed frame; returns whether to keep the connection.
+fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing>) -> bool {
+    let metrics = &ctx.service.metrics;
+    match f.ftype {
+        FrameType::Request => {
+            let req = match wire::decode_request(&f.payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    // payload-level garbage: framing is intact, so answer
+                    // and keep serving this client
+                    metrics.record_gateway_malformed();
+                    let _ = wtx.send(Outgoing::Immediate(
+                        FrameType::Error,
+                        wire::encode_error(e.id, &e.message),
+                    ));
+                    return true;
+                }
+            };
+            if ctx.shutdown.load(Ordering::Relaxed) {
+                let _ = wtx.send(Outgoing::Immediate(
+                    FrameType::Error,
+                    wire::encode_error(req.id, "gateway shutting down"),
+                ));
+                return true;
+            }
+            if !ctx.limiter.admit(peer) {
+                metrics.record_gateway_busy(BusyKind::RateLimited);
+                let _ = wtx.send(Outgoing::Immediate(
+                    FrameType::Busy,
+                    wire::encode_busy(req.id, BusyReason::RateLimited),
+                ));
+                return true;
+            }
+            let submitted = ctx.service.try_submit_with_budget(
+                req.matrix,
+                req.method,
+                req.seed,
+                req.eval_fill,
+                req.factor_kind,
+                req.opt_budget,
+            );
+            match submitted {
+                Ok(rx) => {
+                    let _ = wtx.send(Outgoing::Pending { id: req.id, rx });
+                }
+                Err(TrySubmitError::Saturated) => {
+                    metrics.record_gateway_busy(BusyKind::QueueFull);
+                    let _ = wtx.send(Outgoing::Immediate(
+                        FrameType::Busy,
+                        wire::encode_busy(req.id, BusyReason::QueueFull),
+                    ));
+                }
+                Err(TrySubmitError::ShutDown) => {
+                    let _ = wtx.send(Outgoing::Immediate(
+                        FrameType::Error,
+                        wire::encode_error(req.id, "service shut down"),
+                    ));
+                }
+            }
+            true
+        }
+        FrameType::Admin => match wire::decode_admin(&f.payload) {
+            Err(e) => {
+                metrics.record_gateway_malformed();
+                let _ = wtx.send(Outgoing::Immediate(FrameType::Error, wire::encode_error(0, &e)));
+                true
+            }
+            Ok(cmd) => {
+                metrics.record_gateway_admin();
+                let json = match cmd {
+                    AdminCmd::Ping => "{\"ok\":true}".to_string(),
+                    AdminCmd::Metrics => metrics.to_json().to_string(),
+                    AdminCmd::Throttle => ctx.limiter.stats_json(),
+                    AdminCmd::Shutdown => "{\"ok\":true,\"shutting_down\":true}".to_string(),
+                };
+                let _ = wtx.send(Outgoing::Immediate(
+                    FrameType::AdminResponse,
+                    wire::encode_admin_response(&json),
+                ));
+                if cmd == AdminCmd::Shutdown {
+                    // ack is already queued ahead of the flag taking
+                    // effect; serve_until_shutdown runs the full drain
+                    ctx.shutdown.store(true, Ordering::Relaxed);
+                }
+                true
+            }
+        },
+        FrameType::Response | FrameType::Error | FrameType::Busy | FrameType::AdminResponse => {
+            // server→client types arriving at the server: protocol
+            // violation, close after answering
+            metrics.record_gateway_malformed();
+            let _ = wtx.send(Outgoing::Immediate(
+                FrameType::Error,
+                wire::encode_error(0, "client sent a server-only frame type"),
+            ));
+            false
+        }
+    }
+}
+
+/// Writer side of one connection: flush `Outgoing` in FIFO order. A
+/// failed write marks the client dead but the loop keeps *draining*
+/// pending receivers, so a vanished client never wedges a service worker
+/// behind an unconsumed reply channel.
+fn writer_loop(mut stream: TcpStream, wrx: mpsc::Receiver<Outgoing>, metrics: &Metrics) {
+    let mut dead = false;
+    while let Ok(out) = wrx.recv() {
+        let (ftype, payload) = match out {
+            Outgoing::Immediate(t, p) => (t, p),
+            Outgoing::Pending { id, rx } => match rx.recv() {
+                Ok(resp) => match resp.result {
+                    Ok(res) => (FrameType::Response, wire::encode_result(id, &res)),
+                    Err(msg) => (FrameType::Error, wire::encode_error(id, &msg)),
+                },
+                Err(_) => (
+                    FrameType::Error,
+                    wire::encode_error(id, "service shut down before responding"),
+                ),
+            },
+        };
+        if !dead {
+            if frame::write_frame(&mut stream, ftype, &payload).is_ok() {
+                metrics.record_gateway_frame_tx();
+            } else {
+                dead = true;
+            }
+        }
+    }
+}
+
+/// Outcome of an interruptible frame read.
+enum ReadOutcome {
+    Frame(Frame),
+    /// Shutdown was requested while idle at a frame boundary.
+    ShutdownIdle,
+    /// The peer closed cleanly at a frame boundary.
+    Closed,
+}
+
+fn is_poll_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Like [`frame::read_frame`], but over a socket with a read timeout: a
+/// timeout at a frame boundary re-checks the shutdown flag (so idle
+/// connections notice shutdown within one poll tick), while a timeout
+/// *mid-frame* keeps waiting — a slow client must not desync framing —
+/// with bounded patience once shutdown has begun.
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    shutdown: &AtomicBool,
+) -> Result<ReadOutcome, FrameError> {
+    let mut late_ticks = 0u32;
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match stream.read(&mut header[got..]) {
+            Ok(0) => {
+                return if got == 0 { Ok(ReadOutcome::Closed) } else { Err(FrameError::Truncated) }
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_poll_timeout(&e) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    if got == 0 {
+                        return Ok(ReadOutcome::ShutdownIdle);
+                    }
+                    late_ticks += 1;
+                    if late_ticks > SHUTDOWN_PATIENCE_TICKS {
+                        return Err(FrameError::Truncated);
+                    }
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let (ftype, len) = frame::parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => return Err(FrameError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_poll_timeout(&e) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    late_ticks += 1;
+                    if late_ticks > SHUTDOWN_PATIENCE_TICKS {
+                        return Err(FrameError::Truncated);
+                    }
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(ReadOutcome::Frame(Frame { ftype, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::coordinator::Method;
+    use crate::gateway::client::{GatewayClient, Reply};
+    use crate::gateway::wire::WireRequest;
+    use crate::gen::grid::laplacian_2d;
+    use crate::order::Classical;
+    use crate::util::check::check_permutation;
+    use std::io::Write;
+
+    fn test_gateway(service: ServiceConfig) -> Gateway {
+        Gateway::start(GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            service,
+            poll: Duration::from_millis(5),
+            ..GatewayConfig::default()
+        })
+        .expect("bind loopback gateway")
+    }
+
+    #[test]
+    fn admin_ping_metrics_and_one_request_roundtrip() {
+        let gw = test_gateway(ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-gw-unit".into(),
+            ..ServiceConfig::default()
+        });
+        let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+        assert!(c.admin(AdminCmd::Ping).unwrap().contains("\"ok\":true"));
+
+        let req = WireRequest {
+            id: 7,
+            method: Method::Classical(Classical::Amd),
+            seed: 1,
+            eval_fill: true,
+            factor_kind: None,
+            opt_budget: None,
+            matrix: laplacian_2d(8, 8),
+        };
+        match c.request(&req).unwrap() {
+            Reply::Result(res) => {
+                assert_eq!(res.id, 7);
+                assert_eq!(res.method, "AMD");
+                assert_eq!(res.order.len(), 64);
+                check_permutation(&res.order).unwrap();
+                assert!(res.fill_ratio.is_some(), "eval_fill was requested");
+            }
+            other => panic!("expected a result, got {other:?}"),
+        }
+
+        let m = c.admin(AdminCmd::Metrics).unwrap();
+        assert!(m.contains("\"gateway\""), "{m}");
+        assert!(m.contains("\"connections\":1"), "{m}");
+        drop(c);
+        gw.shutdown();
+        assert_eq!(gw.metrics().gateway_admin(), 2);
+    }
+
+    #[test]
+    fn garbage_bytes_are_answered_and_do_not_kill_the_gateway() {
+        let gw = test_gateway(ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gw-garbage".into(),
+            ..ServiceConfig::default()
+        });
+        // raw socket spewing non-protocol bytes
+        let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let f = frame::read_frame(&mut s).expect("an error frame before close");
+        assert_eq!(f.ftype, FrameType::Error);
+        // the gateway keeps accepting fresh connections afterwards
+        let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+        assert!(c.admin(AdminCmd::Ping).unwrap().contains("ok"));
+        drop(c);
+        gw.shutdown();
+        assert!(gw.metrics().gateway_malformed() >= 1);
+    }
+
+    #[test]
+    fn admin_shutdown_frame_drives_serve_until_shutdown() {
+        let gw = test_gateway(ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gw-shutdown".into(),
+            ..ServiceConfig::default()
+        });
+        let addr = gw.local_addr();
+        let remote = std::thread::spawn(move || {
+            let mut c = GatewayClient::connect(addr).unwrap();
+            c.admin(AdminCmd::Shutdown).unwrap()
+        });
+        // returns only after the graceful drain completes
+        gw.serve_until_shutdown();
+        assert!(gw.is_shutting_down());
+        let ack = remote.join().unwrap();
+        assert!(ack.contains("shutting_down"), "{ack}");
+    }
+}

@@ -1,0 +1,749 @@
+//! Payload codecs for the gateway protocol: a bounds-checked cursor
+//! reader, and encode/decode for every frame body. Everything is
+//! little-endian; strings are u16-length-prefixed UTF-8 (decoded lossily,
+//! so a hostile byte string can never make decoding fail with a panic).
+//!
+//! Decoding is defensive end to end: every read is bounds-checked, array
+//! lengths are validated against the remaining payload *before* any
+//! allocation, and a decoded matrix is structurally verified (square,
+//! monotone `indptr`, sorted in-range column indices) before it is handed
+//! to `Csr::from_parts` — whose own checks are debug-only and must never
+//! be the last line of defense on the wire path.
+
+use crate::coordinator::Method;
+use crate::factor::FactorKind;
+use crate::pfm::OptBudget;
+use crate::sparse::Csr;
+
+/// Largest matrix dimension the gateway will decode. Combined with the
+/// frame-level payload cap this bounds every allocation a hostile client
+/// can trigger.
+pub const MAX_WIRE_N: usize = 1 << 22;
+
+/// Why the gateway sent a `Busy` frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BusyReason {
+    /// The service's bounded queue was full — backpressure, retry later.
+    QueueFull = 0,
+    /// This client exceeded its token bucket — throttled, slow down.
+    RateLimited = 1,
+}
+
+impl BusyReason {
+    pub fn from_u8(b: u8) -> Option<BusyReason> {
+        match b {
+            0 => Some(BusyReason::QueueFull),
+            1 => Some(BusyReason::RateLimited),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BusyReason::QueueFull => "queue_full",
+            BusyReason::RateLimited => "rate_limited",
+        }
+    }
+}
+
+/// Admin-protocol commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdminCmd {
+    /// Liveness probe; answers `{"ok":true}`.
+    Ping = 0,
+    /// Full coordinator + gateway metrics snapshot (JSON).
+    Metrics = 1,
+    /// Per-client token-bucket stats (JSON).
+    Throttle = 2,
+    /// Ask the gateway to shut down gracefully (acked before it begins).
+    Shutdown = 3,
+}
+
+impl AdminCmd {
+    pub fn from_u8(b: u8) -> Option<AdminCmd> {
+        match b {
+            0 => Some(AdminCmd::Ping),
+            1 => Some(AdminCmd::Metrics),
+            2 => Some(AdminCmd::Throttle),
+            3 => Some(AdminCmd::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<AdminCmd> {
+        match s.to_ascii_lowercase().as_str() {
+            "ping" => Some(AdminCmd::Ping),
+            "metrics" => Some(AdminCmd::Metrics),
+            "throttle" => Some(AdminCmd::Throttle),
+            "shutdown" => Some(AdminCmd::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdminCmd::Ping => "ping",
+            AdminCmd::Metrics => "metrics",
+            AdminCmd::Throttle => "throttle",
+            AdminCmd::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// A decoded reorder request, ready for `ReorderService::try_submit_*`.
+#[derive(Clone, Debug)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed verbatim on every reply.
+    pub id: u64,
+    pub method: Method,
+    pub seed: u64,
+    pub eval_fill: bool,
+    pub factor_kind: Option<FactorKind>,
+    pub opt_budget: Option<OptBudget>,
+    pub matrix: Csr,
+}
+
+/// A decoded reorder result (client side of `ReorderResult` — labels come
+/// back as owned strings).
+#[derive(Clone, Debug)]
+pub struct WireResult {
+    pub id: u64,
+    pub method: String,
+    pub provenance: Option<String>,
+    pub latency: f64,
+    pub batch_size: usize,
+    pub fill_ratio: Option<f64>,
+    pub factor_kind: Option<String>,
+    pub opt_iters: usize,
+    pub probe_threads: usize,
+    pub levels_refined: usize,
+    pub order: Vec<usize>,
+}
+
+/// Payload-level decode failure: the frame was well-formed, the body was
+/// not. Carries the request id when it was readable (0 otherwise) so the
+/// error reply can still be correlated.
+#[derive(Debug)]
+pub struct DecodeFailure {
+    pub id: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for DecodeFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Bounds-checked little-endian cursor over a payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!("payload truncated: wanted {n} bytes, {} left", self.remaining()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// u16-length-prefixed string, decoded lossily (never fails on bytes).
+    fn str16(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        Ok(String::from_utf8_lossy(self.take(len)?).into_owned())
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after payload", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// u16-length-prefixed string; truncated at 4 KiB (error messages only —
+/// protocol labels are all short).
+fn put_str16(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(4096);
+    put_u16(buf, n as u16);
+    buf.extend_from_slice(&bytes[..n]);
+}
+
+// -------------------------------------------------------------- requests
+
+const FLAG_EVAL_FILL: u8 = 1 << 0;
+const FLAG_HAS_KIND: u8 = 1 << 1;
+const FLAG_HAS_BUDGET: u8 = 1 << 2;
+
+/// Encode a reorder request payload. Fails (rather than truncating) when
+/// the matrix cannot fit the frame-level payload cap.
+pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>, String> {
+    let a = &req.matrix;
+    if a.nrows() != a.ncols() {
+        return Err(format!("matrix must be square, got {}x{}", a.nrows(), a.ncols()));
+    }
+    if a.nrows() > MAX_WIRE_N {
+        return Err(format!("matrix dimension {} above wire cap {MAX_WIRE_N}", a.nrows()));
+    }
+    let est = 64 + 4 * (a.nrows() + 1) + 12 * a.nnz();
+    if est > super::frame::MAX_PAYLOAD {
+        return Err(format!(
+            "matrix too large for one frame ({est} bytes > {} cap)",
+            super::frame::MAX_PAYLOAD
+        ));
+    }
+    let mut buf = Vec::with_capacity(est);
+    put_u64(&mut buf, req.id);
+    put_str16(&mut buf, req.method.label());
+    put_u64(&mut buf, req.seed);
+    let mut flags = 0u8;
+    if req.eval_fill {
+        flags |= FLAG_EVAL_FILL;
+    }
+    if req.factor_kind.is_some() {
+        flags |= FLAG_HAS_KIND;
+    }
+    if req.opt_budget.is_some() {
+        flags |= FLAG_HAS_BUDGET;
+    }
+    buf.push(flags);
+    if let Some(kind) = req.factor_kind {
+        buf.push(match kind {
+            FactorKind::Cholesky => 0,
+            FactorKind::Lu => 1,
+        });
+    }
+    if let Some(b) = req.opt_budget {
+        put_u32(&mut buf, b.outer as u32);
+        put_u32(&mut buf, b.refine as u32);
+        put_u32(&mut buf, b.level_refine as u32);
+        buf.push(b.adaptive_rho as u8);
+        buf.push(b.time_ms.is_some() as u8);
+        put_u64(&mut buf, b.time_ms.unwrap_or(0));
+    }
+    put_u32(&mut buf, a.nrows() as u32);
+    put_u32(&mut buf, a.ncols() as u32);
+    put_u32(&mut buf, a.nnz() as u32);
+    for &p in a.indptr() {
+        put_u32(&mut buf, p as u32);
+    }
+    for &c in a.indices() {
+        put_u32(&mut buf, c as u32);
+    }
+    for &x in a.data() {
+        put_f64(&mut buf, x);
+    }
+    Ok(buf)
+}
+
+/// Decode and validate a reorder request payload. Never panics; a failure
+/// carries the client id when it was readable so the error reply can be
+/// correlated.
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest, DecodeFailure> {
+    let mut r = Reader::new(payload);
+    // read the id first so later failures stay correlatable
+    let id = r.u64().map_err(|m| DecodeFailure { id: 0, message: m })?;
+    let fail = |message: String| DecodeFailure { id, message };
+    let method_label = r.str16().map_err(&fail)?;
+    let method = Method::from_label(&method_label)
+        .ok_or_else(|| fail(format!("unknown method `{method_label}`")))?;
+    let seed = r.u64().map_err(&fail)?;
+    let flags = r.u8().map_err(&fail)?;
+    let factor_kind = if flags & FLAG_HAS_KIND != 0 {
+        Some(match r.u8().map_err(&fail)? {
+            0 => FactorKind::Cholesky,
+            1 => FactorKind::Lu,
+            k => return Err(fail(format!("unknown factor kind {k}"))),
+        })
+    } else {
+        None
+    };
+    let opt_budget = if flags & FLAG_HAS_BUDGET != 0 {
+        let outer = r.u32().map_err(&fail)? as usize;
+        let refine = r.u32().map_err(&fail)? as usize;
+        let level_refine = r.u32().map_err(&fail)? as usize;
+        let adaptive_rho = r.u8().map_err(&fail)? != 0;
+        let has_time = r.u8().map_err(&fail)? != 0;
+        let time_ms = r.u64().map_err(&fail)?;
+        Some(OptBudget {
+            outer,
+            refine,
+            level_refine,
+            adaptive_rho,
+            time_ms: has_time.then_some(time_ms),
+        })
+    } else {
+        None
+    };
+    let nrows = r.u32().map_err(&fail)? as usize;
+    let ncols = r.u32().map_err(&fail)? as usize;
+    let nnz = r.u32().map_err(&fail)? as usize;
+    if nrows != ncols {
+        return Err(fail(format!("matrix must be square, got {nrows}x{ncols}")));
+    }
+    if nrows == 0 {
+        return Err(fail("empty matrix".to_string()));
+    }
+    if nrows > MAX_WIRE_N {
+        return Err(fail(format!("matrix dimension {nrows} above wire cap {MAX_WIRE_N}")));
+    }
+    // size everything against the actual payload before allocating
+    let need = 4 * (nrows + 1) + 12 * nnz;
+    if r.remaining() < need {
+        return Err(fail(format!(
+            "payload truncated: matrix needs {need} bytes, {} left",
+            r.remaining()
+        )));
+    }
+    let mut indptr = Vec::with_capacity(nrows + 1);
+    for _ in 0..=nrows {
+        indptr.push(r.u32().map_err(&fail)? as usize);
+    }
+    if indptr[0] != 0 || indptr[nrows] != nnz {
+        return Err(fail("indptr must run from 0 to nnz".to_string()));
+    }
+    if indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(fail("indptr must be non-decreasing".to_string()));
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(r.u32().map_err(&fail)? as usize);
+    }
+    for row in 0..nrows {
+        let cols = &indices[indptr[row]..indptr[row + 1]];
+        if cols.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(fail(format!("row {row}: column indices not strictly increasing")));
+        }
+        if cols.last().is_some_and(|&c| c >= ncols) {
+            return Err(fail(format!("row {row}: column index out of range")));
+        }
+    }
+    let mut data = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        data.push(r.f64().map_err(&fail)?);
+    }
+    r.done().map_err(&fail)?;
+    let matrix = Csr::from_parts(nrows, ncols, indptr, indices, data);
+    Ok(WireRequest {
+        id,
+        method,
+        seed,
+        eval_fill: flags & FLAG_EVAL_FILL != 0,
+        factor_kind,
+        opt_budget,
+        matrix,
+    })
+}
+
+// --------------------------------------------------------------- results
+
+/// Encode a successful reorder result payload.
+pub fn encode_result(id: u64, res: &crate::coordinator::ReorderResult) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 4 * res.order.len());
+    put_u64(&mut buf, id);
+    put_str16(&mut buf, res.method);
+    put_str16(&mut buf, res.provenance.map(|p| p.label()).unwrap_or(""));
+    put_f64(&mut buf, res.latency);
+    put_u32(&mut buf, res.batch_size as u32);
+    buf.push(res.fill_ratio.is_some() as u8);
+    put_f64(&mut buf, res.fill_ratio.unwrap_or(0.0));
+    put_str16(&mut buf, res.factor_kind.unwrap_or(""));
+    put_u32(&mut buf, res.opt_iters as u32);
+    put_u32(&mut buf, res.probe_threads as u32);
+    put_u32(&mut buf, res.levels_refined as u32);
+    put_u32(&mut buf, res.order.len() as u32);
+    for &v in &res.order {
+        put_u32(&mut buf, v as u32);
+    }
+    buf
+}
+
+/// Decode a reorder result payload (client side).
+pub fn decode_result(payload: &[u8]) -> Result<WireResult, String> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let method = r.str16()?;
+    let provenance = r.str16()?;
+    let latency = r.f64()?;
+    let batch_size = r.u32()? as usize;
+    let has_fill = r.u8()? != 0;
+    let fill = r.f64()?;
+    let factor_kind = r.str16()?;
+    let opt_iters = r.u32()? as usize;
+    let probe_threads = r.u32()? as usize;
+    let levels_refined = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if n > MAX_WIRE_N {
+        return Err(format!("order length {n} above wire cap {MAX_WIRE_N}"));
+    }
+    if r.remaining() < 4 * n {
+        return Err(format!("payload truncated: order needs {} bytes", 4 * n));
+    }
+    let mut order = Vec::with_capacity(n);
+    for _ in 0..n {
+        order.push(r.u32()? as usize);
+    }
+    r.done()?;
+    Ok(WireResult {
+        id,
+        method,
+        provenance: (!provenance.is_empty()).then_some(provenance),
+        latency,
+        batch_size,
+        fill_ratio: has_fill.then_some(fill),
+        factor_kind: (!factor_kind.is_empty()).then_some(factor_kind),
+        opt_iters,
+        probe_threads,
+        levels_refined,
+        order,
+    })
+}
+
+// ---------------------------------------------------- busy/error/admin
+
+/// Encode a `Busy` payload.
+pub fn encode_busy(id: u64, reason: BusyReason) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(9);
+    put_u64(&mut buf, id);
+    buf.push(reason as u8);
+    buf
+}
+
+/// Decode a `Busy` payload.
+pub fn decode_busy(payload: &[u8]) -> Result<(u64, BusyReason), String> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let reason = BusyReason::from_u8(r.u8()?).ok_or("unknown busy reason")?;
+    r.done()?;
+    Ok((id, reason))
+}
+
+/// Encode an `Error` payload (id + UTF-8 message as the remainder).
+pub fn encode_error(id: u64, message: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + message.len().min(4096));
+    put_u64(&mut buf, id);
+    let bytes = message.as_bytes();
+    buf.extend_from_slice(&bytes[..bytes.len().min(4096)]);
+    buf
+}
+
+/// Decode an `Error` payload.
+pub fn decode_error(payload: &[u8]) -> Result<(u64, String), String> {
+    let mut r = Reader::new(payload);
+    let id = r.u64()?;
+    let rest = r.take(r.remaining())?;
+    Ok((id, String::from_utf8_lossy(rest).into_owned()))
+}
+
+/// Encode an `Admin` payload.
+pub fn encode_admin(cmd: AdminCmd) -> Vec<u8> {
+    vec![cmd as u8]
+}
+
+/// Decode an `Admin` payload.
+pub fn decode_admin(payload: &[u8]) -> Result<AdminCmd, String> {
+    let mut r = Reader::new(payload);
+    let cmd = AdminCmd::from_u8(r.u8()?).ok_or("unknown admin command")?;
+    r.done()?;
+    Ok(cmd)
+}
+
+/// Encode an `AdminResponse` payload (UTF-8 JSON as the whole body).
+pub fn encode_admin_response(json: &str) -> Vec<u8> {
+    json.as_bytes().to_vec()
+}
+
+/// Decode an `AdminResponse` payload.
+pub fn decode_admin_response(payload: &[u8]) -> String {
+    String::from_utf8_lossy(payload).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::coordinator::ReorderResult;
+    use crate::gen::grid::laplacian_2d;
+    use crate::order::Classical;
+    use crate::runtime::{Learned, Provenance};
+    use crate::util::rng::Pcg64;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            id: 42,
+            method: Method::Classical(Classical::Amd),
+            seed: 7,
+            eval_fill: true,
+            factor_kind: Some(FactorKind::Lu),
+            opt_budget: Some(OptBudget {
+                outer: 2,
+                refine: 8,
+                level_refine: 3,
+                adaptive_rho: true,
+                time_ms: Some(250),
+            }),
+            matrix: laplacian_2d(6, 6),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_full() {
+        let req = sample_request();
+        let payload = encode_request(&req).unwrap();
+        let got = decode_request(&payload).unwrap();
+        assert_eq!(got.id, 42);
+        assert_eq!(got.method, req.method);
+        assert_eq!(got.seed, 7);
+        assert!(got.eval_fill);
+        assert_eq!(got.factor_kind, Some(FactorKind::Lu));
+        let b = got.opt_budget.unwrap();
+        assert_eq!((b.outer, b.refine, b.level_refine), (2, 8, 3));
+        assert!(b.adaptive_rho);
+        assert_eq!(b.time_ms, Some(250));
+        assert_eq!(got.matrix, req.matrix);
+    }
+
+    #[test]
+    fn request_roundtrip_minimal() {
+        let req = WireRequest {
+            id: 1,
+            method: Method::Learned(Learned::Pfm),
+            seed: 0,
+            eval_fill: false,
+            factor_kind: None,
+            opt_budget: None,
+            matrix: Csr::identity(3),
+        };
+        let payload = encode_request(&req).unwrap();
+        let got = decode_request(&payload).unwrap();
+        assert_eq!(got.method, req.method);
+        assert_eq!(got.factor_kind, None);
+        assert!(got.opt_budget.is_none());
+        assert!(!got.eval_fill);
+        assert_eq!(got.matrix, req.matrix);
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_with_the_id() {
+        let payload = encode_request(&sample_request()).unwrap();
+        // zero-length payload
+        let e = decode_request(&[]).unwrap_err();
+        assert_eq!(e.id, 0);
+        // truncations at every prefix length must error, never panic
+        for cut in 0..payload.len() {
+            assert!(decode_request(&payload[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // trailing garbage
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(decode_request(&long).unwrap_err().message.contains("trailing"));
+        // unknown method label
+        let bad = WireRequest { id: 9, ..sample_request() };
+        let mut p = encode_request(&bad).unwrap();
+        // method label starts right after the u64 id + u16 len; corrupt it
+        p[10] = b'?';
+        let e = decode_request(&p).unwrap_err();
+        assert_eq!(e.id, 9, "id must survive a bad method label");
+        assert!(e.message.contains("unknown method"));
+    }
+
+    #[test]
+    fn structurally_invalid_matrices_are_rejected() {
+        // hand-build a payload with an out-of-range column index by
+        // corrupting a valid one (last index word of the indices array)
+        let req = WireRequest {
+            id: 5,
+            method: Method::Classical(Classical::Natural),
+            seed: 0,
+            eval_fill: false,
+            factor_kind: None,
+            opt_budget: None,
+            matrix: Csr::identity(4),
+        };
+        let good = encode_request(&req).unwrap();
+        // layout after header fields: nrows ncols nnz, 5×u32 indptr,
+        // 4×u32 indices, 4×f64 data → indices end 32 bytes before data
+        let data_start = good.len() - 4 * 8;
+        let mut bad = good.clone();
+        bad[data_start - 4..data_start].copy_from_slice(&100u32.to_le_bytes());
+        let e = decode_request(&bad).unwrap_err();
+        assert!(e.message.contains("out of range"), "{}", e.message);
+        // non-monotone indptr
+        let mut bad = good.clone();
+        let indptr_start = bad.len() - 4 * 8 - 4 * 4 - 5 * 4;
+        bad[indptr_start + 4..indptr_start + 8].copy_from_slice(&3u32.to_le_bytes());
+        bad[indptr_start + 8..indptr_start + 12].copy_from_slice(&1u32.to_le_bytes());
+        assert!(decode_request(&bad).is_err());
+        // nrows != ncols
+        let mut bad = good;
+        let nrows_start = indptr_start - 12;
+        bad[nrows_start..nrows_start + 4].copy_from_slice(&5u32.to_le_bytes());
+        let e = decode_request(&bad).unwrap_err();
+        assert!(e.message.contains("square") || e.message.contains("truncated"), "{}", e.message);
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let res = ReorderResult {
+            order: vec![2, 0, 1, 3],
+            method: "AMD",
+            provenance: Some(Provenance::NativeOptimizer),
+            latency: 0.25,
+            batch_size: 4,
+            fill_ratio: Some(1.75),
+            factor_kind: Some("lu"),
+            opt_iters: 6,
+            probe_threads: 2,
+            levels_refined: 3,
+        };
+        let payload = encode_result(99, &res);
+        let got = decode_result(&payload).unwrap();
+        assert_eq!(got.id, 99);
+        assert_eq!(got.method, "AMD");
+        assert_eq!(got.provenance.as_deref(), Some("native"));
+        assert_eq!(got.latency, 0.25);
+        assert_eq!(got.batch_size, 4);
+        assert_eq!(got.fill_ratio, Some(1.75));
+        assert_eq!(got.factor_kind.as_deref(), Some("lu"));
+        assert_eq!((got.opt_iters, got.probe_threads, got.levels_refined), (6, 2, 3));
+        assert_eq!(got.order, vec![2, 0, 1, 3]);
+    }
+
+    #[test]
+    fn result_without_optionals_roundtrips() {
+        let res = ReorderResult {
+            order: vec![0],
+            method: "Natural",
+            provenance: None,
+            latency: 0.0,
+            batch_size: 0,
+            fill_ratio: None,
+            factor_kind: None,
+            opt_iters: 0,
+            probe_threads: 0,
+            levels_refined: 0,
+        };
+        let got = decode_result(&encode_result(1, &res)).unwrap();
+        assert_eq!(got.provenance, None);
+        assert_eq!(got.fill_ratio, None);
+        assert_eq!(got.factor_kind, None);
+    }
+
+    #[test]
+    fn busy_error_admin_roundtrip() {
+        for reason in [BusyReason::QueueFull, BusyReason::RateLimited] {
+            let (id, r) = decode_busy(&encode_busy(17, reason)).unwrap();
+            assert_eq!((id, r), (17, reason));
+        }
+        assert!(decode_busy(&encode_busy(1, BusyReason::QueueFull)[..7]).is_err());
+        assert!(decode_busy(&[0; 9]).is_ok());
+        assert!(decode_busy(&[0, 0, 0, 0, 0, 0, 0, 0, 9]).is_err(), "unknown reason");
+
+        let (id, msg) = decode_error(&encode_error(3, "boom")).unwrap();
+        assert_eq!((id, msg.as_str()), (3, "boom"));
+        let (_, empty) = decode_error(&encode_error(3, "")).unwrap();
+        assert!(empty.is_empty());
+
+        for cmd in [AdminCmd::Ping, AdminCmd::Metrics, AdminCmd::Throttle, AdminCmd::Shutdown] {
+            assert_eq!(decode_admin(&encode_admin(cmd)).unwrap(), cmd);
+            assert_eq!(AdminCmd::parse(cmd.label()), Some(cmd));
+        }
+        assert!(decode_admin(&[]).is_err(), "zero-length admin payload");
+        assert!(decode_admin(&[77]).is_err(), "unknown admin command");
+        assert!(decode_admin(&[0, 0]).is_err(), "trailing bytes");
+
+        assert_eq!(decode_admin_response(&encode_admin_response("{\"a\":1}")), "{\"a\":1}");
+    }
+
+    #[test]
+    fn fuzz_decoders_never_panic_on_random_payloads() {
+        let mut rng = Pcg64::new(0x31A3_2026);
+        for _ in 0..2000 {
+            let len = rng.next_below(160);
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let _ = decode_request(&bytes);
+            let _ = decode_result(&bytes);
+            let _ = decode_busy(&bytes);
+            let _ = decode_error(&bytes);
+            let _ = decode_admin(&bytes);
+            let _ = decode_admin_response(&bytes);
+        }
+    }
+
+    #[test]
+    fn fuzz_corrupted_request_payloads_never_panic() {
+        // single- and multi-byte corruptions of a valid request: decode
+        // must return Ok or Err, never panic — this is what protects
+        // `Csr::from_parts` (debug-only checks) on the wire path
+        let mut rng = Pcg64::new(0x31A4_2026);
+        let base = encode_request(&sample_request()).unwrap();
+        for _ in 0..3000 {
+            let mut bytes = base.clone();
+            for _ in 0..1 + rng.next_below(6) {
+                let i = rng.next_below(bytes.len());
+                bytes[i] = (rng.next_u64() & 0xFF) as u8;
+            }
+            if let Ok(req) = decode_request(&bytes) {
+                // anything that decodes must be structurally safe to use
+                assert_eq!(req.matrix.nrows(), req.matrix.ncols());
+            }
+        }
+    }
+}

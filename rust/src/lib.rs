@@ -7,7 +7,8 @@
 //!   algorithms, symbolic + numeric Cholesky, the native in-Rust PFM
 //!   optimizer (`pfm`: instance-wise ADMM + proximal fill-in
 //!   minimization), a PJRT runtime that executes the AOT-compiled PFM
-//!   network, and an async reordering service.
+//!   network, an async reordering service, and a framed TCP gateway that
+//!   puts the service on the wire.
 //! * **L2 (python/compile)** — the PFM reordering network in JAX, trained
 //!   with ADMM + proximal gradient at build time.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the network's hot
@@ -17,6 +18,7 @@
 //! paper-vs-measured results.
 pub mod coordinator;
 pub mod factor;
+pub mod gateway;
 pub mod gen;
 pub mod harness;
 pub mod graph;

@@ -1,13 +1,19 @@
 //! `pfm-reorder` CLI: experiment drivers (table1/table2/table3/fig4), a
-//! one-shot `order` command, and the `serve` demo loop.
+//! one-shot `order` command, the TCP gateway (`serve` / `admin` /
+//! `remote`), and the in-process `demo` loop.
 //!
 //! No clap in the offline crate set — arguments are parsed by hand; every
 //! subcommand documents itself via `pfm-reorder help`.
 
+use std::net::{SocketAddr, ToSocketAddrs};
 use std::process::ExitCode;
+use std::time::Duration;
 
 use pfm_reorder::coordinator::{Method, ReorderService, ServiceConfig};
 use pfm_reorder::factor::{fill_ratio_of_order, lu_fill_ratio_of_order, FactorKind};
+use pfm_reorder::gateway::{
+    AdminCmd, Gateway, GatewayClient, GatewayConfig, Reply, WireRequest, DEFAULT_ADDR,
+};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::harness::{fig4, table1, table2, table3};
 use pfm_reorder::order::Classical;
@@ -15,6 +21,7 @@ use pfm_reorder::pfm::{OptBudget, PfmOptimizer, ScoreInit};
 use pfm_reorder::runtime::{Learned, PfmRuntime};
 use pfm_reorder::sparse::io::read_matrix_market;
 use pfm_reorder::sparse::Csr;
+use pfm_reorder::util::check::check_permutation;
 use pfm_reorder::util::json::Json;
 
 const USAGE: &str = "\
@@ -30,7 +37,10 @@ COMMANDS:
     fig4                   size sweep for fill/LU/ordering time (paper Fig. 4)
     order <file.mtx>       reorder one MatrixMarket matrix and report fill
     pfm <file.mtx>         native PFM optimizer: permutation + fill report
-    serve                  run the reordering service demo (batching stats)
+    serve                  run the TCP reorder gateway (framed protocol)
+    admin <cmd>            query a running gateway: ping|metrics|throttle|shutdown
+    remote <file.mtx>      reorder one matrix through a running gateway
+    demo                   run the in-process service demo (batching stats)
     help                   this message
 
 COMMON OPTIONS:
@@ -53,6 +63,11 @@ PFM OPTIONS:
     --budget-ms <ms>       wall-clock cap
     --check-fill           exit nonzero unless optimized fill <= natural fill
     --out <dir>            also write pfm_perm.txt + pfm_report.json
+
+GATEWAY OPTIONS:
+    --addr <host:port>     gateway address  [default: 127.0.0.1:7744]
+    --rate <r>             per-client rate limit, requests/s (0 = off)  [default: 0]
+    --burst <b>            token-bucket burst capacity  [default: 32]
 ";
 
 fn main() -> ExitCode {
@@ -70,6 +85,9 @@ fn main() -> ExitCode {
         "order" => cmd_order(&opts),
         "pfm" => cmd_pfm(&opts),
         "serve" => cmd_serve(&opts),
+        "admin" => cmd_admin(&opts),
+        "remote" => cmd_remote(&opts),
+        "demo" => cmd_demo(&opts),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -103,6 +121,9 @@ struct Opts {
     adaptive_rho: bool,
     budget_ms: Option<u64>,
     check_fill: bool,
+    addr: String,
+    rate: Option<f64>,
+    burst: Option<f64>,
     positional: Vec<String>,
 }
 
@@ -125,6 +146,9 @@ impl Opts {
             adaptive_rho: false,
             budget_ms: None,
             check_fill: false,
+            addr: DEFAULT_ADDR.to_string(),
+            rate: None,
+            burst: None,
             positional: Vec::new(),
         };
         let mut it = args.iter();
@@ -152,6 +176,9 @@ impl Opts {
                 "--adaptive-rho" => o.adaptive_rho = true,
                 "--budget-ms" => o.budget_ms = it.next().and_then(|s| s.parse().ok()),
                 "--check-fill" => o.check_fill = true,
+                "--addr" => o.addr = it.next().cloned().unwrap_or_else(|| DEFAULT_ADDR.into()),
+                "--rate" => o.rate = it.next().and_then(|s| s.parse().ok()),
+                "--burst" => o.burst = it.next().and_then(|s| s.parse().ok()),
                 other => o.positional.push(other.to_string()),
             }
         }
@@ -408,6 +435,89 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
 }
 
 fn cmd_serve(o: &Opts) -> Result<(), String> {
+    let gateway = Gateway::start(GatewayConfig {
+        addr: o.addr.clone(),
+        service: ServiceConfig { artifact_dir: o.artifacts.clone(), ..Default::default() },
+        rate: o.rate.unwrap_or(0.0),
+        burst: o.burst.unwrap_or(32.0),
+        ..GatewayConfig::default()
+    })
+    .map_err(|e| format!("bind {}: {e}", o.addr))?;
+    let addr = gateway.local_addr();
+    println!("pfm-reorder gateway listening on {addr}");
+    println!("(stop with: pfm-reorder admin shutdown --addr {addr})");
+    // blocks until an admin `shutdown` frame arrives, then runs the
+    // graceful drain: every accepted request is answered before exit
+    gateway.serve_until_shutdown();
+    println!("gateway shut down cleanly");
+    println!("metrics: {}", gateway.metrics().to_json().to_string());
+    Ok(())
+}
+
+/// Resolve `--addr` to one socket address.
+fn resolve_addr(addr: &str) -> Result<SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("bad address `{addr}`: {e}"))?
+        .next()
+        .ok_or_else(|| format!("address `{addr}` resolved to nothing"))
+}
+
+fn cmd_admin(o: &Opts) -> Result<(), String> {
+    let name = o.positional.first().map(String::as_str).unwrap_or("metrics");
+    let Some(cmd) = AdminCmd::parse(name) else {
+        return Err(format!("unknown admin command `{name}` (ping|metrics|throttle|shutdown)"));
+    };
+    let addr = resolve_addr(&o.addr)?;
+    let mut client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
+        .map_err(|e| format!("connect {addr}: {e} (is `pfm-reorder serve` running?)"))?;
+    println!("{}", client.admin(cmd)?);
+    Ok(())
+}
+
+fn cmd_remote(o: &Opts) -> Result<(), String> {
+    let seed = o.seed.unwrap_or(42);
+    let (name, a) = match (&o.gen, o.positional.first()) {
+        (Some(spec), _) => parse_gen(spec, seed)?,
+        (None, Some(path)) => {
+            (path.clone(), read_matrix_market(path).map_err(|e| e.to_string())?)
+        }
+        (None, None) => {
+            return Err("usage: pfm-reorder remote <file.mtx> | --gen <class:n>".into())
+        }
+    };
+    let method = parse_method(o.method.as_deref().unwrap_or("amd"))?;
+    let n = a.nrows();
+    let req = WireRequest {
+        id: seed,
+        method,
+        seed,
+        eval_fill: true,
+        factor_kind: None,
+        opt_budget: None,
+        matrix: a,
+    };
+    let addr = resolve_addr(&o.addr)?;
+    let mut client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
+        .map_err(|e| format!("connect {addr}: {e} (is `pfm-reorder serve` running?)"))?;
+    match client.request(&req)? {
+        Reply::Result(res) => {
+            check_permutation(&res.order)?;
+            println!(
+                "{name}: n={n} served by {} via {addr} | fill {} | latency {:.1} ms{}",
+                res.method,
+                res.fill_ratio.map(|f| format!("{f:.3}")).unwrap_or_else(|| "n/a".to_string()),
+                res.latency * 1e3,
+                res.provenance.map(|p| format!(" | provenance {p}")).unwrap_or_default(),
+            );
+            Ok(())
+        }
+        Reply::Busy { reason, .. } => Err(format!("gateway busy: {}", reason.label())),
+        Reply::Error { message, .. } => Err(message),
+        Reply::Admin(_) => Err("unexpected admin reply to a reorder request".into()),
+    }
+}
+
+fn cmd_demo(o: &Opts) -> Result<(), String> {
     let service = ReorderService::start(ServiceConfig {
         artifact_dir: o.artifacts.clone(),
         ..Default::default()

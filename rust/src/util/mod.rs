@@ -6,4 +6,5 @@
 pub mod check;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod timer;

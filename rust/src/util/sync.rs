@@ -1,0 +1,38 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking thread into a cascade: the
+//! panic poisons the mutex, every other holder's `unwrap` then panics too,
+//! and a whole worker pool (or the dispatcher) dies from a single fault.
+//! The data guarded by the coordinator's mutexes is either plain counters
+//! (metrics) or a channel receiver — both remain valid after an
+//! interrupted critical section — so recovering the guard is always the
+//! right call here.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned(), "panic while holding the lock must poison");
+        // plain lock().unwrap() would panic here; the helper recovers
+        let mut g = lock_unpoisoned(&m);
+        *g += 1;
+        assert_eq!(*g, 8);
+    }
+}

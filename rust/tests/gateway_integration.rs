@@ -1,0 +1,386 @@
+//! Loopback integration tests of the TCP reorder gateway: the
+//! exactly-one-reply contract under a burst that overruns the bounded
+//! queue, per-client rate-limit isolation, graceful shutdown answering
+//! every in-flight request, malformed-input rejection on a live socket,
+//! and the admin protocol.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use pfm_reorder::coordinator::{Method, ServiceConfig};
+use pfm_reorder::gateway::frame::{self, FrameType};
+use pfm_reorder::gateway::{
+    AdminCmd, BusyReason, Gateway, GatewayClient, GatewayConfig, Reply, WireRequest,
+};
+use pfm_reorder::gen::grid::laplacian_2d;
+use pfm_reorder::order::Classical;
+use pfm_reorder::pfm::OptBudget;
+use pfm_reorder::runtime::Learned;
+use pfm_reorder::sparse::Csr;
+use pfm_reorder::util::check::check_permutation;
+use pfm_reorder::util::rng::Pcg64;
+
+fn gateway(service: ServiceConfig, rate: f64, burst: f64) -> Gateway {
+    Gateway::start(GatewayConfig {
+        addr: "127.0.0.1:0".to_string(),
+        service,
+        rate,
+        burst,
+        poll: Duration::from_millis(5),
+    })
+    .expect("bind loopback gateway")
+}
+
+fn request(id: u64, method: Method, matrix: Csr) -> WireRequest {
+    WireRequest {
+        id,
+        method,
+        seed: id,
+        eval_fill: false,
+        factor_kind: None,
+        opt_budget: None,
+        matrix,
+    }
+}
+
+/// A burst larger than the bounded queue: every frame is answered with
+/// exactly one `Response` or `Busy(QueueFull)` — zero silent drops — and
+/// replies come back in submission order with the ids echoed.
+#[test]
+fn burst_over_bounded_queue_answers_every_request() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-burst".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let total = 40u64;
+    let a = laplacian_2d(30, 30); // Fiedler on n=900: a few ms per request
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    for i in 0..total {
+        c.send_request(&request(i, Method::Classical(Classical::Fiedler), a.clone()))
+            .unwrap();
+    }
+    let (mut served, mut busy) = (0u64, 0u64);
+    for i in 0..total {
+        match c.recv_reply().unwrap() {
+            Reply::Result(res) => {
+                assert_eq!(res.id, i, "replies must preserve submission order");
+                assert_eq!(res.order.len(), 900);
+                check_permutation(&res.order).unwrap();
+                served += 1;
+            }
+            Reply::Busy { id, reason } => {
+                assert_eq!(id, i, "busy must echo the request id");
+                assert_eq!(reason, BusyReason::QueueFull);
+                busy += 1;
+            }
+            other => panic!("request {i}: unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(served + busy, total, "exactly one reply per request");
+    assert!(served >= 1, "the service must have served part of the burst");
+    assert!(busy >= 1, "a 40-deep instant burst over a 1-deep queue must saturate");
+    drop(c);
+    gw.shutdown();
+    let m = gw.metrics();
+    assert_eq!(m.gateway_busy_queue(), busy as usize);
+    assert_eq!(m.total_completed(), served as usize);
+}
+
+/// Concurrent clients with mixed request classes: each connection gets
+/// exactly one reply per request, in order, all valid permutations.
+#[test]
+fn concurrent_mixed_class_clients_each_get_every_reply() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-gwi-mixed".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let addr = gw.local_addr();
+    let quick = OptBudget { outer: 1, refine: 4, level_refine: 0, ..OptBudget::default() };
+    let handles: Vec<_> = (0..4u64)
+        .map(|client| {
+            std::thread::spawn(move || {
+                let a = laplacian_2d(8, 8);
+                let mut c = GatewayClient::connect(addr).unwrap();
+                let per_client = 8u64;
+                for i in 0..per_client {
+                    let method = match i % 3 {
+                        0 => Method::Classical(Classical::Amd),
+                        1 => Method::Classical(Classical::Natural),
+                        _ => Method::Learned(Learned::Pfm),
+                    };
+                    let mut req = request(client * 1000 + i, method, a.clone());
+                    req.opt_budget = Some(quick);
+                    c.send_request(&req).unwrap();
+                }
+                for i in 0..per_client {
+                    match c.recv_reply().unwrap() {
+                        Reply::Result(res) => {
+                            assert_eq!(res.id, client * 1000 + i);
+                            check_permutation(&res.order).unwrap();
+                        }
+                        other => panic!("client {client}: unexpected reply {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    gw.shutdown();
+    let m = gw.metrics();
+    assert_eq!(m.total_completed(), 32);
+    assert_eq!(m.gateway_connections(), 4);
+    assert_eq!(m.errors(), 0);
+}
+
+/// One hot client is throttled; a calm client on the same gateway is not.
+#[test]
+fn rate_limited_client_is_throttled_while_others_proceed() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-gwi-rate".into(),
+            ..Default::default()
+        },
+        1.0, // 1 req/s refill
+        2.0, // burst of 2
+    );
+    let a = laplacian_2d(8, 8);
+
+    // hog: 8 back-to-back requests — the burst admits 2, the rest bounce
+    let mut hog = GatewayClient::connect(gw.local_addr()).unwrap();
+    for i in 0..8 {
+        hog.send_request(&request(i, Method::Classical(Classical::Amd), a.clone())).unwrap();
+    }
+    let (mut served, mut throttled) = (0, 0);
+    for i in 0..8 {
+        match hog.recv_reply().unwrap() {
+            Reply::Result(res) => {
+                assert_eq!(res.id, i);
+                served += 1;
+            }
+            Reply::Busy { id, reason } => {
+                assert_eq!(id, i);
+                assert_eq!(reason, BusyReason::RateLimited);
+                throttled += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(served + throttled, 8, "every frame answered");
+    assert!(served >= 2, "the burst capacity must be admitted");
+    assert!(throttled >= 5, "a back-to-back burst of 8 against burst=2 must throttle");
+
+    // calm client (distinct peer => its own bucket): full burst served
+    let mut calm = GatewayClient::connect(gw.local_addr()).unwrap();
+    for i in 100..102 {
+        match calm.request(&request(i, Method::Classical(Classical::Amd), a.clone())).unwrap() {
+            Reply::Result(res) => assert_eq!(res.id, i),
+            other => panic!("calm client must not be throttled, got {other:?}"),
+        }
+    }
+
+    // admin throttle stats see both buckets
+    let stats = calm.admin(AdminCmd::Throttle).unwrap();
+    assert!(stats.contains("\"enabled\":true"), "{stats}");
+    assert!(stats.contains("\"throttled\":"), "{stats}");
+    drop(hog);
+    drop(calm);
+    gw.shutdown();
+    assert_eq!(gw.metrics().gateway_busy_throttled(), throttled);
+}
+
+/// Shutdown with requests in flight: the drain answers every accepted
+/// request with a real result before the gateway exits — the service's
+/// "shutdown answers everything" contract, extended across the wire.
+#[test]
+fn shutdown_answers_every_in_flight_request() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 8,
+            artifact_dir: "nonexistent-dir-ok-gwi-drain".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let a = laplacian_2d(30, 30); // slow enough that shutdown lands mid-work
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    let inflight = 5u64;
+    for i in 0..inflight {
+        c.send_request(&request(i, Method::Classical(Classical::Fiedler), a.clone()))
+            .unwrap();
+    }
+    // let the reader pull everything off the socket and into the service
+    std::thread::sleep(Duration::from_millis(300));
+    let drainer = std::thread::spawn(move || {
+        let mut got = Vec::new();
+        for _ in 0..inflight {
+            got.push(c.recv_reply().unwrap());
+        }
+        got
+    });
+    gw.shutdown(); // blocks until writers flushed every pending reply
+    let replies = drainer.join().unwrap();
+    assert_eq!(replies.len() as u64, inflight);
+    for (i, reply) in replies.iter().enumerate() {
+        match reply {
+            Reply::Result(res) => {
+                assert_eq!(res.id, i as u64);
+                check_permutation(&res.order).unwrap();
+            }
+            other => panic!("in-flight request {i} not served across shutdown: {other:?}"),
+        }
+    }
+    assert_eq!(gw.metrics().total_completed(), inflight as usize);
+}
+
+/// Payload-level garbage is answered with an `Error` frame and the
+/// connection keeps working; framing-level garbage is answered and the
+/// connection closes. Nothing panics.
+#[test]
+fn malformed_input_is_rejected_without_killing_the_connection() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-malformed".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let a = laplacian_2d(8, 8);
+
+    // garbage *payload* in a well-formed Request frame → Error, then the
+    // same connection still serves a valid request
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+    frame::write_frame(&mut s, FrameType::Request, b"not a request").unwrap();
+    let f = frame::read_frame(&mut s).unwrap();
+    assert_eq!(f.ftype, FrameType::Error);
+    // zero-length payload is equally malformed at the wire layer
+    frame::write_frame(&mut s, FrameType::Request, b"").unwrap();
+    assert_eq!(frame::read_frame(&mut s).unwrap().ftype, FrameType::Error);
+    drop(s);
+
+    // oversize length prefix → Error frame, connection closed
+    let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+    let mut h = frame::encode_header(FrameType::Request, 0);
+    h[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&h).unwrap();
+    let f = frame::read_frame(&mut s).unwrap();
+    assert_eq!(f.ftype, FrameType::Error);
+    assert!(matches!(
+        frame::read_frame(&mut s),
+        Err(frame::FrameError::CleanEof) | Err(frame::FrameError::Io(_))
+    ));
+    drop(s);
+
+    // unknown protocol version → Error frame, connection closed
+    let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+    let mut h = frame::encode_header(FrameType::Request, 0);
+    h[2] = 99;
+    s.write_all(&h).unwrap();
+    assert_eq!(frame::read_frame(&mut s).unwrap().ftype, FrameType::Error);
+    drop(s);
+
+    // the gateway is still healthy for well-behaved clients
+    match c.request(&request(1, Method::Classical(Classical::Amd), a)).unwrap() {
+        Reply::Result(res) => check_permutation(&res.order).unwrap(),
+        other => panic!("healthy client broken by malformed peers: {other:?}"),
+    }
+    drop(c);
+    gw.shutdown();
+    assert!(gw.metrics().gateway_malformed() >= 4);
+}
+
+/// Fuzz a live gateway with random byte strings on many connections: any
+/// outcome is fine except the gateway dying.
+#[test]
+fn random_byte_connections_never_take_the_gateway_down() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-fuzz".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let mut rng = Pcg64::new(0x6A7E_2026);
+    for _ in 0..25 {
+        let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+        let len = rng.next_below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = s.write_all(&bytes);
+        drop(s);
+    }
+    // half-written valid frames (truncated mid-payload) as well
+    for _ in 0..10 {
+        let mut s = TcpStream::connect(gw.local_addr()).unwrap();
+        let h = frame::encode_header(FrameType::Request, 64);
+        let _ = s.write_all(&h);
+        let _ = s.write_all(&[0u8; 13]);
+        drop(s);
+    }
+    let a = laplacian_2d(8, 8);
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    match c.request(&request(9, Method::Classical(Classical::Amd), a)).unwrap() {
+        Reply::Result(res) => check_permutation(&res.order).unwrap(),
+        other => panic!("gateway unhealthy after fuzzing: {other:?}"),
+    }
+    drop(c);
+    gw.shutdown();
+}
+
+/// Admin protocol: ping, metrics (with live gateway counters), throttle.
+#[test]
+fn admin_protocol_reports_live_metrics() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-admin".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let a = laplacian_2d(8, 8);
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    assert!(c.admin(AdminCmd::Ping).unwrap().contains("\"ok\":true"));
+    match c.request(&request(3, Method::Classical(Classical::Amd), a)).unwrap() {
+        Reply::Result(res) => assert_eq!(res.id, 3),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let m = c.admin(AdminCmd::Metrics).unwrap();
+    for key in [
+        "\"gateway\"",
+        "\"connections\":1",
+        "\"frames_rx\"",
+        "\"frames_tx\"",
+        "\"queue_depth\"",
+        "\"worker_panics\":0",
+        "\"completed\":1",
+    ] {
+        assert!(m.contains(key), "metrics JSON missing {key}: {m}");
+    }
+    let t = c.admin(AdminCmd::Throttle).unwrap();
+    assert!(t.contains("\"enabled\":false"), "{t}");
+    drop(c);
+    gw.shutdown();
+    assert_eq!(gw.metrics().gateway_admin(), 3);
+}
