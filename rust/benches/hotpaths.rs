@@ -20,6 +20,7 @@ use pfm_reorder::gateway::wire;
 use pfm_reorder::gen::grid::{convection_diffusion_2d, laplacian_2d, laplacian_3d};
 use pfm_reorder::gen::ProblemClass;
 use pfm_reorder::order::{amd, fiedler_order, nested_dissection, rcm, Classical};
+use pfm_reorder::persist;
 use pfm_reorder::pfm::{OptBudget, PfmOptimizer};
 use pfm_reorder::util::json::Json;
 use pfm_reorder::util::rng::Pcg64;
@@ -213,6 +214,35 @@ fn main() {
     bench(&mut results, "gateway_wire/decode_request_2d_n4096", warm, it(20), || {
         wire::decode_request(&payload).unwrap()
     });
+
+    // --- warm-start persistence: record codec, WAL append, replay ---
+    // the durability tax on the accept path (encode + frame + append;
+    // fsync off so this measures the code path, not the device) and the
+    // restart cost (open = segment replay + per-record re-validation)
+    let pdir = std::env::temp_dir().join(format!("pfm_bench_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&pdir);
+    let pcfg = persist::PersistConfig {
+        fsync: persist::FsyncPolicy::Never,
+        snapshot_every: 0,
+        ..persist::PersistConfig::new(&pdir)
+    };
+    let rec = persist::StoredOrdering::new("pfm", &grid2d, amd_order.clone(), None, Some(2.0));
+    println!("  persist record payload for 2d_n4096: {} bytes", rec.encode().len());
+    bench(&mut results, "persist/encode_record_2d_n4096", warm, it(20), || rec.encode());
+    let (mut store, _) = persist::OrderingStore::open(pcfg.clone());
+    bench(&mut results, "persist/wal_append_2d_n4096", warm, it(20), || {
+        store.insert(rec.clone())
+    });
+    bench(&mut results, "persist/lookup_hit_2d_n4096", warm, it(20), || {
+        store.lookup("pfm", &grid2d).is_some()
+    });
+    drop(store);
+    let (_, pstats) = persist::OrderingStore::open(pcfg.clone());
+    println!("  persist open replays {} WAL records", pstats.replayed);
+    bench(&mut results, "persist/open_replay_2d_n4096", warm, it(5), || {
+        persist::OrderingStore::open(pcfg.clone())
+    });
+    let _ = std::fs::remove_dir_all(&pdir);
 
     // --- machine-readable baseline: name → ns/iter (median) ---
     let mut ns_per_iter = Json::obj();

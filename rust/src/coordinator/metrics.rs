@@ -62,6 +62,16 @@ struct Inner {
     gw_busy_throttled: usize,
     gw_malformed: usize,
     gw_admin: usize,
+    /// warm-start persistence counters (zero unless `ServiceConfig::persist`
+    /// is set)
+    p_replayed: usize,
+    p_warm_hits: usize,
+    p_wal_appends: usize,
+    p_snapshots: usize,
+    p_torn_tails: usize,
+    p_quarantined: usize,
+    p_rejected: usize,
+    p_errors: usize,
 }
 
 /// Shared metrics sink.
@@ -94,6 +104,7 @@ impl Metrics {
         match provenance {
             Some(Provenance::SpectralFallback) => m.fallbacks += 1,
             Some(Provenance::NativeOptimizer) => m.native_opts += 1,
+            Some(Provenance::WarmStore) => m.p_warm_hits += 1,
             Some(Provenance::Network) | None => {}
         }
     }
@@ -254,6 +265,54 @@ impl Metrics {
         lock_unpoisoned(&self.inner).gw_admin
     }
 
+    /// Copy what warm-store recovery found into the persist counters
+    /// (called once at service startup when persistence is enabled).
+    pub fn record_recovery(&self, stats: &crate::persist::RecoveryStats) {
+        let mut m = lock_unpoisoned(&self.inner);
+        m.p_replayed += stats.replayed;
+        m.p_torn_tails += stats.torn_tails;
+        m.p_quarantined += stats.quarantined;
+        m.p_rejected += stats.rejected;
+        m.p_errors += stats.errors;
+    }
+
+    /// One record durably appended to the warm-store WAL.
+    pub fn record_wal_append(&self) {
+        lock_unpoisoned(&self.inner).p_wal_appends += 1;
+    }
+
+    /// One warm-store snapshot written (auto or admin-triggered).
+    pub fn record_persist_snapshot(&self) {
+        lock_unpoisoned(&self.inner).p_snapshots += 1;
+    }
+
+    /// One persistence I/O failure absorbed (the store degraded to
+    /// memory-only instead of crashing — the counter is the proof).
+    pub fn record_persist_error(&self) {
+        lock_unpoisoned(&self.inner).p_errors += 1;
+    }
+
+    pub fn persist_replayed(&self) -> usize {
+        lock_unpoisoned(&self.inner).p_replayed
+    }
+
+    /// Requests short-circuited by the warm-start store.
+    pub fn warm_hits(&self) -> usize {
+        lock_unpoisoned(&self.inner).p_warm_hits
+    }
+
+    pub fn wal_appends(&self) -> usize {
+        lock_unpoisoned(&self.inner).p_wal_appends
+    }
+
+    pub fn persist_snapshots(&self) -> usize {
+        lock_unpoisoned(&self.inner).p_snapshots
+    }
+
+    pub fn persist_errors(&self) -> usize {
+        lock_unpoisoned(&self.inner).p_errors
+    }
+
     /// Latency stats per method.
     pub fn latency_stats(&self) -> Vec<(&'static str, Stats)> {
         let m = lock_unpoisoned(&self.inner);
@@ -290,16 +349,26 @@ impl Metrics {
                     .set("max_s", s.max),
             );
         }
-        let gateway = {
+        let (gateway, persist) = {
             let m = lock_unpoisoned(&self.inner);
-            Json::obj()
+            let gateway = Json::obj()
                 .set("connections", m.gw_connections)
                 .set("frames_rx", m.gw_frames_rx)
                 .set("frames_tx", m.gw_frames_tx)
                 .set("busy_queue_full", m.gw_busy_queue)
                 .set("busy_rate_limited", m.gw_busy_throttled)
                 .set("malformed_frames", m.gw_malformed)
-                .set("admin_requests", m.gw_admin)
+                .set("admin_requests", m.gw_admin);
+            let persist = Json::obj()
+                .set("replayed", m.p_replayed)
+                .set("warm_hits", m.p_warm_hits)
+                .set("wal_appends", m.p_wal_appends)
+                .set("snapshots", m.p_snapshots)
+                .set("torn_tails_recovered", m.p_torn_tails)
+                .set("segments_quarantined", m.p_quarantined)
+                .set("records_rejected", m.p_rejected)
+                .set("persist_errors", m.p_errors);
+            (gateway, persist)
         };
         Json::obj()
             .set("completed", self.total_completed())
@@ -315,6 +384,7 @@ impl Metrics {
             .set("levels_refined", self.levels_refined())
             .set("probe_threads", self.probe_threads())
             .set("gateway", gateway)
+            .set("persist", persist)
             .set("latency", per_method)
     }
 }
@@ -395,6 +465,41 @@ mod tests {
         assert!(json.contains("\"busy_rate_limited\":2"));
         assert!(json.contains("\"malformed_frames\":1"));
         assert!(json.contains("\"admin_requests\":1"));
+    }
+
+    #[test]
+    fn persist_counters_export() {
+        let m = Metrics::new();
+        m.record_recovery(&crate::persist::RecoveryStats {
+            replayed: 3,
+            torn_tails: 1,
+            quarantined: 2,
+            rejected: 1,
+            errors: 0,
+        });
+        m.record("PFM", 0.001, 0, Some(Provenance::WarmStore));
+        m.record_wal_append();
+        m.record_wal_append();
+        m.record_persist_snapshot();
+        m.record_persist_error();
+        assert_eq!(m.persist_replayed(), 3);
+        assert_eq!(m.warm_hits(), 1);
+        assert_eq!(m.wal_appends(), 2);
+        assert_eq!(m.persist_snapshots(), 1);
+        assert_eq!(m.persist_errors(), 1);
+        // a warm hit is a completion, not a fallback or a native run
+        assert_eq!(m.total_completed(), 1);
+        assert_eq!(m.native_optimized(), 0);
+        assert_eq!(m.fallbacks(), 0);
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"warm_hits\":1"));
+        assert!(json.contains("\"replayed\":3"));
+        assert!(json.contains("\"wal_appends\":2"));
+        assert!(json.contains("\"snapshots\":1"));
+        assert!(json.contains("\"torn_tails_recovered\":1"));
+        assert!(json.contains("\"segments_quarantined\":2"));
+        assert!(json.contains("\"records_rejected\":1"));
+        assert!(json.contains("\"persist_errors\":1"));
     }
 
     #[test]

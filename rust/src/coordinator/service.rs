@@ -76,6 +76,14 @@ pub struct ServiceConfig {
     /// path (the request is answered with an error, the thread survives,
     /// `Metrics::worker_panics` increments). `None` in production.
     pub fault_seed: Option<u64>,
+    /// Crash-safe warm-start persistence (`crate::persist`): when set,
+    /// accepted native-PFM orderings are written through a WAL under this
+    /// config and the dispatcher short-circuits repeat patterns with the
+    /// stored permutation ([`Provenance::WarmStore`]). `None` (the
+    /// default) keeps the service fully stateless.
+    ///
+    /// [`Provenance::WarmStore`]: crate::runtime::Provenance
+    pub persist: Option<crate::persist::PersistConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -89,6 +97,7 @@ impl Default for ServiceConfig {
             opt_budget: OptBudget::serving(),
             probe_threads: 2,
             fault_seed: None,
+            persist: None,
         }
     }
 }
@@ -101,6 +110,8 @@ pub struct ReorderService {
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// warm-start store (None unless `ServiceConfig::persist` was set)
+    store: Option<Arc<Mutex<crate::persist::OrderingStore>>>,
 }
 
 impl ReorderService {
@@ -110,6 +121,15 @@ impl ReorderService {
         let metrics = Arc::new(Metrics::new());
         metrics.set_probe_threads(config.probe_threads.max(1));
         let shutdown = Arc::new(AtomicBool::new(false));
+
+        // warm-start store: recover before serving, so the very first
+        // request can already hit a permutation persisted by a previous
+        // process (the crash-restart amortization this exists for)
+        let store = config.persist.clone().map(|pc| {
+            let (store, stats) = crate::persist::OrderingStore::open(pc);
+            metrics.record_recovery(&stats);
+            Arc::new(Mutex::new(store))
+        });
 
         // classical pool channel — bounded like the submission queue, so
         // saturation propagates backwards (pool full → dispatcher blocks →
@@ -122,10 +142,12 @@ impl ReorderService {
 
         let mut threads = Vec::new();
 
-        // dispatcher: route by method class
+        // dispatcher: route by method class, short-circuiting repeat
+        // patterns through the warm-start store before any work is queued
         {
             let shutdown = shutdown.clone();
             let metrics = metrics.clone();
+            let store = store.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("pfm-dispatch".into())
@@ -141,6 +163,11 @@ impl ReorderService {
                                     result: Err("service shutting down".to_string()),
                                 });
                                 continue;
+                            }
+                            if let Some(store) = &store {
+                                if serve_warm_hit(store, &req, &metrics) {
+                                    continue;
+                                }
                             }
                             let target = match req.method {
                                 Method::Classical(_) => ctx.send(req),
@@ -251,10 +278,11 @@ impl ReorderService {
         {
             let metrics = metrics.clone();
             let cfg = config.clone();
+            let store = store.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("pfm-network".into())
-                    .spawn(move || network_loop(nrx, cfg, metrics))
+                    .spawn(move || network_loop(nrx, cfg, metrics, store))
                     .expect("spawn network thread"),
             );
         }
@@ -265,7 +293,29 @@ impl ReorderService {
             metrics,
             shutdown,
             threads: Mutex::new(threads),
+            store,
         })
+    }
+
+    /// Compact the warm-start store into one snapshot (the gateway's
+    /// `snapshot` admin command). Returns the number of records written,
+    /// or an error when persistence is disabled / the write failed. A
+    /// successful snapshot also re-enables a store that degraded to
+    /// memory-only after an earlier I/O failure.
+    pub fn persist_snapshot(&self) -> Result<usize, String> {
+        let store = self
+            .store
+            .as_ref()
+            .ok_or_else(|| "persistence is not enabled (start with --persist-dir)".to_string())?;
+        let n = lock_unpoisoned(store).snapshot()?;
+        self.metrics.record_persist_snapshot();
+        Ok(n)
+    }
+
+    /// Orderings currently held by the warm-start store (0 when
+    /// persistence is disabled).
+    pub fn warm_store_len(&self) -> usize {
+        self.store.as_ref().map_or(0, |s| lock_unpoisoned(s).len())
     }
 
     /// Submit a reorder request; returns a receiver for the response.
@@ -469,11 +519,62 @@ fn eval_fill(
     (fill, kind.label())
 }
 
+/// Try to answer `req` from the warm-start store. Returns `true` when the
+/// request was served (response sent, metrics recorded). Only variants
+/// with a native path are ever stored, so only those are looked up; the
+/// request's seed is deliberately not part of the key — amortizing the
+/// optimizer across seeds and restarts is the point of the store.
+fn serve_warm_hit(
+    store: &Arc<Mutex<crate::persist::OrderingStore>>,
+    req: &ReorderRequest,
+    metrics: &Metrics,
+) -> bool {
+    let Method::Learned(l) = req.method else { return false };
+    if !l.has_native_path() {
+        return false;
+    }
+    let hit = {
+        let guard = lock_unpoisoned(store);
+        guard
+            .lookup(l.variant(), &req.matrix)
+            .map(|rec| (rec.order.clone(), rec.factor_kind, rec.fill_ratio))
+    };
+    let Some((order, kind, fill)) = hit else { return false };
+    let latency = req.submitted.elapsed().as_secs_f64();
+    metrics.record(l.label(), latency, 0, Some(crate::runtime::Provenance::WarmStore));
+    // the stored fill evaluation is reused only when the request would
+    // accept it: fill was asked for, a stored value exists, and the
+    // request didn't pin a different factorization kind
+    let kind_ok = req.factor_kind.is_none() || req.factor_kind == kind;
+    let (fill_ratio, factor_kind) = if req.eval_fill && kind_ok && fill.is_some() {
+        (fill, kind.map(|k| k.label()))
+    } else {
+        (None, None)
+    };
+    let _ = req.respond.send(ReorderResponse {
+        id: req.id,
+        result: Ok(ReorderResult {
+            order,
+            method: l.label(),
+            provenance: Some(crate::runtime::Provenance::WarmStore),
+            latency,
+            batch_size: 0,
+            fill_ratio,
+            factor_kind,
+            opt_iters: 0,
+            probe_threads: 0,
+            levels_refined: 0,
+        }),
+    });
+    true
+}
+
 /// Network executor: drains the queue, groups by bucket, executes.
 fn network_loop(
     rx: mpsc::Receiver<ReorderRequest>,
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
+    store: Option<Arc<Mutex<crate::persist::OrderingStore>>>,
 ) {
     let mut runtime = match PfmRuntime::new(&cfg.artifact_dir) {
         Ok(rt) => rt,
@@ -660,6 +761,37 @@ fn network_loop(
                         metrics.record_levels_refined(out.levels_refined);
                         let native_run =
                             out.provenance == crate::runtime::Provenance::NativeOptimizer;
+                        // persist accepted native results *before* the
+                        // response is sent: an acknowledged ordering is
+                        // already on disk (under FsyncPolicy::Always), so
+                        // kill -9 right after the reply still warm-starts
+                        if native_run {
+                            if let Some(store) = &store {
+                                let kind = match fill_kind {
+                                    Some("cholesky") => Some(FactorKind::Cholesky),
+                                    Some("lu") => Some(FactorKind::Lu),
+                                    _ => None,
+                                };
+                                let rec = crate::persist::StoredOrdering::new(
+                                    l.variant(),
+                                    &req.matrix,
+                                    out.order.clone(),
+                                    kind,
+                                    fill,
+                                );
+                                let persisted = lock_unpoisoned(store).insert(rec);
+                                if persisted.appended {
+                                    metrics.record_wal_append();
+                                }
+                                if persisted.snapshotted {
+                                    metrics.record_persist_snapshot();
+                                }
+                                for e in &persisted.errors {
+                                    eprintln!("pfm-network: persist degraded: {e}");
+                                    metrics.record_persist_error();
+                                }
+                            }
+                        }
                         let _ = req.respond.send(ReorderResponse {
                             id: req.id,
                             result: Ok(ReorderResult {
@@ -961,6 +1093,120 @@ mod tests {
         assert_eq!(service.metrics.worker_panics(), 2);
         let json = service.metrics.to_json().to_string();
         assert!(json.contains("\"worker_panics\":2"));
+    }
+
+    #[test]
+    fn warm_store_short_circuits_repeats_and_survives_restart_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("pfm_svc_persist_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-svc-warm".into(),
+            persist: Some(crate::persist::PersistConfig::new(&dir)),
+            ..Default::default()
+        };
+        let budget = OptBudget { outer: 1, refine: 4, time_ms: None, ..OptBudget::default() };
+        let a = laplacian_2d(12, 12);
+
+        let service = ReorderService::start(cfg.clone());
+        let rx = service.submit_with_budget(
+            a.clone(),
+            Method::Learned(Learned::Pfm),
+            7,
+            true,
+            None,
+            Some(budget),
+        );
+        let first = rx.recv().expect("response").result.expect("ok");
+        assert_eq!(first.provenance, Some(crate::runtime::Provenance::NativeOptimizer));
+        assert_eq!(service.metrics.wal_appends(), 1, "accepted native result must hit the WAL");
+        // a repeat of the same pattern — different seed on purpose: the
+        // store amortizes the optimizer across seeds — is served warm
+        let rx = service.submit_with_budget(
+            a.clone(),
+            Method::Learned(Learned::Pfm),
+            8,
+            true,
+            None,
+            Some(budget),
+        );
+        let warm = rx.recv().expect("response").result.expect("ok");
+        assert_eq!(warm.provenance, Some(crate::runtime::Provenance::WarmStore));
+        assert_eq!(warm.order, first.order, "warm hit must be bit-identical");
+        assert_eq!(warm.fill_ratio, first.fill_ratio, "stored fill evaluation is reused");
+        assert_eq!(warm.factor_kind, Some("cholesky"));
+        assert_eq!(service.metrics.warm_hits(), 1);
+        assert_eq!(service.metrics.native_optimized(), 1, "the optimizer ran exactly once");
+        // a different pattern is a miss, never a false hit
+        let miss = service
+            .reorder_blocking(laplacian_2d(12, 13), Method::Learned(Learned::Pfm), 7)
+            .unwrap();
+        assert_ne!(miss.provenance, Some(crate::runtime::Provenance::WarmStore));
+        drop(service);
+
+        // "restart": a fresh service on the same directory replays the WAL
+        // and serves the original permutation without re-optimizing
+        let service = ReorderService::start(cfg);
+        assert!(service.metrics.persist_replayed() >= 1, "restart must replay the store");
+        let rx = service.submit_with_budget(
+            a,
+            Method::Learned(Learned::Pfm),
+            9,
+            true,
+            None,
+            Some(budget),
+        );
+        let revived = rx.recv().expect("response").result.expect("ok");
+        assert_eq!(revived.provenance, Some(crate::runtime::Provenance::WarmStore));
+        assert_eq!(revived.order, first.order, "restart must replay bit-identically");
+        assert_eq!(service.metrics.native_optimized(), 0, "no re-optimization after restart");
+        let json = service.metrics.to_json().to_string();
+        assert!(json.contains("\"warm_hits\":1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persist_fault_degrades_to_memory_only_without_failing_requests() {
+        let dir = std::env::temp_dir()
+            .join(format!("pfm_svc_persist_fault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut persist = crate::persist::PersistConfig::new(&dir);
+        // every append fails: the disk is dead from the first insert
+        persist.fault = Some(crate::persist::PersistFault { period: 1, torn: false });
+        let service = ReorderService::start(ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-svc-pfault".into(),
+            persist: Some(persist),
+            ..Default::default()
+        });
+        let budget = OptBudget { outer: 1, refine: 4, time_ms: None, ..OptBudget::default() };
+        let a = laplacian_2d(10, 10);
+        let rx = service.submit_with_budget(
+            a.clone(),
+            Method::Learned(Learned::Pfm),
+            1,
+            false,
+            None,
+            Some(budget),
+        );
+        let res = rx.recv().expect("response").result.expect("a dead disk must not fail requests");
+        assert_eq!(res.provenance, Some(crate::runtime::Provenance::NativeOptimizer));
+        assert_eq!(service.metrics.persist_errors(), 1, "the absorbed I/O failure is counted");
+        assert_eq!(service.metrics.wal_appends(), 0);
+        // the in-memory half keeps serving warm hits
+        let rx = service.submit_with_budget(
+            a,
+            Method::Learned(Learned::Pfm),
+            2,
+            false,
+            None,
+            Some(budget),
+        );
+        let warm = rx.recv().expect("response").result.expect("ok");
+        assert_eq!(warm.provenance, Some(crate::runtime::Provenance::WarmStore));
+        assert_eq!(warm.order, res.order);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -39,6 +39,20 @@ impl GatewayClient {
         Ok(GatewayClient { stream: TcpStream::connect_timeout(addr, timeout)? })
     }
 
+    /// Bound every subsequent read *and* write on this connection.
+    /// Without this, a hung or wedged gateway blocks the client forever —
+    /// `connect_timeout` only covers the handshake. `None` removes the
+    /// bound. A timeout mid-read surfaces as a receive error naming the
+    /// timeout (the connection is not usable afterwards: the stream
+    /// position is mid-frame).
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
+        // a zero Duration would be interpreted as "no timeout" by the OS
+        // setsockopt — treat it as the smallest real bound instead
+        let timeout = timeout.map(|t| t.max(Duration::from_millis(1)));
+        self.stream.set_read_timeout(timeout)?;
+        self.stream.set_write_timeout(timeout)
+    }
+
     /// Send one reorder request frame (does not wait for the reply).
     pub fn send_request(&mut self, req: &WireRequest) -> Result<(), String> {
         let payload = wire::encode_request(req)?;
@@ -50,6 +64,12 @@ impl GatewayClient {
     pub fn recv_reply(&mut self) -> Result<Reply, String> {
         let frame = read_frame(&mut self.stream).map_err(|e| match e {
             FrameError::CleanEof => "gateway closed the connection".to_string(),
+            FrameError::Io(ref io)
+                if io.kind() == io::ErrorKind::WouldBlock
+                    || io.kind() == io::ErrorKind::TimedOut =>
+            {
+                "timed out waiting for the gateway's reply (see --timeout-ms)".to_string()
+            }
             other => format!("receive failed: {other}"),
         })?;
         match frame.ftype {

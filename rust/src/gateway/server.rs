@@ -330,6 +330,18 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                     AdminCmd::Metrics => metrics.to_json().to_string(),
                     AdminCmd::Throttle => ctx.limiter.stats_json(),
                     AdminCmd::Shutdown => "{\"ok\":true,\"shutting_down\":true}".to_string(),
+                    AdminCmd::Snapshot => match ctx.service.persist_snapshot() {
+                        Ok(n) => {
+                            crate::util::json::Json::obj()
+                                .set("ok", true)
+                                .set("records", n)
+                                .to_string()
+                        }
+                        Err(e) => crate::util::json::Json::obj()
+                            .set("ok", false)
+                            .set("error", e)
+                            .to_string(),
+                    },
                 };
                 let _ = wtx.send(Outgoing::Immediate(
                     FrameType::AdminResponse,

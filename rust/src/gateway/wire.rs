@@ -57,6 +57,9 @@ pub enum AdminCmd {
     Throttle = 2,
     /// Ask the gateway to shut down gracefully (acked before it begins).
     Shutdown = 3,
+    /// Compact the warm-start persistence store into one snapshot
+    /// (errors when the service runs without `--persist-dir`).
+    Snapshot = 4,
 }
 
 impl AdminCmd {
@@ -66,6 +69,7 @@ impl AdminCmd {
             1 => Some(AdminCmd::Metrics),
             2 => Some(AdminCmd::Throttle),
             3 => Some(AdminCmd::Shutdown),
+            4 => Some(AdminCmd::Snapshot),
             _ => None,
         }
     }
@@ -77,6 +81,7 @@ impl AdminCmd {
             "metrics" => Some(AdminCmd::Metrics),
             "throttle" => Some(AdminCmd::Throttle),
             "shutdown" => Some(AdminCmd::Shutdown),
+            "snapshot" => Some(AdminCmd::Snapshot),
             _ => None,
         }
     }
@@ -87,6 +92,7 @@ impl AdminCmd {
             AdminCmd::Metrics => "metrics",
             AdminCmd::Throttle => "throttle",
             AdminCmd::Shutdown => "shutdown",
+            AdminCmd::Snapshot => "snapshot",
         }
     }
 }
@@ -356,25 +362,16 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, DecodeFailure> {
     for _ in 0..=nrows {
         indptr.push(r.u32().map_err(&fail)? as usize);
     }
-    if indptr[0] != 0 || indptr[nrows] != nnz {
+    if indptr[nrows] != nnz {
         return Err(fail("indptr must run from 0 to nnz".to_string()));
-    }
-    if indptr.windows(2).any(|w| w[0] > w[1]) {
-        return Err(fail("indptr must be non-decreasing".to_string()));
     }
     let mut indices = Vec::with_capacity(nnz);
     for _ in 0..nnz {
         indices.push(r.u32().map_err(&fail)? as usize);
     }
-    for row in 0..nrows {
-        let cols = &indices[indptr[row]..indptr[row + 1]];
-        if cols.windows(2).any(|w| w[0] >= w[1]) {
-            return Err(fail(format!("row {row}: column indices not strictly increasing")));
-        }
-        if cols.last().is_some_and(|&c| c >= ncols) {
-            return Err(fail(format!("row {row}: column index out of range")));
-        }
-    }
+    // structural validation is shared with WAL/snapshot replay
+    // (`persist::record`): one untrusted-CSR validator, two consumers
+    Csr::validate_parts(nrows, ncols, &indptr, &indices).map_err(&fail)?;
     let mut data = Vec::with_capacity(nnz);
     for _ in 0..nnz {
         data.push(r.f64().map_err(&fail)?);
@@ -701,7 +698,13 @@ mod tests {
         let (_, empty) = decode_error(&encode_error(3, "")).unwrap();
         assert!(empty.is_empty());
 
-        for cmd in [AdminCmd::Ping, AdminCmd::Metrics, AdminCmd::Throttle, AdminCmd::Shutdown] {
+        for cmd in [
+            AdminCmd::Ping,
+            AdminCmd::Metrics,
+            AdminCmd::Throttle,
+            AdminCmd::Shutdown,
+            AdminCmd::Snapshot,
+        ] {
             assert_eq!(decode_admin(&encode_admin(cmd)).unwrap(), cmd);
             assert_eq!(AdminCmd::parse(cmd.label()), Some(cmd));
         }

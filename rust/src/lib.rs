@@ -23,6 +23,7 @@ pub mod gen;
 pub mod harness;
 pub mod graph;
 pub mod order;
+pub mod persist;
 pub mod pfm;
 pub mod runtime;
 pub mod sparse;

@@ -38,7 +38,7 @@ COMMANDS:
     order <file.mtx>       reorder one MatrixMarket matrix and report fill
     pfm <file.mtx>         native PFM optimizer: permutation + fill report
     serve                  run the TCP reorder gateway (framed protocol)
-    admin <cmd>            query a running gateway: ping|metrics|throttle|shutdown
+    admin <cmd>            query a running gateway: ping|metrics|throttle|snapshot|shutdown
     remote <file.mtx>      reorder one matrix through a running gateway
     demo                   run the in-process service demo (batching stats)
     help                   this message
@@ -68,6 +68,12 @@ GATEWAY OPTIONS:
     --addr <host:port>     gateway address  [default: 127.0.0.1:7744]
     --rate <r>             per-client rate limit, requests/s (0 = off)  [default: 0]
     --burst <b>            token-bucket burst capacity  [default: 32]
+    --persist-dir <dir>    (serve) crash-safe warm-start store: WAL + snapshots
+                           under <dir>; repeat patterns are served from disk
+                           across restarts  [default: off]
+    --fsync <always|never> (serve) WAL durability policy  [default: always]
+    --timeout-ms <ms>      (admin/remote) read/write timeout on the gateway
+                           connection  [default: 10000 admin, 60000 remote]
 ";
 
 fn main() -> ExitCode {
@@ -124,6 +130,9 @@ struct Opts {
     addr: String,
     rate: Option<f64>,
     burst: Option<f64>,
+    persist_dir: Option<String>,
+    fsync: Option<String>,
+    timeout_ms: Option<u64>,
     positional: Vec<String>,
 }
 
@@ -149,6 +158,9 @@ impl Opts {
             addr: DEFAULT_ADDR.to_string(),
             rate: None,
             burst: None,
+            persist_dir: None,
+            fsync: None,
+            timeout_ms: None,
             positional: Vec::new(),
         };
         let mut it = args.iter();
@@ -179,6 +191,9 @@ impl Opts {
                 "--addr" => o.addr = it.next().cloned().unwrap_or_else(|| DEFAULT_ADDR.into()),
                 "--rate" => o.rate = it.next().and_then(|s| s.parse().ok()),
                 "--burst" => o.burst = it.next().and_then(|s| s.parse().ok()),
+                "--persist-dir" => o.persist_dir = it.next().cloned(),
+                "--fsync" => o.fsync = it.next().cloned(),
+                "--timeout-ms" => o.timeout_ms = it.next().and_then(|s| s.parse().ok()),
                 other => o.positional.push(other.to_string()),
             }
         }
@@ -435,9 +450,29 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
 }
 
 fn cmd_serve(o: &Opts) -> Result<(), String> {
+    let persist = match &o.persist_dir {
+        Some(dir) => {
+            let mut pc = pfm_reorder::persist::PersistConfig::new(dir);
+            if let Some(f) = &o.fsync {
+                pc.fsync = pfm_reorder::persist::FsyncPolicy::parse(f)
+                    .ok_or_else(|| format!("unknown --fsync policy `{f}` (always|never)"))?;
+            }
+            Some(pc)
+        }
+        None => {
+            if o.fsync.is_some() {
+                return Err("--fsync only makes sense together with --persist-dir".into());
+            }
+            None
+        }
+    };
     let gateway = Gateway::start(GatewayConfig {
         addr: o.addr.clone(),
-        service: ServiceConfig { artifact_dir: o.artifacts.clone(), ..Default::default() },
+        service: ServiceConfig {
+            artifact_dir: o.artifacts.clone(),
+            persist,
+            ..Default::default()
+        },
         rate: o.rate.unwrap_or(0.0),
         burst: o.burst.unwrap_or(32.0),
         ..GatewayConfig::default()
@@ -445,6 +480,9 @@ fn cmd_serve(o: &Opts) -> Result<(), String> {
     .map_err(|e| format!("bind {}: {e}", o.addr))?;
     let addr = gateway.local_addr();
     println!("pfm-reorder gateway listening on {addr}");
+    if let Some(dir) = &o.persist_dir {
+        println!("(warm-start store: {dir})");
+    }
     println!("(stop with: pfm-reorder admin shutdown --addr {addr})");
     // blocks until an admin `shutdown` frame arrives, then runs the
     // graceful drain: every accepted request is answered before exit
@@ -465,11 +503,16 @@ fn resolve_addr(addr: &str) -> Result<SocketAddr, String> {
 fn cmd_admin(o: &Opts) -> Result<(), String> {
     let name = o.positional.first().map(String::as_str).unwrap_or("metrics");
     let Some(cmd) = AdminCmd::parse(name) else {
-        return Err(format!("unknown admin command `{name}` (ping|metrics|throttle|shutdown)"));
+        return Err(format!(
+            "unknown admin command `{name}` (ping|metrics|throttle|snapshot|shutdown)"
+        ));
     };
     let addr = resolve_addr(&o.addr)?;
     let mut client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
         .map_err(|e| format!("connect {addr}: {e} (is `pfm-reorder serve` running?)"))?;
+    // admin replies are cheap; a wedged gateway should fail the CLI fast
+    let timeout = Duration::from_millis(o.timeout_ms.unwrap_or(10_000));
+    client.set_io_timeout(Some(timeout)).map_err(|e| e.to_string())?;
     println!("{}", client.admin(cmd)?);
     Ok(())
 }
@@ -499,6 +542,10 @@ fn cmd_remote(o: &Opts) -> Result<(), String> {
     let addr = resolve_addr(&o.addr)?;
     let mut client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
         .map_err(|e| format!("connect {addr}: {e} (is `pfm-reorder serve` running?)"))?;
+    // a reorder can legitimately take a while on big matrices — default
+    // generously, but never hang forever on a dead gateway
+    let timeout = Duration::from_millis(o.timeout_ms.unwrap_or(60_000));
+    client.set_io_timeout(Some(timeout)).map_err(|e| e.to_string())?;
     match client.request(&req)? {
         Reply::Result(res) => {
             check_permutation(&res.order)?;

@@ -1,0 +1,30 @@
+//! Crash-safe warm-start persistence: a pattern-keyed ordering store
+//! backed by a write-ahead log and periodic snapshots.
+//!
+//! Zero external dependencies (std only). The coordinator consults the
+//! store before dispatching native-PFM work — a process restart warms
+//! back up from disk instead of re-running the optimizer on every
+//! previously-seen pattern. Durability and recovery guarantees:
+//!
+//! - every accepted [`Provenance::NativeOptimizer`] result is appended to
+//!   the WAL as a length-prefixed, CRC-32-checksummed record
+//!   ([`wal`], segment rotation + configurable fsync policy);
+//! - snapshots compact the log atomically (write-temp + rename,
+//!   [`snapshot`]);
+//! - startup replay ([`store`]) loads the snapshot then the segments,
+//!   truncating a torn tail at the first bad checksum and quarantining
+//!   unreadable files by rename instead of refusing to start — `kill -9`
+//!   at any instant never corrupts the store or wedges startup;
+//! - every recovered record is structurally re-validated (shared CSR
+//!   validator + permutation check) before it is trusted.
+//!
+//! [`Provenance::NativeOptimizer`]: crate::runtime::Provenance
+
+pub mod record;
+pub mod snapshot;
+pub mod store;
+pub mod wal;
+
+pub use record::{crc32, pattern_key, StoredOrdering, MAX_PERSIST_N};
+pub use store::{InsertOutcome, OrderingStore, PersistConfig, RecoveryStats};
+pub use wal::{FsyncPolicy, PersistFault};

@@ -1,0 +1,338 @@
+//! The on-disk ordering record: one accepted native-optimizer result,
+//! keyed by the structural pattern it was computed for. Encoding is
+//! little-endian throughout (the same convention as the gateway wire
+//! codec) and carries the *full* pattern, not just its hash — replay and
+//! lookup compare patterns exactly, so a key collision can never serve a
+//! foreign permutation.
+//!
+//! Decoding trusts nothing: every read is bounds-checked, the pattern is
+//! re-validated through [`Csr::validate_parts`] (the shared untrusted-CSR
+//! validator), and the permutation through `check_permutation` — a record
+//! that passed its frame CRC but fails structural validation (version
+//! drift, a bug upstream) is rejected, never trusted.
+
+use crate::factor::FactorKind;
+use crate::runtime::Provenance;
+use crate::sparse::Csr;
+use crate::util::check::check_permutation;
+
+/// Largest matrix dimension replay will decode — same bound as the
+/// gateway's `MAX_WIRE_N`, restated here so `persist` stays independent
+/// of the gateway layer.
+pub const MAX_PERSIST_N: usize = 1 << 22;
+
+// ------------------------------------------------------------------ crc32
+
+/// CRC-32 (IEEE 802.3, reflected) lookup table, built at compile time.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 checksum (IEEE 802.3) — the integrity check on every WAL and
+/// snapshot frame.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -------------------------------------------------------------- key + rec
+
+/// FNV-1a 64-bit hash over (variant, n, indptr, indices): the store's
+/// bucket key. Collisions are harmless — lookup always compares the
+/// stored pattern exactly — the key only has to spread buckets well.
+pub fn pattern_key(variant: &str, n: usize, indptr: &[usize], indices: &[usize]) -> u64 {
+    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(variant.as_bytes());
+    eat(&(n as u64).to_le_bytes());
+    for &p in indptr {
+        eat(&(p as u32).to_le_bytes());
+    }
+    for &c in indices {
+        eat(&(c as u32).to_le_bytes());
+    }
+    h
+}
+
+/// One persisted ordering: the structural pattern it belongs to, the
+/// permutation, and the provenance metadata the warm-hit reply reuses
+/// (factorization kind + fill ratio of the stored evaluation, when one
+/// ran).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredOrdering {
+    /// [`pattern_key`] of (variant, n, indptr, indices) — precomputed so
+    /// replay and lookup never rehash.
+    pub key: u64,
+    /// `Learned::variant()` label of the method that produced the
+    /// ordering (warm hits never cross variants).
+    pub variant: String,
+    pub n: usize,
+    /// structural pattern (no values — orderings are pattern-functions)
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    /// the accepted permutation (`order[k]` = original index at rank k)
+    pub order: Vec<usize>,
+    /// where the ordering came from when it was stored (today always
+    /// [`Provenance::NativeOptimizer`] — the only provenance worth
+    /// persisting)
+    pub provenance: Provenance,
+    /// factorization kind of the stored fill evaluation, when one ran
+    pub factor_kind: Option<FactorKind>,
+    /// fill ratio (≈ nnz(L)/nnz(A), the repo's nnz(L) currency) measured
+    /// when the ordering was accepted, when the request asked for one
+    pub fill_ratio: Option<f64>,
+}
+
+impl StoredOrdering {
+    /// Build a record for an accepted result on `a` (pattern is copied;
+    /// values are not part of a record).
+    pub fn new(
+        variant: &str,
+        a: &Csr,
+        order: Vec<usize>,
+        factor_kind: Option<FactorKind>,
+        fill_ratio: Option<f64>,
+    ) -> StoredOrdering {
+        StoredOrdering {
+            key: pattern_key(variant, a.nrows(), a.indptr(), a.indices()),
+            variant: variant.to_string(),
+            n: a.nrows(),
+            indptr: a.indptr().to_vec(),
+            indices: a.indices().to_vec(),
+            order,
+            provenance: Provenance::NativeOptimizer,
+            factor_kind,
+            fill_ratio,
+        }
+    }
+
+    /// Whether this record answers a request for `variant` on `a`
+    /// (exact structural comparison — the collision guard behind the
+    /// hash key).
+    pub fn matches(&self, variant: &str, a: &Csr) -> bool {
+        self.variant == variant
+            && self.n == a.nrows()
+            && self.indptr == a.indptr()
+            && self.indices == a.indices()
+    }
+
+    /// Serialize to the WAL/snapshot payload format.
+    pub fn encode(&self) -> Vec<u8> {
+        let nnz = self.indices.len();
+        let mut buf = Vec::with_capacity(40 + self.variant.len() + 4 * (self.n + 1 + nnz + self.n));
+        buf.extend_from_slice(&self.key.to_le_bytes());
+        let vb = self.variant.as_bytes();
+        buf.extend_from_slice(&(vb.len().min(u16::MAX as usize) as u16).to_le_bytes());
+        buf.extend_from_slice(&vb[..vb.len().min(u16::MAX as usize)]);
+        buf.extend_from_slice(&(self.n as u32).to_le_bytes());
+        buf.extend_from_slice(&(nnz as u32).to_le_bytes());
+        for &p in &self.indptr {
+            buf.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        for &c in &self.indices {
+            buf.extend_from_slice(&(c as u32).to_le_bytes());
+        }
+        for &o in &self.order {
+            buf.extend_from_slice(&(o as u32).to_le_bytes());
+        }
+        buf.push(match self.provenance {
+            Provenance::NativeOptimizer => 0,
+            Provenance::Network => 1,
+            Provenance::SpectralFallback => 2,
+            Provenance::WarmStore => 3,
+        });
+        buf.push(match self.factor_kind {
+            None => 0,
+            Some(FactorKind::Cholesky) => 1,
+            Some(FactorKind::Lu) => 2,
+        });
+        buf.push(self.fill_ratio.is_some() as u8);
+        buf.extend_from_slice(&self.fill_ratio.unwrap_or(0.0).to_bits().to_le_bytes());
+        buf
+    }
+
+    /// Deserialize and fully re-validate one payload. Never panics on
+    /// arbitrary bytes; anything structurally unsound is an `Err`.
+    pub fn decode(payload: &[u8]) -> Result<StoredOrdering, String> {
+        let mut pos = 0usize;
+        let b = take(payload, &mut pos, 8)?;
+        let key = u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        let b = take(payload, &mut pos, 2)?;
+        let vlen = u16::from_le_bytes([b[0], b[1]]) as usize;
+        let variant = String::from_utf8_lossy(take(payload, &mut pos, vlen)?).into_owned();
+        let n = read_u32(payload, &mut pos)?;
+        let nnz = read_u32(payload, &mut pos)?;
+        if n == 0 || n > MAX_PERSIST_N {
+            return Err(format!("record dimension {n} outside (0, {MAX_PERSIST_N}]"));
+        }
+        // size arrays against the payload before allocating
+        let need = 4 * (n + 1 + nnz + n) + 3 + 8;
+        if payload.len() - pos < need {
+            return Err(format!(
+                "record truncated: arrays need {need} bytes, {} left",
+                payload.len() - pos
+            ));
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        for _ in 0..=n {
+            indptr.push(read_u32(payload, &mut pos)?);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            indices.push(read_u32(payload, &mut pos)?);
+        }
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            order.push(read_u32(payload, &mut pos)?);
+        }
+        let provenance = match take(payload, &mut pos, 1)?[0] {
+            0 => Provenance::NativeOptimizer,
+            1 => Provenance::Network,
+            2 => Provenance::SpectralFallback,
+            3 => Provenance::WarmStore,
+            p => return Err(format!("unknown provenance byte {p}")),
+        };
+        let factor_kind = match take(payload, &mut pos, 1)?[0] {
+            0 => None,
+            1 => Some(FactorKind::Cholesky),
+            2 => Some(FactorKind::Lu),
+            k => return Err(format!("unknown factor kind byte {k}")),
+        };
+        let has_fill = take(payload, &mut pos, 1)?[0] != 0;
+        let b = take(payload, &mut pos, 8)?;
+        let fill = f64::from_bits(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]));
+        if pos != payload.len() {
+            return Err(format!("{} trailing bytes after record", payload.len() - pos));
+        }
+        // structural re-validation: a CRC-clean frame is still untrusted
+        Csr::validate_parts(n, n, &indptr, &indices)?;
+        check_permutation(&order)?;
+        if key != pattern_key(&variant, n, &indptr, &indices) {
+            return Err("stored key does not match the stored pattern".to_string());
+        }
+        Ok(StoredOrdering {
+            key,
+            variant,
+            n,
+            indptr,
+            indices,
+            order,
+            provenance,
+            factor_kind,
+            fill_ratio: has_fill.then_some(fill),
+        })
+    }
+}
+
+/// Bounds-checked cursor read of `k` bytes.
+fn take<'a>(buf: &'a [u8], pos: &mut usize, k: usize) -> Result<&'a [u8], String> {
+    if buf.len() - *pos < k {
+        return Err(format!("record truncated: wanted {k} bytes, {} left", buf.len() - *pos));
+    }
+    let s = &buf[*pos..*pos + k];
+    *pos += k;
+    Ok(s)
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<usize, String> {
+    let b = take(buf, pos, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::grid::laplacian_2d;
+    use crate::util::rng::Pcg64;
+
+    fn sample() -> StoredOrdering {
+        let a = laplacian_2d(5, 5);
+        let order = Pcg64::new(3).permutation(a.nrows());
+        StoredOrdering::new("pfm", &a, order, Some(FactorKind::Cholesky), Some(1.75))
+    }
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrips_exactly() {
+        let rec = sample();
+        let got = StoredOrdering::decode(&rec.encode()).unwrap();
+        assert_eq!(got, rec);
+        // minimal record: no kind, no fill
+        let a = Csr::identity(4);
+        let rec = StoredOrdering::new("pfm_randinit", &a, vec![3, 2, 1, 0], None, None);
+        let got = StoredOrdering::decode(&rec.encode()).unwrap();
+        assert_eq!(got, rec);
+        assert_eq!(got.fill_ratio, None);
+        assert_eq!(got.factor_kind, None);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected_without_panicking() {
+        let payload = sample().encode();
+        for cut in 0..payload.len() {
+            assert!(StoredOrdering::decode(&payload[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(StoredOrdering::decode(&long).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn corrupted_records_never_decode_into_invalid_structures() {
+        let base = sample().encode();
+        let mut rng = Pcg64::new(0x7E55_2026);
+        for _ in 0..3000 {
+            let mut bytes = base.clone();
+            for _ in 0..1 + rng.next_below(5) {
+                let i = rng.next_below(bytes.len());
+                bytes[i] = (rng.next_u64() & 0xFF) as u8;
+            }
+            if let Ok(rec) = StoredOrdering::decode(&bytes) {
+                // anything that decodes is fully valid by construction
+                check_permutation(&rec.order).unwrap();
+                Csr::validate_parts(rec.n, rec.n, &rec.indptr, &rec.indices).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_key_separates_variant_pattern_and_size() {
+        let a = laplacian_2d(6, 6);
+        let b = laplacian_2d(6, 7);
+        let ka = pattern_key("pfm", a.nrows(), a.indptr(), a.indices());
+        assert_eq!(ka, pattern_key("pfm", a.nrows(), a.indptr(), a.indices()));
+        assert_ne!(ka, pattern_key("pfm_randinit", a.nrows(), a.indptr(), a.indices()));
+        assert_ne!(ka, pattern_key("pfm", b.nrows(), b.indptr(), b.indices()));
+    }
+}

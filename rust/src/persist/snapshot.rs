@@ -1,0 +1,161 @@
+//! Atomic snapshots: the live store compacted into one file.
+//!
+//! Layout: `"PFSN"` magic, a version byte, a u32 record count, then
+//! `count` frames in the WAL's `[len][crc][payload]` format. The write is
+//! crash-atomic: everything goes to `snapshot.tmp`, is synced, and only
+//! then renamed over `snapshot.bin` (rename is atomic on POSIX), followed
+//! by a best-effort directory sync so the rename itself is durable. A
+//! reader therefore sees either the old snapshot or the new one — never a
+//! half-written hybrid. Any deviation on read (bad magic, short file, CRC
+//! mismatch, wrong count) is an error; the store quarantines the file by
+//! rename and starts from the segments instead of refusing to start.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::persist::record::crc32;
+use crate::persist::wal::{frame_bytes, FRAME_HEADER, MAX_FRAME_PAYLOAD};
+
+/// Snapshot file name inside the persist directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+const SNAPSHOT_TMP: &str = "snapshot.tmp";
+const MAGIC: [u8; 4] = *b"PFSN";
+const VERSION: u8 = 1;
+
+/// Path of the (current) snapshot in `dir`.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join(SNAPSHOT_FILE)
+}
+
+/// Write all record payloads as one snapshot, atomically (write-temp +
+/// fsync + rename + dir sync). On `Ok`, `snapshot.bin` holds exactly
+/// these records; on `Err`, the previous snapshot (if any) is untouched.
+pub fn write_snapshot(dir: &Path, payloads: &[Vec<u8>]) -> io::Result<()> {
+    let tmp = dir.join(SNAPSHOT_TMP);
+    {
+        let mut f = File::create(&tmp)?;
+        let mut header = Vec::with_capacity(9);
+        header.extend_from_slice(&MAGIC);
+        header.push(VERSION);
+        header.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+        f.write_all(&header)?;
+        for p in payloads {
+            f.write_all(&frame_bytes(p))?;
+        }
+        f.sync_data()?;
+    }
+    fs::rename(&tmp, snapshot_path(dir))?;
+    // make the rename durable; failure here only risks replaying a few
+    // extra WAL records after power loss, so best effort is enough
+    if let Ok(d) = OpenOptions::new().read(true).open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Read a snapshot strictly: every anomaly is an `Err` (the caller
+/// quarantines — a snapshot is all-or-nothing, unlike a WAL tail).
+pub fn read_snapshot(path: &Path) -> Result<Vec<Vec<u8>>, String> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| format!("unreadable snapshot: {e}"))?;
+    if bytes.len() < 9 {
+        return Err(format!("snapshot too short ({} bytes)", bytes.len()));
+    }
+    if bytes[..4] != MAGIC {
+        return Err("bad snapshot magic".to_string());
+    }
+    if bytes[4] != VERSION {
+        return Err(format!("unsupported snapshot version {}", bytes[4]));
+    }
+    let count = u32::from_le_bytes([bytes[5], bytes[6], bytes[7], bytes[8]]) as usize;
+    let mut payloads = Vec::new();
+    let mut pos = 9usize;
+    for i in 0..count {
+        if bytes.len() - pos < FRAME_HEADER {
+            return Err(format!("snapshot truncated at record {i}"));
+        }
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+            as usize;
+        let crc = u32::from_le_bytes([
+            bytes[pos + 4],
+            bytes[pos + 5],
+            bytes[pos + 6],
+            bytes[pos + 7],
+        ]);
+        if len > MAX_FRAME_PAYLOAD || bytes.len() - pos - FRAME_HEADER < len {
+            return Err(format!("snapshot truncated inside record {i}"));
+        }
+        let payload = &bytes[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if crc32(payload) != crc {
+            return Err(format!("snapshot record {i} failed its checksum"));
+        }
+        payloads.push(payload.to_vec());
+        pos += FRAME_HEADER + len;
+    }
+    if pos != bytes.len() {
+        return Err(format!("{} trailing bytes after snapshot records", bytes.len() - pos));
+    }
+    Ok(payloads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pfm_snap_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_replaces_atomically() {
+        let dir = tmp("rt");
+        let first = vec![b"alpha".to_vec(), b"beta".to_vec()];
+        write_snapshot(&dir, &first).unwrap();
+        assert_eq!(read_snapshot(&snapshot_path(&dir)).unwrap(), first);
+        // a second snapshot replaces the first completely
+        let second = vec![b"gamma".to_vec()];
+        write_snapshot(&dir, &second).unwrap();
+        assert_eq!(read_snapshot(&snapshot_path(&dir)).unwrap(), second);
+        // no temp file left behind
+        assert!(!dir.join(SNAPSHOT_TMP).exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let dir = tmp("empty");
+        write_snapshot(&dir, &[]).unwrap();
+        assert!(read_snapshot(&snapshot_path(&dir)).unwrap().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn every_truncation_and_random_corruption_is_rejected() {
+        let dir = tmp("corrupt");
+        write_snapshot(&dir, &[b"some-record-payload".to_vec(), b"another".to_vec()]).unwrap();
+        let path = snapshot_path(&dir);
+        let clean = fs::read(&path).unwrap();
+        for cut in 0..clean.len() {
+            fs::write(&path, &clean[..cut]).unwrap();
+            assert!(read_snapshot(&path).is_err(), "prefix {cut} read back as valid");
+        }
+        let mut rng = Pcg64::new(0x5A9_2026);
+        for _ in 0..500 {
+            let mut bytes = clean.clone();
+            let i = rng.next_below(bytes.len());
+            bytes[i] ^= 1 << rng.next_below(8);
+            fs::write(&path, &bytes).unwrap();
+            // a single bit flip anywhere must be caught (magic, version,
+            // count, frame header, or CRC) — never panic, never pass
+            assert!(read_snapshot(&path).is_err(), "bit flip at byte {i} went unnoticed");
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

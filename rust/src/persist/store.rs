@@ -1,0 +1,536 @@
+//! The pattern-keyed ordering store: an in-memory map recovered from
+//! snapshot + WAL on open, written through the WAL on insert, compacted
+//! by snapshots.
+//!
+//! Recovery state machine (`OrderingStore::open`):
+//!
+//! 1. `create_dir_all` — failure degrades to a memory-only store (the
+//!    service must serve with a broken disk, just without warm restarts).
+//! 2. Load `snapshot.bin` if present. Unreadable or corrupt → quarantine
+//!    by rename, continue from the segments alone.
+//! 3. Replay segments in ascending sequence. Within a segment, frames
+//!    decode until the first bad checksum: a dirty tail on the *last*
+//!    segment is a torn write (kill -9 mid-append) and is truncated in
+//!    place; a dirty tail on an *earlier* segment is corruption and the
+//!    file is quarantined by rename — its good prefix is still kept in
+//!    memory and re-persisted by the recovery snapshot below.
+//! 4. Every recovered payload is re-validated structurally
+//!    (`StoredOrdering::decode` runs the shared CSR validator and the
+//!    permutation check); failures are counted and skipped, never trusted.
+//! 5. If anything was quarantined, snapshot immediately so the surviving
+//!    records are durable again.
+//! 6. Open a fresh WAL segment for new appends.
+//!
+//! Nothing in this path panics on disk contents, and nothing refuses to
+//! start: the worst disk yields an empty, memory-only store.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::persist::record::{pattern_key, StoredOrdering};
+use crate::persist::snapshot::{read_snapshot, snapshot_path, write_snapshot};
+use crate::persist::wal::{
+    list_segments, quarantine, read_segment, truncate_segment, FsyncPolicy, PersistFault,
+    TailState, Wal,
+};
+use crate::sparse::Csr;
+
+/// Persistence configuration ([`ServiceConfig::persist`] carries one).
+///
+/// [`ServiceConfig::persist`]: crate::coordinator::ServiceConfig
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// directory holding `wal-*.log` segments and `snapshot.bin`
+    pub dir: PathBuf,
+    /// WAL append durability (snapshots always sync before rename)
+    pub fsync: FsyncPolicy,
+    /// rotate the WAL segment once it exceeds this many bytes
+    pub segment_max_bytes: u64,
+    /// auto-snapshot after this many WAL appends (0 = manual/admin only)
+    pub snapshot_every: usize,
+    /// test-only deterministic I/O fault injection (see [`PersistFault`])
+    pub fault: Option<PersistFault>,
+}
+
+impl PersistConfig {
+    /// Defaults: fsync always (crash-safe acknowledgements), 4 MiB
+    /// segments, auto-snapshot every 64 appends.
+    pub fn new(dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Always,
+            segment_max_bytes: 4 << 20,
+            snapshot_every: 64,
+            fault: None,
+        }
+    }
+}
+
+/// What recovery found and repaired — the service copies these into the
+/// metrics `persist` block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// records loaded (snapshot + segments, after validation)
+    pub replayed: usize,
+    /// torn segment tails truncated in place
+    pub torn_tails: usize,
+    /// snapshot or segment files quarantined by rename
+    pub quarantined: usize,
+    /// CRC-clean payloads rejected by structural re-validation
+    pub rejected: usize,
+    /// I/O errors recovery absorbed (store degrades, never fails)
+    pub errors: usize,
+}
+
+/// Outcome of one [`OrderingStore::insert`] — the in-memory insert always
+/// succeeds; this reports what happened on disk.
+#[derive(Debug, Default)]
+pub struct InsertOutcome {
+    /// the record went to the WAL (durably, under `FsyncPolicy::Always`)
+    pub appended: bool,
+    /// an auto-snapshot ran after this insert
+    pub snapshotted: bool,
+    /// disk failures absorbed (the store degraded to memory-only until
+    /// the next successful snapshot)
+    pub errors: Vec<String>,
+}
+
+/// The warm-start store. Not internally synchronized — the coordinator
+/// wraps it in a `Mutex` (lookups are pattern comparisons, inserts are
+/// one WAL append; both are negligible next to an optimizer run).
+pub struct OrderingStore {
+    config: PersistConfig,
+    /// key → records (a bucket holds >1 only on hash collision or when
+    /// distinct variants share a pattern)
+    map: HashMap<u64, Vec<StoredOrdering>>,
+    /// `None` = memory-only (disabled dir, or degraded after an append
+    /// error); a successful snapshot re-opens it
+    wal: Option<Wal>,
+    appends_since_snapshot: usize,
+}
+
+impl OrderingStore {
+    /// Open (or create) the store under `config.dir` and run recovery.
+    /// Infallible by contract: every failure mode degrades and is
+    /// reported in the stats.
+    pub fn open(config: PersistConfig) -> (OrderingStore, RecoveryStats) {
+        let mut stats = RecoveryStats::default();
+        let mut store = OrderingStore {
+            config,
+            map: HashMap::new(),
+            wal: None,
+            appends_since_snapshot: 0,
+        };
+        if let Err(e) = std::fs::create_dir_all(&store.config.dir) {
+            eprintln!("persist: cannot create {}: {e}; memory-only", store.config.dir.display());
+            stats.errors += 1;
+            return (store, stats);
+        }
+        let dir = store.config.dir.clone();
+
+        // 1. snapshot
+        let snap = snapshot_path(&dir);
+        if snap.exists() {
+            match read_snapshot(&snap) {
+                Ok(payloads) => {
+                    for p in &payloads {
+                        store.recover_payload(p, &mut stats);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("persist: quarantining corrupt snapshot: {e}");
+                    stats.quarantined += 1;
+                    if quarantine(&snap).is_err() {
+                        stats.errors += 1;
+                    }
+                }
+            }
+        }
+
+        // 2. segments, ascending
+        let segments = list_segments(&dir).unwrap_or_else(|e| {
+            eprintln!("persist: cannot list segments: {e}");
+            stats.errors += 1;
+            Vec::new()
+        });
+        let last_seq = segments.last().map(|&(seq, _)| seq);
+        for (seq, path) in segments {
+            match read_segment(&path) {
+                Ok((payloads, tail)) => {
+                    for p in &payloads {
+                        store.recover_payload(p, &mut stats);
+                    }
+                    match tail {
+                        TailState::Clean => {}
+                        TailState::Torn { valid_bytes } if Some(seq) == last_seq => {
+                            // the expected kill-mid-append shape: keep the
+                            // good prefix, cut the tail
+                            match truncate_segment(&path, valid_bytes) {
+                                Ok(()) => stats.torn_tails += 1,
+                                Err(_) => {
+                                    stats.quarantined += 1;
+                                    if quarantine(&path).is_err() {
+                                        stats.errors += 1;
+                                    }
+                                }
+                            }
+                        }
+                        TailState::Torn { .. } => {
+                            // corruption before the live tail: rename the
+                            // file aside (its good prefix is already in
+                            // memory and re-persisted below)
+                            stats.quarantined += 1;
+                            if quarantine(&path).is_err() {
+                                stats.errors += 1;
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("persist: quarantining unreadable segment {}: {e}", path.display());
+                    stats.quarantined += 1;
+                    if quarantine(&path).is_err() {
+                        stats.errors += 1;
+                    }
+                }
+            }
+        }
+
+        // 3. wal for new appends
+        match Wal::open_fresh(
+            &dir,
+            store.config.fsync,
+            store.config.segment_max_bytes,
+            store.config.fault,
+        ) {
+            Ok(w) => store.wal = Some(w),
+            Err(e) => {
+                eprintln!("persist: cannot open WAL: {e}; memory-only");
+                stats.errors += 1;
+            }
+        }
+
+        // 4. re-persist survivors of a quarantine so they are durable
+        // again (their segment/snapshot file is gone)
+        if stats.quarantined > 0 && store.wal.is_some() {
+            if let Err(e) = store.snapshot() {
+                eprintln!("persist: recovery snapshot failed: {e}");
+                stats.errors += 1;
+            }
+        }
+        (store, stats)
+    }
+
+    /// Decode + validate one recovered payload into the map.
+    fn recover_payload(&mut self, payload: &[u8], stats: &mut RecoveryStats) {
+        match StoredOrdering::decode(payload) {
+            Ok(rec) => {
+                self.put(rec);
+                stats.replayed += 1;
+            }
+            Err(_) => stats.rejected += 1,
+        }
+    }
+
+    /// In-memory upsert (exact pattern match replaces — replay is
+    /// last-wins, so a record re-accepted after a snapshot overlap stays
+    /// single).
+    fn put(&mut self, rec: StoredOrdering) {
+        let bucket = self.map.entry(rec.key).or_default();
+        let slot = bucket.iter_mut().find(|r| {
+            r.variant == rec.variant && r.indptr == rec.indptr && r.indices == rec.indices
+        });
+        match slot {
+            Some(slot) => *slot = rec,
+            None => bucket.push(rec),
+        }
+    }
+
+    /// Look up the stored ordering for (`variant`, pattern of `a`).
+    /// Exact structural comparison behind the hash key — a collision can
+    /// never serve a foreign permutation.
+    pub fn lookup(&self, variant: &str, a: &Csr) -> Option<&StoredOrdering> {
+        let key = pattern_key(variant, a.nrows(), a.indptr(), a.indices());
+        self.map.get(&key)?.iter().find(|r| r.matches(variant, a))
+    }
+
+    /// Insert an accepted ordering: memory first (lookups must work even
+    /// with a dead disk), then the WAL, then a possible auto-snapshot.
+    /// A WAL failure degrades the store to memory-only — the next
+    /// successful snapshot re-enables it.
+    pub fn insert(&mut self, rec: StoredOrdering) -> InsertOutcome {
+        let payload = rec.encode();
+        self.put(rec);
+        let mut out = InsertOutcome::default();
+        if let Some(wal) = &mut self.wal {
+            match wal.append(&payload) {
+                Ok(()) => {
+                    out.appended = true;
+                    self.appends_since_snapshot += 1;
+                }
+                Err(e) => {
+                    out.errors.push(format!("wal append: {e}"));
+                    // in-memory-only from here: a half-written tail must
+                    // not be extended with frames replay can never reach
+                    self.wal = None;
+                }
+            }
+        }
+        if self.config.snapshot_every > 0
+            && self.appends_since_snapshot >= self.config.snapshot_every
+        {
+            match self.snapshot() {
+                Ok(_) => out.snapshotted = true,
+                Err(e) => out.errors.push(format!("auto-snapshot: {e}")),
+            }
+        }
+        out
+    }
+
+    /// Compact: write every record to one atomic snapshot, delete the
+    /// segments it supersedes, and open a fresh WAL segment. Returns the
+    /// number of records written. Also the recovery path for a degraded
+    /// (memory-only) store — success re-enables the WAL.
+    pub fn snapshot(&mut self) -> Result<usize, String> {
+        let payloads: Vec<Vec<u8>> =
+            self.map.values().flatten().map(StoredOrdering::encode).collect();
+        write_snapshot(&self.config.dir, &payloads).map_err(|e| e.to_string())?;
+        // the snapshot holds the full map: every segment is superseded.
+        // Drop the open WAL handle first so its file can go too.
+        self.wal = None;
+        for (_, path) in list_segments(&self.config.dir).map_err(|e| e.to_string())? {
+            let _ = std::fs::remove_file(&path);
+        }
+        self.appends_since_snapshot = 0;
+        match Wal::open_fresh(
+            &self.config.dir,
+            self.config.fsync,
+            self.config.segment_max_bytes,
+            self.config.fault,
+        ) {
+            Ok(w) => self.wal = Some(w),
+            Err(e) => return Err(format!("snapshot written but WAL reopen failed: {e}")),
+        }
+        Ok(payloads.len())
+    }
+
+    /// Number of stored orderings.
+    pub fn len(&self) -> usize {
+        self.map.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Whether inserts currently reach disk (false = degraded to
+    /// memory-only after an I/O failure, or the dir never opened).
+    pub fn is_persistent(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    /// The persist directory.
+    pub fn dir(&self) -> &Path {
+        &self.config.dir
+    }
+}
+
+/// Convenience used by tests and benches: best-effort recursive cleanup.
+pub fn remove_dir_best_effort(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::FactorKind;
+    use crate::gen::grid::laplacian_2d;
+    use crate::util::rng::Pcg64;
+    use std::io::Write;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pfm_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cfg(dir: &Path) -> PersistConfig {
+        PersistConfig { fsync: FsyncPolicy::Never, ..PersistConfig::new(dir) }
+    }
+
+    fn rec(seed: u64, n: usize) -> StoredOrdering {
+        let a = laplacian_2d(n, n);
+        let order = Pcg64::new(seed).permutation(a.nrows());
+        StoredOrdering::new("pfm", &a, order, Some(FactorKind::Cholesky), Some(1.5))
+    }
+
+    #[test]
+    fn insert_reopen_lookup_is_bit_identical() {
+        let dir = tmp("reopen");
+        let (mut store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats, RecoveryStats::default());
+        let r = rec(7, 6);
+        let expect = r.order.clone();
+        let out = store.insert(r);
+        assert!(out.appended && out.errors.is_empty());
+        drop(store);
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.replayed, 1);
+        assert_eq!((stats.torn_tails, stats.quarantined, stats.rejected), (0, 0, 0));
+        let a = laplacian_2d(6, 6);
+        let hit = store.lookup("pfm", &a).expect("warm record");
+        assert_eq!(hit.order, expect, "replayed permutation must be bit-identical");
+        assert_eq!(hit.fill_ratio, Some(1.5));
+        assert!(store.lookup("pfm_randinit", &a).is_none(), "variants never cross");
+        assert!(store.lookup("pfm", &laplacian_2d(6, 7)).is_none());
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_once_and_reopens_clean() {
+        let dir = tmp("torn");
+        let (mut store, _) = OrderingStore::open(cfg(&dir));
+        store.insert(rec(1, 5));
+        store.insert(rec(2, 6));
+        let seg = list_segments(&dir).unwrap().last().unwrap().1.clone();
+        drop(store);
+        // kill -9 mid-append: half a frame at the tail of the live segment
+        let mut f = std::fs::OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&[0x55; 7]).unwrap();
+        drop(f);
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.replayed, 2);
+        assert_eq!(stats.torn_tails, 1);
+        assert_eq!(store.len(), 2);
+        drop(store);
+        // second open: the tail was repaired on disk, not just skipped
+        let (_, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.torn_tails, 0, "truncation must persist");
+        assert_eq!(stats.replayed, 2);
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn snapshot_compacts_and_supersedes_segments() {
+        let dir = tmp("compact");
+        let (mut store, _) = OrderingStore::open(cfg(&dir));
+        for s in 0..5 {
+            store.insert(rec(s, 4 + s as usize));
+        }
+        let written = store.snapshot().unwrap();
+        assert_eq!(written, 5);
+        // only the fresh (empty) segment remains
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(std::fs::metadata(&segs[0].1).unwrap().len(), 0);
+        drop(store);
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.replayed, 5);
+        assert_eq!(store.len(), 5);
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_quarantined_and_segments_still_replay() {
+        let dir = tmp("quar_snap");
+        let (mut store, _) = OrderingStore::open(cfg(&dir));
+        store.insert(rec(3, 5));
+        store.snapshot().unwrap();
+        store.insert(rec(4, 6)); // lives in the post-snapshot segment
+        drop(store);
+        // flip a payload bit in the snapshot
+        let snap = snapshot_path(&dir);
+        let mut bytes = std::fs::read(&snap).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&snap, &bytes).unwrap();
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.quarantined, 1);
+        assert_eq!(stats.replayed, 1, "segment record survives the lost snapshot");
+        assert!(store.lookup("pfm", &laplacian_2d(6, 6)).is_some());
+        assert!(!snap.exists() || read_snapshot(&snap).is_ok(), "recovery re-snapshots");
+        // the quarantined copy is preserved for inspection
+        assert!(dir.join("snapshot.bin.quarantined").exists());
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn random_corruption_of_segments_never_panics_and_yields_valid_records() {
+        let dir = tmp("fuzz");
+        let (mut store, _) = OrderingStore::open(cfg(&dir));
+        for s in 0..3 {
+            store.insert(rec(s, 5));
+        }
+        let seg = list_segments(&dir).unwrap().last().unwrap().1.clone();
+        drop(store);
+        let clean = std::fs::read(&seg).unwrap();
+        let mut rng = Pcg64::new(0xC0_2026);
+        for _ in 0..200 {
+            let mut bytes = clean.clone();
+            for _ in 0..1 + rng.next_below(8) {
+                let i = rng.next_below(bytes.len());
+                bytes[i] = (rng.next_u64() & 0xFF) as u8;
+            }
+            std::fs::write(&seg, &bytes).unwrap();
+            let (store, stats) = OrderingStore::open(cfg(&dir));
+            // whatever survived is structurally valid, and recovery
+            // accounted for every repair it made
+            for bucket in store.map.values() {
+                for r in bucket {
+                    crate::util::check::check_permutation(&r.order).unwrap();
+                }
+            }
+            assert!(stats.replayed <= 3);
+            drop(store);
+            // restore the segment (recovery may have truncated/quarantined)
+            for (_, p) in list_segments(&dir).unwrap() {
+                let _ = std::fs::remove_file(p);
+            }
+            let _ = std::fs::remove_file(snapshot_path(&dir));
+            for q in ["wal-00000000.log.quarantined", "snapshot.bin.quarantined"] {
+                let _ = std::fs::remove_file(dir.join(q));
+            }
+            std::fs::write(&seg, &clean).unwrap();
+        }
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn injected_fault_degrades_to_memory_only_and_snapshot_heals() {
+        let dir = tmp("fault");
+        let mut config = cfg(&dir);
+        config.fault = Some(PersistFault { period: 2, torn: true });
+        let (mut store, _) = OrderingStore::open(config);
+        assert!(store.insert(rec(1, 4)).appended);
+        let out = store.insert(rec(2, 5));
+        assert!(!out.appended);
+        assert_eq!(out.errors.len(), 1);
+        assert!(!store.is_persistent(), "append failure must degrade to memory-only");
+        // lookups still served from memory
+        assert!(store.lookup("pfm", &laplacian_2d(5, 5)).is_some());
+        // a manual snapshot persists the full map and re-enables the WAL
+        assert_eq!(store.snapshot().unwrap(), 2);
+        assert!(store.is_persistent());
+        drop(store);
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.replayed, 2, "the memory-only record is durable after the snapshot");
+        assert_eq!(store.len(), 2);
+        remove_dir_best_effort(&dir);
+    }
+
+    #[test]
+    fn unwritable_dir_degrades_to_memory_only() {
+        // a path under an existing *file* can never be created
+        let blocker = std::env::temp_dir().join(format!("pfm_store_file_{}", std::process::id()));
+        std::fs::write(&blocker, b"x").unwrap();
+        let dir = blocker.join("sub");
+        let (mut store, stats) = OrderingStore::open(cfg(&dir));
+        assert!(stats.errors >= 1);
+        assert!(!store.is_persistent());
+        let out = store.insert(rec(1, 4));
+        assert!(!out.appended && out.errors.is_empty());
+        assert!(store.lookup("pfm", &laplacian_2d(4, 4)).is_some());
+        let _ = std::fs::remove_file(&blocker);
+    }
+}

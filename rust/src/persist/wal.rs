@@ -1,0 +1,379 @@
+//! The write-ahead log: rotating segment files of length-prefixed,
+//! CRC-checksummed record frames.
+//!
+//! Frame layout (little-endian): `[u32 len][u32 crc32(payload)][payload]`.
+//! Appends go to the highest-sequence segment until it exceeds
+//! `segment_max_bytes`, then a fresh segment opens. Durability is a
+//! policy: [`FsyncPolicy::Always`] syncs file data after every append
+//! (a `kill -9` after a successful insert can never lose it),
+//! [`FsyncPolicy::Never`] leaves flushing to the OS (faster, loses the
+//! page-cache tail on power loss — process crashes are still safe).
+//!
+//! Reading a segment is tolerant by construction: frames are decoded
+//! until the first bad length or checksum, and the reader reports *where*
+//! the good prefix ends so the store can truncate a torn tail (the
+//! expected kill-mid-append shape) or quarantine the file.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::persist::record::crc32;
+
+/// Segment file names: `wal-<seq>.log`, zero-padded so lexicographic
+/// order equals numeric order.
+const SEGMENT_PREFIX: &str = "wal-";
+const SEGMENT_SUFFIX: &str = ".log";
+
+/// Frame header: u32 payload length + u32 CRC.
+pub const FRAME_HEADER: usize = 8;
+
+/// Largest frame payload a reader will accept — anything above this is
+/// corruption (a record for `MAX_PERSIST_N` fits comfortably).
+pub const MAX_FRAME_PAYLOAD: usize = 256 << 20;
+
+/// When to fsync WAL appends (snapshots always sync before rename).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `File::sync_data` after every append: an acknowledged insert
+    /// survives `kill -9` and power loss.
+    Always,
+    /// Never sync explicitly: appends survive process crashes (the page
+    /// cache persists) but the tail may be lost on power failure.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "always" => Some(FsyncPolicy::Always),
+            "never" => Some(FsyncPolicy::Never),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Never => "never",
+        }
+    }
+}
+
+/// Deterministic fault injection for persistence I/O (test-only, the
+/// `ServiceConfig::fault_seed` idiom extended to disk): every `period`-th
+/// append fails with an injected I/O error. With `torn` set, the failing
+/// append first writes half its frame — a genuinely torn tail on disk, so
+/// the recovery path that truncates it is exercised end to end.
+#[derive(Clone, Copy, Debug)]
+pub struct PersistFault {
+    /// fail every `period`-th append (1-based; `period = 3` fails appends
+    /// 3, 6, 9, …). Must be ≥ 1.
+    pub period: u64,
+    /// write a partial frame before failing (simulates kill mid-append)
+    pub torn: bool,
+}
+
+/// An open write-ahead log: the current segment plus rotation state.
+pub struct Wal {
+    dir: PathBuf,
+    file: File,
+    seq: u64,
+    bytes: u64,
+    appends: u64,
+    fsync: FsyncPolicy,
+    segment_max_bytes: u64,
+    fault: Option<PersistFault>,
+}
+
+impl Wal {
+    /// Open a *fresh* segment after any existing ones (recovery has
+    /// already read and repaired those; never appending to an old segment
+    /// keeps repair and append paths independent).
+    pub fn open_fresh(
+        dir: &Path,
+        fsync: FsyncPolicy,
+        segment_max_bytes: u64,
+        fault: Option<PersistFault>,
+    ) -> io::Result<Wal> {
+        let next = list_segments(dir)?.last().map(|&(seq, _)| seq + 1).unwrap_or(0);
+        let (file, seq) = open_segment(dir, next)?;
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            file,
+            seq,
+            bytes: 0,
+            appends: 0,
+            fsync,
+            segment_max_bytes: segment_max_bytes.max(1),
+            fault,
+        })
+    }
+
+    /// Path of the segment currently being appended to.
+    pub fn current_segment(&self) -> PathBuf {
+        segment_path(&self.dir, self.seq)
+    }
+
+    /// Append one record payload as a framed, checksummed entry. On
+    /// `Ok(())` with [`FsyncPolicy::Always`] the record is durably on
+    /// disk. An `Err` leaves the log usable — at worst with a torn tail
+    /// that the next recovery truncates.
+    pub fn append(&mut self, payload: &[u8]) -> io::Result<()> {
+        self.appends += 1;
+        if self.bytes >= self.segment_max_bytes {
+            self.rotate()?;
+        }
+        let frame = frame_bytes(payload);
+        if let Some(f) = self.fault {
+            if f.period >= 1 && self.appends % f.period.max(1) == 0 {
+                if f.torn {
+                    // half a frame on disk: exactly what kill -9 mid-write
+                    // leaves behind
+                    let cut = frame.len() / 2;
+                    self.file.write_all(&frame[..cut])?;
+                    let _ = self.file.sync_data();
+                    self.bytes += cut as u64;
+                }
+                return Err(io::Error::other("injected persist fault (PersistFault)"));
+            }
+        }
+        self.file.write_all(&frame)?;
+        if self.fsync == FsyncPolicy::Always {
+            self.file.sync_data()?;
+        }
+        self.bytes += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Close the current segment and open the next one.
+    fn rotate(&mut self) -> io::Result<()> {
+        let _ = self.file.sync_data();
+        let (file, seq) = open_segment(&self.dir, self.seq + 1)?;
+        self.file = file;
+        self.seq = seq;
+        self.bytes = 0;
+        Ok(())
+    }
+}
+
+/// Frame one payload: `[len][crc][payload]`.
+pub fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// How a segment read ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailState {
+    /// Every byte belonged to a valid frame.
+    Clean,
+    /// Bytes after `valid_bytes` are not a valid frame (torn write or
+    /// corruption) — the payloads before it decoded cleanly.
+    Torn { valid_bytes: u64 },
+}
+
+/// Read every valid frame payload of a segment, stopping at the first
+/// bad length or checksum. I/O errors (unreadable file) are `Err`;
+/// corruption is data, reported via [`TailState`].
+pub fn read_segment(path: &Path) -> io::Result<(Vec<Vec<u8>>, TailState)> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let mut payloads = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        if bytes.len() - pos < FRAME_HEADER {
+            return Ok((payloads, TailState::Torn { valid_bytes: pos as u64 }));
+        }
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+            as usize;
+        let crc = u32::from_le_bytes([
+            bytes[pos + 4],
+            bytes[pos + 5],
+            bytes[pos + 6],
+            bytes[pos + 7],
+        ]);
+        if len > MAX_FRAME_PAYLOAD || bytes.len() - pos - FRAME_HEADER < len {
+            return Ok((payloads, TailState::Torn { valid_bytes: pos as u64 }));
+        }
+        let payload = &bytes[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if crc32(payload) != crc {
+            return Ok((payloads, TailState::Torn { valid_bytes: pos as u64 }));
+        }
+        payloads.push(payload.to_vec());
+        pos += FRAME_HEADER + len;
+    }
+    Ok((payloads, TailState::Clean))
+}
+
+/// Truncate a segment to its valid prefix (torn-tail repair).
+pub fn truncate_segment(path: &Path, valid_bytes: u64) -> io::Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(valid_bytes)?;
+    f.sync_data()
+}
+
+/// All WAL segments in `dir`, ascending by sequence number.
+pub fn list_segments(dir: &Path) -> io::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stem =
+            name.strip_prefix(SEGMENT_PREFIX).and_then(|s| s.strip_suffix(SEGMENT_SUFFIX));
+        let Some(stem) = stem else { continue };
+        if let Ok(seq) = stem.parse::<u64>() {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(seq, _)| seq);
+    Ok(out)
+}
+
+fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("{SEGMENT_PREFIX}{seq:08}{SEGMENT_SUFFIX}"))
+}
+
+fn open_segment(dir: &Path, seq: u64) -> io::Result<(File, u64)> {
+    let file = OpenOptions::new().create(true).append(true).open(segment_path(dir, seq))?;
+    Ok((file, seq))
+}
+
+/// Move a file aside with a `.quarantined` suffix instead of deleting it
+/// (the operator can inspect it; startup will never re-read it). Best
+/// effort on name collisions: an existing quarantine file is replaced.
+pub fn quarantine(path: &Path) -> io::Result<PathBuf> {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".quarantined");
+    let target = path.with_file_name(name);
+    fs::rename(path, &target)?;
+    Ok(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pfm_wal_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_read_roundtrip_and_clean_tail() {
+        let dir = tmp("rt");
+        let mut wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 1 << 20, None).unwrap();
+        for i in 0..10u8 {
+            wal.append(&vec![i; 16 + i as usize]).unwrap();
+        }
+        let seg = wal.current_segment();
+        drop(wal);
+        let (payloads, tail) = read_segment(&seg).unwrap();
+        assert_eq!(tail, TailState::Clean);
+        assert_eq!(payloads.len(), 10);
+        assert_eq!(payloads[3], vec![3u8; 19]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_produces_ascending_segments() {
+        let dir = tmp("rot");
+        // tiny cap: every append after the first rotates
+        let mut wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 8, None).unwrap();
+        for i in 0..4u8 {
+            wal.append(&[i; 32]).unwrap();
+        }
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() >= 3, "cap of 8 bytes must rotate, got {} segments", segs.len());
+        let seqs: Vec<u64> = segs.iter().map(|&(s, _)| s).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted);
+        // reopening appends after the highest existing sequence
+        let wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 8, None).unwrap();
+        assert!(wal.seq > *seqs.last().unwrap());
+        drop(wal);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_truncated() {
+        let dir = tmp("torn");
+        let mut wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 1 << 20, None).unwrap();
+        wal.append(b"first-record").unwrap();
+        wal.append(b"second-record").unwrap();
+        let seg = wal.current_segment();
+        drop(wal);
+        // simulate kill -9 mid-append: half a frame at the tail
+        let frame = frame_bytes(b"third-record");
+        let good_len = fs::metadata(&seg).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&frame[..frame.len() / 2]).unwrap();
+        drop(f);
+        let (payloads, tail) = read_segment(&seg).unwrap();
+        assert_eq!(payloads.len(), 2);
+        assert_eq!(tail, TailState::Torn { valid_bytes: good_len });
+        truncate_segment(&seg, good_len).unwrap();
+        let (payloads, tail) = read_segment(&seg).unwrap();
+        assert_eq!((payloads.len(), tail), (2, TailState::Clean));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flips_never_pass_the_checksum() {
+        let dir = tmp("flip");
+        let mut wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 1 << 20, None).unwrap();
+        wal.append(b"payload-under-test").unwrap();
+        let seg = wal.current_segment();
+        drop(wal);
+        let clean = fs::read(&seg).unwrap();
+        // flip every bit position of the payload region in turn
+        for byte in FRAME_HEADER..clean.len() {
+            let mut bytes = clean.clone();
+            bytes[byte] ^= 0x10;
+            fs::write(&seg, &bytes).unwrap();
+            let (payloads, tail) = read_segment(&seg).unwrap();
+            assert_eq!(payloads.len(), 0, "flipped byte {byte} passed CRC");
+            assert_eq!(tail, TailState::Torn { valid_bytes: 0 });
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn injected_faults_fail_the_scheduled_append_and_leave_a_real_torn_tail() {
+        let dir = tmp("fault");
+        let fault = PersistFault { period: 3, torn: true };
+        let mut wal = Wal::open_fresh(&dir, FsyncPolicy::Never, 1 << 20, Some(fault)).unwrap();
+        assert!(wal.append(b"a").is_ok());
+        assert!(wal.append(b"b").is_ok());
+        let e = wal.append(b"c").unwrap_err();
+        assert!(e.to_string().contains("injected"), "{e}");
+        let seg = wal.current_segment();
+        drop(wal);
+        let (payloads, tail) = read_segment(&seg).unwrap();
+        assert_eq!(payloads.len(), 2, "the failed append must not be readable");
+        assert!(matches!(tail, TailState::Torn { .. }), "torn fault must leave a torn tail");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn quarantine_renames_instead_of_deleting() {
+        let dir = tmp("quar");
+        let p = dir.join("wal-00000000.log");
+        fs::write(&p, b"garbage").unwrap();
+        let q = quarantine(&p).unwrap();
+        assert!(!p.exists());
+        assert!(q.exists());
+        assert!(q.to_string_lossy().ends_with(".quarantined"));
+        assert!(list_segments(&dir).unwrap().is_empty(), "quarantined files are not segments");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -20,6 +20,9 @@ pub enum Provenance {
     /// Spectral fallback (no artifact covered the size and the variant has
     /// no native optimizer path).
     SpectralFallback,
+    /// Served from the crash-safe warm-start store (`crate::persist`) —
+    /// a previously accepted native result replayed for the same pattern.
+    WarmStore,
 }
 
 impl Provenance {
@@ -29,6 +32,7 @@ impl Provenance {
             Provenance::Network => "network",
             Provenance::NativeOptimizer => "native",
             Provenance::SpectralFallback => "fallback",
+            Provenance::WarmStore => "warm",
         }
     }
 }
@@ -234,8 +238,9 @@ mod tests {
             Provenance::Network.label(),
             Provenance::NativeOptimizer.label(),
             Provenance::SpectralFallback.label(),
+            Provenance::WarmStore.label(),
         ];
-        assert_eq!(labels, ["network", "native", "fallback"]);
+        assert_eq!(labels, ["network", "native", "fallback", "warm"]);
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub struct Csr {
 
 impl Csr {
     /// Build from raw parts. Column indices must be sorted and in range;
-    /// validated in debug builds.
+    /// validated in debug builds (untrusted inputs must go through
+    /// [`validate_parts`](Csr::validate_parts) first — these checks are
+    /// compiled out of release binaries).
     pub fn from_parts(
         nrows: usize,
         ncols: usize,
@@ -24,20 +26,52 @@ impl Csr {
         indices: Vec<usize>,
         data: Vec<f64>,
     ) -> Csr {
-        debug_assert_eq!(indptr.len(), nrows + 1);
-        debug_assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
         debug_assert_eq!(indices.len(), data.len());
         #[cfg(debug_assertions)]
-        for r in 0..nrows {
-            let row = &indices[indptr[r]..indptr[r + 1]];
-            for w in row.windows(2) {
-                debug_assert!(w[0] < w[1], "row {r}: unsorted/duplicate columns");
-            }
-            if let Some(&last) = row.last() {
-                debug_assert!(last < ncols, "row {r}: column out of range");
-            }
+        if let Err(e) = Csr::validate_parts(nrows, ncols, &indptr, &indices) {
+            panic!("Csr::from_parts: {e}");
         }
         Csr { nrows, ncols, indptr, indices, data }
+    }
+
+    /// Structural validation of *untrusted* CSR parts: `indptr` has
+    /// `nrows + 1` entries running monotonically from 0 to `indices.len()`,
+    /// and every row's column indices are strictly increasing and below
+    /// `ncols`. This is the single audited implementation shared by the
+    /// gateway wire decoder and the persistence replay path —
+    /// [`from_parts`](Csr::from_parts) only runs it in debug builds, so it
+    /// must never be the last line of defense on hostile or on-disk bytes.
+    /// Squareness and dimension caps are context-specific and stay with
+    /// the caller.
+    pub fn validate_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: &[usize],
+        indices: &[usize],
+    ) -> Result<(), String> {
+        if indptr.len() != nrows + 1 {
+            return Err(format!(
+                "indptr has {} entries, expected nrows + 1 = {}",
+                indptr.len(),
+                nrows + 1
+            ));
+        }
+        if indptr[0] != 0 || indptr[nrows] != indices.len() {
+            return Err("indptr must run from 0 to nnz".to_string());
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("indptr must be non-decreasing".to_string());
+        }
+        for row in 0..nrows {
+            let cols = &indices[indptr[row]..indptr[row + 1]];
+            if cols.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("row {row}: column indices not strictly increasing"));
+            }
+            if cols.last().is_some_and(|&c| c >= ncols) {
+                return Err(format!("row {row}: column index out of range"));
+            }
+        }
+        Ok(())
     }
 
     /// n×n identity.
@@ -384,6 +418,25 @@ mod tests {
         assert_eq!(d[1], 1.0);
         assert_eq!(d[15], 0.0);
         assert_eq!(d[2 * 4 + 2], 4.0);
+    }
+
+    #[test]
+    fn validate_parts_accepts_good_and_rejects_bad() {
+        let a = example();
+        assert!(Csr::validate_parts(a.nrows(), a.ncols(), a.indptr(), a.indices()).is_ok());
+        // wrong indptr length
+        assert!(Csr::validate_parts(3, 3, &[0, 1, 2], &[0, 1]).is_err());
+        // indptr not ending at nnz
+        assert!(Csr::validate_parts(2, 2, &[0, 1, 3], &[0, 1]).is_err());
+        // non-monotone indptr
+        let e = Csr::validate_parts(2, 2, &[0, 2, 1], &[0; 1]).unwrap_err();
+        assert!(e.contains("non-decreasing") || e.contains("0 to nnz"), "{e}");
+        // duplicate column in a row
+        let e = Csr::validate_parts(1, 3, &[0, 2], &[1, 1]).unwrap_err();
+        assert!(e.contains("strictly increasing"), "{e}");
+        // column index out of range
+        let e = Csr::validate_parts(1, 2, &[0, 1], &[2]).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
     }
 
     #[test]

@@ -347,6 +347,112 @@ fn random_byte_connections_never_take_the_gateway_down() {
     gw.shutdown();
 }
 
+/// Full warm-start persistence loop across the wire: a native-PFM result
+/// is WAL-persisted, the `snapshot` admin command compacts it, and a
+/// *second* gateway on the same directory serves the same pattern from
+/// the store (`provenance == "warm"`) with a bit-identical permutation —
+/// the crash-restart contract, minus the kill -9 (CI's smoke test covers
+/// that with real processes).
+#[test]
+fn warm_store_survives_gateway_restart_and_snapshot_admin_compacts() {
+    let dir = std::env::temp_dir().join(format!("pfm_gwi_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let service = || ServiceConfig {
+        workers: 1,
+        artifact_dir: "nonexistent-dir-ok-gwi-persist".into(),
+        persist: Some(pfm_reorder::persist::PersistConfig::new(&dir)),
+        ..Default::default()
+    };
+    let quick = OptBudget { outer: 1, refine: 4, time_ms: None, ..OptBudget::default() };
+    let a = laplacian_2d(11, 11);
+
+    let gw = gateway(service(), 0.0, 32.0);
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    let mut req = request(1, Method::Learned(Learned::Pfm), a.clone());
+    req.opt_budget = Some(quick);
+    let first = match c.request(&req).unwrap() {
+        Reply::Result(res) => {
+            assert_eq!(res.provenance.as_deref(), Some("native"));
+            res
+        }
+        other => panic!("unexpected reply {other:?}"),
+    };
+    let snap = c.admin(AdminCmd::Snapshot).unwrap();
+    assert!(snap.contains("\"ok\":true"), "{snap}");
+    assert!(snap.contains("\"records\":1"), "{snap}");
+    drop(c);
+    gw.shutdown();
+
+    // second gateway, same store directory: the pattern is warm
+    let gw = gateway(service(), 0.0, 32.0);
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    let mut req = request(2, Method::Learned(Learned::Pfm), a);
+    req.seed = 99; // different seed on purpose: the key is the pattern
+    req.opt_budget = Some(quick);
+    match c.request(&req).unwrap() {
+        Reply::Result(res) => {
+            assert_eq!(res.provenance.as_deref(), Some("warm"));
+            assert_eq!(res.order, first.order, "warm hit must be bit-identical");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let m = c.admin(AdminCmd::Metrics).unwrap();
+    for key in ["\"persist\"", "\"warm_hits\":1", "\"replayed\":1"] {
+        assert!(m.contains(key), "metrics JSON missing {key}: {m}");
+    }
+    drop(c);
+    gw.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `snapshot` admin command on a store-less gateway reports a clean
+/// error instead of succeeding vacuously or crashing.
+#[test]
+fn snapshot_admin_without_persistence_reports_an_error() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-nosnap".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    let reply = c.admin(AdminCmd::Snapshot).unwrap();
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("persist-dir"), "{reply}");
+    drop(c);
+    gw.shutdown();
+}
+
+/// A client with an I/O timeout fails fast against a peer that accepts
+/// the connection and then never answers (pre-fix, only the *connect* was
+/// bounded — a wedged gateway hung `admin`/`remote` forever).
+#[test]
+fn client_io_timeout_bounds_a_silent_peer() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // keep the listener alive but never read or reply
+    let hold = std::thread::spawn(move || {
+        let conn = listener.accept().map(|(s, _)| s);
+        std::thread::sleep(Duration::from_secs(5));
+        drop(conn);
+    });
+    let mut c = GatewayClient::connect(addr).unwrap();
+    c.set_io_timeout(Some(Duration::from_millis(150))).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = c.admin(AdminCmd::Ping).expect_err("a silent peer must time out");
+    assert!(err.contains("timed out"), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "timeout must bound the wait, took {:?}",
+        t0.elapsed()
+    );
+    drop(c);
+    drop(hold); // detach; the sleeper exits on its own
+}
+
 /// Admin protocol: ping, metrics (with live gateway counters), throttle.
 #[test]
 fn admin_protocol_reports_live_metrics() {

@@ -1,0 +1,256 @@
+//! Crash-recovery integration suite for the warm-start persistence
+//! layer, driven entirely through the public `pfm_reorder::persist` API:
+//! populate → die mid-append → reopen → bit-identical warm hit, torn-tail
+//! truncation, and proptests asserting that random corruption of WAL
+//! segments and snapshots never panics and never yields an invalid
+//! recovered record.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use pfm_reorder::factor::FactorKind;
+use pfm_reorder::gen::grid::laplacian_2d;
+use pfm_reorder::persist::{
+    crc32, pattern_key, snapshot, wal, FsyncPolicy, OrderingStore, PersistConfig, PersistFault,
+    StoredOrdering,
+};
+use pfm_reorder::sparse::Csr;
+use pfm_reorder::util::check::{check_permutation, forall};
+use pfm_reorder::util::rng::Pcg64;
+
+/// Unique scratch directory per test (and per proptest iteration).
+fn scratch(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "pfm_recovery_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Test config: no fsync (tmpfs speed), manual snapshots only.
+fn cfg(dir: &Path) -> PersistConfig {
+    PersistConfig {
+        fsync: FsyncPolicy::Never,
+        snapshot_every: 0,
+        ..PersistConfig::new(dir)
+    }
+}
+
+/// A stored ordering whose permutation is a deterministic function of
+/// `seed` — lets the tests assert bit-identity after recovery.
+fn ordering(a: &Csr, seed: u64) -> StoredOrdering {
+    let order = Pcg64::new(seed).permutation(a.nrows());
+    StoredOrdering::new("pfm", a, order, Some(FactorKind::Cholesky), Some(1.5 + seed as f64))
+}
+
+/// encode ∘ decode is the identity on full records (integration-level
+/// counterpart of the unit round-trip in `persist::record`).
+#[test]
+fn record_roundtrip_and_key_are_stable() {
+    let a = laplacian_2d(9, 7);
+    let rec = ordering(&a, 42);
+    let back = StoredOrdering::decode(&rec.encode()).expect("round-trip");
+    assert_eq!(back, rec);
+    assert_eq!(back.key, pattern_key("pfm", a.nrows(), a.indptr(), a.indices()));
+    // CRC-32 reference vector pins the checksum algorithm across refactors.
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+}
+
+/// The headline contract: populate, die mid-append (a torn half-frame at
+/// the segment tail — what a kill -9 during `write` leaves behind),
+/// reopen, and get every completed record back bit-identically. The torn
+/// tail is truncated once; a third open sees a clean log.
+#[test]
+fn populate_die_mid_append_reopen_bit_identical() {
+    let dir = scratch("midappend");
+    let mats: Vec<Csr> = (0..4).map(|k| laplacian_2d(6 + k, 5)).collect();
+    {
+        let (mut store, stats) = OrderingStore::open(cfg(&dir));
+        assert_eq!(stats.replayed, 0);
+        for (k, a) in mats.iter().enumerate() {
+            let out = store.insert(ordering(a, k as u64));
+            assert!(out.appended, "append {k} failed: {:?}", out.errors);
+        }
+    }
+    // simulate the kill: a partial frame (header + some payload bytes,
+    // shorter than the length the header promises) at the newest segment
+    let (_, seg) = wal::list_segments(&dir).unwrap().pop().expect("a segment exists");
+    let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+    f.write_all(&200u32.to_le_bytes()).unwrap();
+    f.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap();
+    f.write_all(&[0xAB; 37]).unwrap();
+    drop(f);
+    let torn_len = std::fs::metadata(&seg).unwrap().len();
+
+    let (store, stats) = OrderingStore::open(cfg(&dir));
+    assert_eq!(stats.torn_tails, 1);
+    assert_eq!(stats.quarantined, 0);
+    assert_eq!(stats.replayed, mats.len());
+    for (k, a) in mats.iter().enumerate() {
+        let hit = store.lookup("pfm", a).expect("warm hit after recovery");
+        assert_eq!(hit.order, Pcg64::new(k as u64).permutation(a.nrows()), "bit-identical");
+        assert_eq!(hit.fill_ratio, Some(1.5 + k as f64));
+        assert_eq!(hit.factor_kind, Some(FactorKind::Cholesky));
+    }
+    assert!(
+        std::fs::metadata(&seg).unwrap().len() < torn_len,
+        "truncation must be persisted to disk"
+    );
+    drop(store);
+
+    let (store, stats) = OrderingStore::open(cfg(&dir));
+    assert_eq!(stats.torn_tails, 0, "second recovery must see a clean log");
+    assert_eq!(stats.replayed, mats.len());
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected short write (the fault hook's `torn` mode) leaves exactly
+/// the on-disk state a mid-write crash would: the record that failed is
+/// absent, every earlier record recovers.
+#[test]
+fn injected_torn_write_recovers_the_completed_prefix() {
+    let dir = scratch("torninject");
+    let a0 = laplacian_2d(8, 8);
+    let a1 = laplacian_2d(9, 9);
+    {
+        let mut config = cfg(&dir);
+        config.fault = Some(PersistFault { period: 2, torn: true });
+        let (mut store, _) = OrderingStore::open(config);
+        assert!(store.insert(ordering(&a0, 1)).appended);
+        let out = store.insert(ordering(&a1, 2)); // fault fires: torn write
+        assert!(!out.appended);
+        assert!(!out.errors.is_empty());
+        // degraded but alive: both records still served from memory
+        assert!(store.lookup("pfm", &a0).is_some());
+        assert!(store.lookup("pfm", &a1).is_some());
+        assert!(!store.is_persistent(), "WAL must be dropped after an append fault");
+    }
+    let (store, stats) = OrderingStore::open(cfg(&dir));
+    assert_eq!(stats.torn_tails, 1, "the short write is a torn tail");
+    assert_eq!(stats.replayed, 1);
+    assert!(store.lookup("pfm", &a0).is_some());
+    assert!(store.lookup("pfm", &a1).is_none(), "the torn record must not resurrect");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Proptest: flip random bytes anywhere in the WAL segments — recovery
+/// must never panic, and every record it does accept must still be a
+/// valid permutation of a valid pattern.
+#[test]
+fn prop_corrupt_wal_never_panics_or_accepts_garbage() {
+    forall(40, |rng| {
+        let dir = scratch("propwal");
+        let mats: Vec<Csr> = (0..3).map(|k| laplacian_2d(5 + k, 4 + k)).collect();
+        {
+            let (mut store, _) = OrderingStore::open(cfg(&dir));
+            for (k, a) in mats.iter().enumerate() {
+                store.insert(ordering(a, 10 + k as u64));
+            }
+        }
+        let segments = wal::list_segments(&dir).map_err(|e| e.to_string())?;
+        if segments.is_empty() {
+            return Err("expected at least one segment".into());
+        }
+        for _ in 0..1 + rng.next_below(6) {
+            let (_, seg) = &segments[rng.next_below(segments.len())];
+            let mut bytes = std::fs::read(seg).map_err(|e| e.to_string())?;
+            if bytes.is_empty() {
+                continue;
+            }
+            let at = rng.next_below(bytes.len());
+            bytes[at] ^= 1 << rng.next_below(8);
+            std::fs::write(seg, &bytes).map_err(|e| e.to_string())?;
+        }
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        if stats.replayed > mats.len() {
+            return Err(format!("replayed {} > {} inserted", stats.replayed, mats.len()));
+        }
+        for a in &mats {
+            if let Some(hit) = store.lookup("pfm", a) {
+                check_permutation(&hit.order)?;
+                if !hit.matches("pfm", a) {
+                    return Err("recovered record does not match its pattern".into());
+                }
+            }
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Proptest: truncate or bit-flip the snapshot — startup must never
+/// panic; a damaged snapshot is quarantined (renamed, not deleted) and
+/// the store still opens.
+#[test]
+fn prop_corrupt_snapshot_never_panics_and_is_quarantined() {
+    forall(40, |rng| {
+        let dir = scratch("propsnap");
+        let a = laplacian_2d(7, 6);
+        {
+            let (mut store, _) = OrderingStore::open(cfg(&dir));
+            store.insert(ordering(&a, 3));
+            store.snapshot().map_err(|e| format!("snapshot: {e}"))?;
+        }
+        let snap = snapshot::snapshot_path(&dir);
+        let mut bytes = std::fs::read(&snap).map_err(|e| e.to_string())?;
+        if rng.next_below(2) == 0 {
+            // truncate to a strict prefix
+            bytes.truncate(rng.next_below(bytes.len().max(1)));
+        } else {
+            let at = rng.next_below(bytes.len());
+            bytes[at] ^= 1 << rng.next_below(8);
+        }
+        std::fs::write(&snap, &bytes).map_err(|e| e.to_string())?;
+        let (store, stats) = OrderingStore::open(cfg(&dir));
+        if stats.quarantined > 0 {
+            // quarantine renames — the evidence must still be on disk
+            let kept = std::fs::read_dir(&dir)
+                .map_err(|e| e.to_string())?
+                .filter_map(|e| e.ok())
+                .any(|e| e.file_name().to_string_lossy().ends_with(".quarantined"));
+            if !kept {
+                return Err("quarantined snapshot was not kept on disk".into());
+            }
+        }
+        // whatever survived must be valid
+        if let Some(hit) = store.lookup("pfm", &a) {
+            check_permutation(&hit.order)?;
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Snapshot compaction is atomic and supersedes the log: after
+/// `snapshot()`, a reopen replays everything from the snapshot alone.
+#[test]
+fn snapshot_then_reopen_replays_everything() {
+    let dir = scratch("compact");
+    let mats: Vec<Csr> = (0..5).map(|k| laplacian_2d(4 + k, 6)).collect();
+    {
+        let (mut store, _) = OrderingStore::open(cfg(&dir));
+        for (k, a) in mats.iter().enumerate() {
+            store.insert(ordering(a, 20 + k as u64));
+        }
+        assert_eq!(store.snapshot().unwrap(), mats.len());
+    }
+    let (store, stats) = OrderingStore::open(cfg(&dir));
+    assert_eq!(stats.replayed, mats.len());
+    assert_eq!(stats.torn_tails + stats.quarantined + stats.rejected, 0);
+    for (k, a) in mats.iter().enumerate() {
+        let hit = store.lookup("pfm", a).expect("hit from snapshot");
+        assert_eq!(hit.order, Pcg64::new(20 + k as u64).permutation(a.nrows()));
+    }
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
