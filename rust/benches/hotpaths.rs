@@ -14,7 +14,8 @@ use pfm_reorder::coordinator::Method;
 use pfm_reorder::factor::lu::{self, LuOptions};
 use pfm_reorder::factor::supernodal::{self, SupernodalSymbolic};
 use pfm_reorder::factor::{
-    analyze, cholesky_with_ws, fundamental_supernodes, refactor_into, FactorWorkspace,
+    analyze, cholesky_with_ws, factorize_into_parallel, fundamental_supernodes, refactor_into,
+    FactorWorkspace, Schedule,
 };
 use pfm_reorder::gateway::wire;
 use pfm_reorder::gen::grid::{convection_diffusion_2d, laplacian_2d, laplacian_3d};
@@ -105,6 +106,36 @@ fn main() {
         "steady-state refactorization must not allocate scratch"
     );
 
+    // --- etree task-DAG parallel supernodal: 1 vs 4 threads at n=4096 ---
+    // same AMD-ordered 2D structure as the headline pair; the 4-thread run
+    // must be bit-identical to the sequential kernel, so the speedup is
+    // measured at *exactly* the same factor
+    let sched4 = Schedule::build(&sn2, 4)
+        .expect("AMD 2D n=4096 must clear the parallel flop cutoff");
+    println!(
+        "  parallel schedule on amd_2d_n4096: {} workers, {} trunk supernodes of {}",
+        sched4.workers(),
+        sched4.trunk_len(),
+        sn2.nsuper()
+    );
+    let mut seq_val = vec![0.0f64; sn2.values_len()];
+    let sp1 = bench(&mut results, "supernodal_parallel/threads1_amd_2d_n4096", warm, it(10), || {
+        supernodal::factorize_into(&pap, &sn2, &mut seq_val, &mut ws).unwrap()
+    });
+    let mut par_val = vec![0.0f64; sn2.values_len()];
+    let sp4 = bench(&mut results, "supernodal_parallel/threads4_amd_2d_n4096", warm, it(10), || {
+        factorize_into_parallel(&pap, &sn2, &mut par_val, &mut ws, &sched4).unwrap()
+    });
+    let supernodal_parallel_speedup = sp1.median / sp4.median.max(1e-12);
+    assert!(
+        seq_val.iter().zip(&par_val).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "parallel factorization must be bit-identical to the sequential kernel"
+    );
+    println!(
+        "  supernodal parallel speedup on amd_2d_n4096 (1 → 4 threads): \
+         {supernodal_parallel_speedup:.2}×  at bit-identical factors"
+    );
+
     // --- LU engine: natural vs AMD on upwind convection–diffusion ---
     // the unsymmetric analogue of the headline pair: a fill-reducing
     // ordering must pay off through the Gilbert–Peierls kernel too
@@ -180,6 +211,40 @@ fn main() {
         r4.objective
     );
 
+    // --- probe × factor thread composition at n=1024 ---
+    // probe2×factor2 and probe4×factor1 request the same total width; the
+    // pool is clamped to avail/factor_threads, and the ordering must not
+    // depend on how the width is split
+    let mut c22 = None;
+    let cb22 = bench(&mut results, "pfm_compose/probe2_factor2_n1024", warm, it(3), || {
+        c22 = Some(
+            PfmOptimizer::new(pfm_budget, 7)
+                .with_threads(2)
+                .with_factor_threads(2)
+                .optimize(&grid1k),
+        );
+    });
+    let mut c41 = None;
+    let cb41 = bench(&mut results, "pfm_compose/probe4_factor1_n1024", warm, it(3), || {
+        c41 = Some(
+            PfmOptimizer::new(pfm_budget, 7)
+                .with_threads(4)
+                .with_factor_threads(1)
+                .optimize(&grid1k),
+        );
+    });
+    let (c22, c41) = (c22.unwrap(), c41.unwrap());
+    assert_eq!(
+        c22.order, c41.order,
+        "ordering must be identical under any probe/factor width split"
+    );
+    let pfm_compose_ratio = cb22.median / cb41.median.max(1e-12);
+    println!(
+        "  probe×factor composition on 2d_n1024: probe2×factor2 runs {} pool workers, \
+         probe4×factor1 runs {} (time ratio {pfm_compose_ratio:.2})",
+        c22.probe_threads, c41.probe_threads
+    );
+
     bench(&mut results, "order_amd/2d_n4096", warm, it(5), || amd(&grid2d));
     bench(&mut results, "order_amd/sp_n1728", warm, it(5), || amd(&sp));
     bench(&mut results, "order_rcm/2d_n4096", warm, it(10), || rcm(&grid2d));
@@ -204,6 +269,7 @@ fn main() {
         eval_fill: true,
         factor_kind: None,
         opt_budget: None,
+        factor_threads: None,
         matrix: grid2d.clone(),
     };
     let payload = wire::encode_request(&wire_req).unwrap();
@@ -256,6 +322,8 @@ fn main() {
         .set("lu_amd_speedup_convdiff_n4096", lu_speedup)
         .set("pfm_fill_vs_amd_n1024", pfm_fill_vs_amd)
         .set("pfm_parallel_speedup_n4096", pfm_parallel_speedup)
+        .set("supernodal_parallel_speedup_n4096", supernodal_parallel_speedup)
+        .set("pfm_compose_ratio_n1024", pfm_compose_ratio)
         .set("ns_per_iter", ns_per_iter);
     let path = "BENCH_hotpaths.json";
     match std::fs::write(path, out.to_string()) {

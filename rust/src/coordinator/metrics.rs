@@ -48,6 +48,9 @@ struct Inner {
     levels_refined: usize,
     /// probe-pool width the service runs native-PFM refinement with
     probe_threads: usize,
+    /// parallel-factorization width the service runs with (effective —
+    /// clamped against the machine at startup)
+    factor_threads: usize,
     /// requests whose serving thread panicked (caught and answered with an
     /// error — the request is lost, the thread is not)
     worker_panics: usize,
@@ -176,6 +179,16 @@ impl Metrics {
 
     pub fn probe_threads(&self) -> usize {
         lock_unpoisoned(&self.inner).probe_threads
+    }
+
+    /// Record the service's *effective* parallel-factorization width (set
+    /// once at startup, after clamping against the machine).
+    pub fn set_factor_threads(&self, threads: usize) {
+        lock_unpoisoned(&self.inner).factor_threads = threads;
+    }
+
+    pub fn factor_threads(&self) -> usize {
+        lock_unpoisoned(&self.inner).factor_threads
     }
 
     /// Record a caught panic in a serving thread (the request was answered
@@ -383,6 +396,7 @@ impl Metrics {
             .set("shared_analyses", self.shared_analyses())
             .set("levels_refined", self.levels_refined())
             .set("probe_threads", self.probe_threads())
+            .set("factor_threads", self.factor_threads())
             .set("gateway", gateway)
             .set("persist", persist)
             .set("latency", per_method)
@@ -419,6 +433,7 @@ mod tests {
     fn batching_and_vcycle_counters_export() {
         let m = Metrics::new();
         m.set_probe_threads(4);
+        m.set_factor_threads(2);
         m.record_shared_analyses(3);
         m.record_shared_analyses(2);
         m.record_levels_refined(2);
@@ -427,10 +442,12 @@ mod tests {
         assert_eq!(m.shared_analyses(), 5);
         assert_eq!(m.levels_refined(), 7);
         assert_eq!(m.probe_threads(), 4);
+        assert_eq!(m.factor_threads(), 2);
         let json = m.to_json().to_string();
         assert!(json.contains("\"shared_analyses\":5"));
         assert!(json.contains("\"levels_refined\":7"));
         assert!(json.contains("\"probe_threads\":4"));
+        assert!(json.contains("\"factor_threads\":2"));
     }
 
     #[test]

@@ -100,6 +100,11 @@ pub struct ReorderRequest {
     /// that path: `None` uses the service's configured serving budget, so
     /// serving latency stays bounded either way.
     pub opt_budget: Option<OptBudget>,
+    /// parallel-factorization width for this request's native-optimizer
+    /// path: `None` uses the service's configured `factor_threads`.
+    /// Composed with the probe-pool width so their product never
+    /// oversubscribes the machine (`util::sync::composed_threads`).
+    pub factor_threads: Option<usize>,
     pub submitted: Instant,
     pub respond: mpsc::Sender<ReorderResponse>,
 }
@@ -134,6 +139,10 @@ pub struct ReorderResult {
     /// the native optimizer did not run; quality-neutral absent an
     /// expiring wall-clock deadline — see `pfm::probes`)
     pub probe_threads: usize,
+    /// parallel-factorization width the request ran with (0 when the
+    /// native optimizer did not run; bit-identical factors at any width —
+    /// see `factor::sched`)
+    pub factor_threads: usize,
     /// intermediate V-cycle levels the native optimizer refined (0 unless
     /// the multilevel path engaged with a per-level budget)
     pub levels_refined: usize,

@@ -44,7 +44,7 @@ use crate::factor::{FactorContext, FactorKind};
 use crate::pfm::{prepare_shared, OptBudget, SharedPrep, DEFAULT_DENSE_CAP};
 use crate::runtime::PfmRuntime;
 use crate::sparse::Csr;
-use crate::util::sync::lock_unpoisoned;
+use crate::util::sync::{effective_threads, lock_unpoisoned};
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -71,6 +71,12 @@ pub struct ServiceConfig {
     /// mid-run — deadline expiry makes results timing-dependent at any
     /// width (never worse than the init either way; see `pfm::probes`)
     pub probe_threads: usize,
+    /// parallel-factorization width native-PFM requests may use
+    /// (`factor::sched`; requests may override via
+    /// `ReorderRequest::factor_threads`). Composed with `probe_threads`
+    /// inside the optimizer so the product never oversubscribes the
+    /// machine; bit-identical factors at any width.
+    pub factor_threads: usize,
     /// Test-only fault injection: a request carrying exactly this seed
     /// panics inside its serving thread, exercising the panic-isolation
     /// path (the request is answered with an error, the thread survives,
@@ -96,6 +102,7 @@ impl Default for ServiceConfig {
             artifact_dir: crate::runtime::DEFAULT_ARTIFACT_DIR.to_string(),
             opt_budget: OptBudget::serving(),
             probe_threads: 2,
+            factor_threads: 1,
             fault_seed: None,
             persist: None,
         }
@@ -120,6 +127,7 @@ impl ReorderService {
         let (tx, rx) = mpsc::sync_channel::<ReorderRequest>(config.queue_capacity);
         let metrics = Arc::new(Metrics::new());
         metrics.set_probe_threads(config.probe_threads.max(1));
+        metrics.set_factor_threads(effective_threads(config.factor_threads));
         let shutdown = Arc::new(AtomicBool::new(false));
 
         // warm-start store: recover before serving, so the very first
@@ -249,6 +257,7 @@ impl ReorderService {
                                             factor_kind: fill_kind,
                                             opt_iters: 0,
                                             probe_threads: 0,
+                                            factor_threads: 0,
                                             levels_refined: 0,
                                         }),
                                     });
@@ -371,6 +380,23 @@ impl ReorderService {
         factor_kind: Option<FactorKind>,
         opt_budget: Option<OptBudget>,
     ) -> mpsc::Receiver<ReorderResponse> {
+        self.submit_with_threads(matrix, method, seed, eval_fill, factor_kind, opt_budget, None)
+    }
+
+    /// [`submit_with_budget`](Self::submit_with_budget) plus a per-request
+    /// parallel-factorization width (`None` uses the service's configured
+    /// `factor_threads`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_with_threads(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+        factor_kind: Option<FactorKind>,
+        opt_budget: Option<OptBudget>,
+        factor_threads: Option<usize>,
+    ) -> mpsc::Receiver<ReorderResponse> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = ReorderRequest {
@@ -381,6 +407,7 @@ impl ReorderService {
             eval_fill,
             factor_kind,
             opt_budget,
+            factor_threads,
             submitted: Instant::now(),
             respond: rtx,
         };
@@ -398,6 +425,7 @@ impl ReorderService {
     /// immediately instead of blocking the caller. This is the gateway's
     /// entry point — saturation becomes an explicit `Busy` frame on the
     /// wire rather than an unbounded pile-up of reader threads.
+    #[allow(clippy::too_many_arguments)]
     pub fn try_submit_with_budget(
         &self,
         matrix: Csr,
@@ -406,6 +434,7 @@ impl ReorderService {
         eval_fill: bool,
         factor_kind: Option<FactorKind>,
         opt_budget: Option<OptBudget>,
+        factor_threads: Option<usize>,
     ) -> Result<mpsc::Receiver<ReorderResponse>, TrySubmitError> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -417,6 +446,7 @@ impl ReorderService {
             eval_fill,
             factor_kind,
             opt_budget,
+            factor_threads,
             submitted: Instant::now(),
             respond: rtx,
         };
@@ -563,6 +593,7 @@ fn serve_warm_hit(
             factor_kind,
             opt_iters: 0,
             probe_threads: 0,
+            factor_threads: 0,
             levels_refined: 0,
         }),
     });
@@ -705,6 +736,7 @@ fn network_loop(
             for (i, req) in reqs.into_iter().enumerate() {
                 let Method::Learned(l) = req.method else { unreachable!() };
                 let budget = req.opt_budget.unwrap_or(cfg.opt_budget);
+                let fthreads = req.factor_threads.unwrap_or(cfg.factor_threads).max(1);
                 let prep = pgroup_of.get(i).and_then(|&g| preps[g].as_ref());
                 // panic isolation, same contract as the classical pool: a
                 // fault while serving one learned request becomes an error
@@ -719,6 +751,7 @@ fn network_loop(
                         req.seed,
                         Some(budget),
                         cfg.probe_threads.max(1),
+                        fthreads,
                         prep,
                     )
                     .map(|out| {
@@ -808,6 +841,7 @@ fn network_loop(
                                 } else {
                                     0
                                 },
+                                factor_threads: if native_run { fthreads } else { 0 },
                                 levels_refined: out.levels_refined,
                             }),
                         });
@@ -975,6 +1009,7 @@ mod tests {
         // the native run reports the service's probe-pool width and the
         // V-cycle's per-level refinement work (324 → ≥ 2 coarse levels)
         assert_eq!(res.probe_threads, 2, "default config runs 2 probe threads");
+        assert_eq!(res.factor_threads, 1, "default config runs 1 factor thread");
         assert!(res.levels_refined >= 1, "V-cycle must refine an intermediate level");
         // latency cap: the compute is iteration-bounded (2 outer + 8
         // refine steps at n=324); the assertion is generous for slow CI
@@ -1230,6 +1265,7 @@ mod tests {
                 Method::Classical(Classical::Fiedler),
                 i,
                 false,
+                None,
                 None,
                 None,
             ) {

@@ -54,6 +54,15 @@
 //! 1e-10 on every problem class, and the partial-pivoting oracle (same
 //! pivot sequence, same factors) on matrices that force row swaps.
 //!
+//! **Parallel supernodal scheduling.** `sched` partitions the supernode
+//! tree into flop-balanced independent subtrees factored concurrently on
+//! scoped threads, with cross-boundary rank-k updates staged per source
+//! and replayed in ascending supernode order at the join — the parallel
+//! factor is bit-identical to the sequential one at any thread count (see
+//! the `sched` module docs for the argument). `Schedule::build` declines
+//! (returns `None`) on small or path-etree structures, so serving-sized
+//! requests never pay a spawn.
+//!
 //! **Fallback.** Supernodes of width 1 (chains, trees, tridiagonal) make
 //! panel bookkeeping pure overhead, so `supernodal::profitable` gates the
 //! blocked kernel on the *flop-weighted* mean supernode width ≥ 2 (and
@@ -75,6 +84,7 @@
 pub mod etree;
 pub mod lu;
 pub mod numeric;
+pub mod sched;
 pub mod solver;
 pub mod supernodal;
 pub mod symbolic;
@@ -84,6 +94,7 @@ pub use lu::{
     analyze_lu, lu_fill_ratio, lu_fill_ratio_of_order, LuFactor, LuOptions, LuSymbolic,
 };
 pub use numeric::{cholesky, cholesky_with, cholesky_with_ws, refactor_into, CholFactor, FactorError};
+pub use sched::{factorize_into_parallel, factorize_parallel, Schedule};
 pub use solver::{DirectSolver, FactorKind, Factorization, SolveStats, SYMMETRY_TOL};
 pub use supernodal::{SupernodalFactor, SupernodalSymbolic};
 pub use symbolic::{

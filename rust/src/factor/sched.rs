@@ -1,0 +1,646 @@
+//! Etree task-DAG scheduling for the supernodal Cholesky kernel:
+//! subtree-parallel numeric factorization that is **bit-identical to the
+//! sequential kernel at every thread count**.
+//!
+//! # The schedule
+//!
+//! The column elimination tree collapses to a *supernode tree*: supernode
+//! `s`'s parent is the supernode owning its first sub-diagonal row (every
+//! rank-k update target of `s` is an ancestor in this tree). The builder
+//! partitions that tree into independent subtree *tasks* balanced by exact
+//! per-supernode flop weight (column `js+k` of a panel with leading
+//! dimension `ld` costs `(ld-k)²` — summing over the factor reproduces
+//! `symbolic::factor_flops` exactly), then packs tasks onto workers with
+//! LPT (heaviest task first onto the least-loaded worker, ties to the
+//! lowest index — deterministic). Whatever is not inside a task — the
+//! shared top of the tree — is the **trunk**.
+//!
+//! ```text
+//!            trunk (sequential join)        owner[s] = TRUNK
+//!              ▲    ▲       ▲
+//!          ┌───┴┐ ┌─┴──┐ ┌──┴───┐
+//!          │task│ │task│ │ task │ …        owner[s] = worker w
+//!          └────┘ └────┘ └──────┘
+//!         subtrees, factored concurrently
+//! ```
+//!
+//! # Why the result is bit-identical
+//!
+//! A panel's factorization is a pure function of its assembled input, and
+//! an entry's final value depends only on the *sequence of subtractions*
+//! applied to it. The parallel schedule preserves the sequential sequence
+//! everywhere:
+//!
+//! * **Inside a subtree** every update source is a descendant in the same
+//!   subtree (subtree closure, asserted at build time), and each worker
+//!   processes its supernodes in ascending index order — the sequential
+//!   order restricted to the subtree.
+//! * **Across the boundary** a worker never touches the trunk: it stages
+//!   `(position, value)` pairs per source supernode into its own log. At
+//!   the join, one sequential *replay* walks supernodes in ascending
+//!   order: a worker-owned supernode contributes its staged group, a trunk
+//!   supernode is panel-factored and its updates applied directly — so
+//!   every trunk entry receives exactly the subtractions the sequential
+//!   kernel would have applied, in the same order, with the same values
+//!   (each staged value was computed from a bit-identical source panel by
+//!   the shared [`supernodal::apply_updates`] code path).
+//!
+//! No atomics, no reductions in nondeterministic order, no per-thread-
+//! count variation: `assert_eq!` on the packed value arrays holds at any
+//! worker count, which is what the equivalence proptests pin.
+//!
+//! # When it engages
+//!
+//! Parallelism needs *tree width*. Fill-reducing orderings (AMD, nested
+//! dissection) give wide supernode trees; natural orderings of banded
+//! problems give a **path** (parent(j) = j+1) with zero subtree
+//! parallelism — the builder then finds fewer than two tasks and
+//! [`Schedule::build`] returns `None`, as it does below the flop cutoff
+//! ([`PAR_MIN_FLOPS`]) where spawn/join costs exceed the win. Callers fall
+//! back to the sequential kernel; serving-sized requests never pay a
+//! spawn. See DESIGN.md §Task-DAG scheduling.
+
+use std::sync::Arc;
+
+use crate::factor::numeric::FactorError;
+use crate::factor::supernodal::{
+    self, apply_updates, assemble, factor_panel, SupernodalFactor, SupernodalSymbolic,
+};
+use crate::factor::workspace::{FactorWorkspace, WorkerScratch};
+use crate::sparse::Csr;
+
+/// `owner` value for supernodes factored by the sequential join phase.
+pub const TRUNK: usize = usize::MAX;
+
+/// Subtree tasks per requested worker: over-decomposing lets LPT balance
+/// uneven subtree weights (one task per worker would pin the makespan to
+/// the single heaviest subtree).
+const OVERDECOMP: usize = 4;
+
+/// Minimum total factor flops for which subtree parallelism is worth the
+/// spawn/join cost; below this [`Schedule::build`] stays sequential.
+pub const PAR_MIN_FLOPS: f64 = 1_000_000.0;
+
+/// A worker assignment for one supernodal structure: which worker owns
+/// each supernode (or [`TRUNK`]), and each worker's ascending work list.
+/// Build once per (pattern, thread count); reuse across refactorizations.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// supernode → worker index, or [`TRUNK`]
+    owner: Vec<usize>,
+    /// per-worker owned supernodes, ascending (the phase-1 work lists)
+    worker_sns: Vec<Vec<usize>>,
+    /// supernode → position in its owner's work list (trunk: unused)
+    local_pos: Vec<usize>,
+}
+
+impl Schedule {
+    /// Build a schedule for `threads` workers, or `None` when the
+    /// structure has too little subtree parallelism (or too little work —
+    /// [`PAR_MIN_FLOPS`]) to beat the sequential kernel.
+    pub fn build(ssym: &SupernodalSymbolic, threads: usize) -> Option<Schedule> {
+        Schedule::build_with(ssym, threads, PAR_MIN_FLOPS)
+    }
+
+    /// [`build`](Self::build) with an explicit flop cutoff (tests force
+    /// parallelism on small matrices with `min_flops = 0.0`).
+    pub fn build_with(
+        ssym: &SupernodalSymbolic,
+        threads: usize,
+        min_flops: f64,
+    ) -> Option<Schedule> {
+        let nsuper = ssym.nsuper();
+        if threads <= 1 || nsuper < 4 {
+            return None;
+        }
+        // supernode tree: parent = supernode of the first sub-diagonal row
+        // (ancestors of s in this tree are exactly s's update targets)
+        let mut parent = vec![TRUNK; nsuper];
+        let mut weight = vec![0.0f64; nsuper];
+        for s in 0..nsuper {
+            if ssym.rows_ptr[s + 1] > ssym.rows_ptr[s] {
+                parent[s] = ssym.sn_of[ssym.rows[ssym.rows_ptr[s]]];
+            }
+            let w = ssym.sn_ptr[s + 1] - ssym.sn_ptr[s];
+            let ld = w + (ssym.rows_ptr[s + 1] - ssym.rows_ptr[s]);
+            weight[s] = (0..w).map(|k| ((ld - k) * (ld - k)) as f64).sum();
+        }
+        let total: f64 = weight.iter().sum();
+        if total < min_flops {
+            return None;
+        }
+        // subtree weights: ascending pass works because parent(s) > s
+        // (a supernode's sub-diagonal rows lie past its last column)
+        let mut subw = weight;
+        for s in 0..nsuper {
+            if parent[s] != TRUNK {
+                subw[parent[s]] += subw[s];
+            }
+        }
+        // children lists (CSR-style), ascending per parent
+        let mut child_ptr = vec![0usize; nsuper + 1];
+        for s in 0..nsuper {
+            if parent[s] != TRUNK {
+                child_ptr[parent[s] + 1] += 1;
+            }
+        }
+        for s in 0..nsuper {
+            child_ptr[s + 1] += child_ptr[s];
+        }
+        let mut children = vec![0usize; child_ptr[nsuper]];
+        let mut cursor = child_ptr.clone();
+        for s in 0..nsuper {
+            if parent[s] != TRUNK {
+                children[cursor[parent[s]]] = s;
+                cursor[parent[s]] += 1;
+            }
+        }
+        // carve tasks: descend from the roots, stopping at the first node
+        // whose whole subtree fits the target (or at a leaf); everything
+        // passed through on the way down is trunk
+        let target = total / (threads * OVERDECOMP) as f64;
+        let mut task_roots: Vec<usize> = Vec::new();
+        let mut is_trunk = vec![false; nsuper];
+        let mut stack: Vec<usize> =
+            (0..nsuper).rev().filter(|&s| parent[s] == TRUNK).collect();
+        while let Some(node) = stack.pop() {
+            let kids = &children[child_ptr[node]..child_ptr[node + 1]];
+            if subw[node] <= target || kids.is_empty() {
+                task_roots.push(node);
+            } else {
+                is_trunk[node] = true;
+                for &c in kids.iter().rev() {
+                    stack.push(c);
+                }
+            }
+        }
+        if task_roots.len() < 2 {
+            return None; // a path etree or one dominant subtree: no parallelism
+        }
+        // supernode → task: descending pass so parents resolve first
+        let mut task_of = vec![TRUNK; nsuper];
+        for (t, &root) in task_roots.iter().enumerate() {
+            task_of[root] = t;
+        }
+        for s in (0..nsuper).rev() {
+            if task_of[s] == TRUNK && !is_trunk[s] && parent[s] != TRUNK {
+                task_of[s] = task_of[parent[s]];
+            }
+        }
+        // LPT: heaviest task first onto the least-loaded worker
+        // (ties → lowest worker index: fully deterministic)
+        let workers = threads.min(task_roots.len());
+        let mut order: Vec<usize> = (0..task_roots.len()).collect();
+        order.sort_by(|&x, &y| {
+            subw[task_roots[y]]
+                .partial_cmp(&subw[task_roots[x]])
+                .expect("finite weights")
+                .then(task_roots[x].cmp(&task_roots[y]))
+        });
+        let mut load = vec![0.0f64; workers];
+        let mut task_worker = vec![0usize; task_roots.len()];
+        for t in order {
+            let mut best = 0usize;
+            for k in 1..workers {
+                if load[k] < load[best] {
+                    best = k;
+                }
+            }
+            task_worker[t] = best;
+            load[best] += subw[task_roots[t]];
+        }
+        let mut owner = vec![TRUNK; nsuper];
+        let mut worker_sns: Vec<Vec<usize>> = vec![Vec::new(); workers];
+        let mut local_pos = vec![0usize; nsuper];
+        for s in 0..nsuper {
+            if task_of[s] != TRUNK {
+                let w = task_worker[task_of[s]];
+                owner[s] = w;
+                local_pos[s] = worker_sns[w].len();
+                worker_sns[w].push(s);
+            }
+        }
+        // invariants: subtree closure + trunk upward-closure
+        debug_assert!((0..nsuper).all(|s| {
+            parent[s] == TRUNK
+                || if owner[s] == TRUNK {
+                    owner[parent[s]] == TRUNK
+                } else {
+                    owner[parent[s]] == TRUNK || owner[parent[s]] == owner[s]
+                }
+        }));
+        // ownership safety, checked directly against the update targets:
+        // a worker's updates must land in its own subtree or the trunk,
+        // and trunk updates must stay in the trunk. The supernode-tree
+        // ancestry argument guarantees this; verifying it per pattern
+        // makes release-mode correctness unconditional — any violation
+        // falls back to the sequential kernel instead of staging into
+        // another worker's panel.
+        for s in 0..nsuper {
+            let o = owner[s];
+            let mut q = ssym.rows_ptr[s];
+            while q < ssym.rows_ptr[s + 1] {
+                let t = ssym.sn_of[ssym.rows[q]];
+                let ot = owner[t];
+                if !(ot == TRUNK || (o != TRUNK && ot == o)) {
+                    debug_assert!(false, "update target outside owner chain");
+                    return None;
+                }
+                let te = ssym.sn_ptr[t + 1];
+                while q < ssym.rows_ptr[s + 1] && ssym.rows[q] < te {
+                    q += 1;
+                }
+            }
+        }
+        Some(Schedule { owner, worker_sns, local_pos })
+    }
+
+    /// Number of phase-1 workers (≥ 2 for any built schedule).
+    pub fn workers(&self) -> usize {
+        self.worker_sns.len()
+    }
+
+    /// Worker owning supernode `s`, or `None` for the trunk.
+    pub fn owner_of(&self, s: usize) -> Option<usize> {
+        let o = self.owner[s];
+        (o != TRUNK).then_some(o)
+    }
+
+    /// Supernodes factored sequentially in the join phase.
+    pub fn trunk_len(&self) -> usize {
+        self.owner.iter().filter(|&&o| o == TRUNK).count()
+    }
+}
+
+/// Parallel counterpart of [`supernodal::factorize`]: factor through the
+/// task-DAG schedule into a fresh factor.
+pub fn factorize_parallel(
+    a: &Csr,
+    ssym: Arc<SupernodalSymbolic>,
+    ws: &mut FactorWorkspace,
+    sched: &Schedule,
+) -> Result<SupernodalFactor, FactorError> {
+    let mut val = vec![0.0f64; ssym.values_len()];
+    factorize_into_parallel(a, &ssym, &mut val, ws, sched)?;
+    Ok(SupernodalFactor::from_parts(ssym, val))
+}
+
+/// Parallel counterpart of [`supernodal::factorize_into`]. Bit-identical
+/// output (see the module docs for the argument); on a non-positive pivot
+/// the run is redone sequentially so the reported error — which row, which
+/// pivot — is exactly the sequential kernel's.
+pub fn factorize_into_parallel(
+    a: &Csr,
+    ssym: &SupernodalSymbolic,
+    val: &mut [f64],
+    ws: &mut FactorWorkspace,
+    sched: &Schedule,
+) -> Result<(), FactorError> {
+    let nw = sched.workers();
+    if nw <= 1 {
+        return supernodal::factorize_into(a, ssym, val, ws);
+    }
+    if a.nrows() != a.ncols() {
+        return Err(FactorError::NotSquare { nrows: a.nrows(), ncols: a.ncols() });
+    }
+    let n = ssym.n();
+    assert_eq!(a.nrows(), n, "matrix/symbolic size mismatch");
+    assert_eq!(val.len(), ssym.values_len(), "value storage size mismatch");
+    assert_eq!(sched.owner.len(), ssym.nsuper(), "schedule/symbolic mismatch");
+    ws.acquire(n);
+    ws.acquire_workers(n, nw);
+    let run = {
+        let (map, ucol, loc, wscr) = ws.parallel_buffers();
+        run_phases(a, ssym, val, sched, map, ucol, loc, &mut wscr[..nw])
+    };
+    match run {
+        Ok(()) => Ok(()),
+        // A panel hit a non-positive pivot. Rerun sequentially: inputs are
+        // bit-identical, so this fails too — at exactly the first failing
+        // column the sequential kernel would report (a concurrent run may
+        // discover a *later* subtree's failure first).
+        Err(_) => supernodal::factorize_into(a, ssym, val, ws),
+    }
+}
+
+/// Assembly, concurrent subtree phase, and ascending replay. Split from
+/// [`factorize_into_parallel`] so the workspace borrows end before the
+/// sequential error fallback reborrows the workspace.
+#[allow(clippy::too_many_arguments)]
+fn run_phases(
+    a: &Csr,
+    ssym: &SupernodalSymbolic,
+    val: &mut [f64],
+    sched: &Schedule,
+    map: &mut [usize],
+    ucol: &mut [f64],
+    loc: &mut [usize],
+    wscr: &mut [WorkerScratch],
+) -> Result<(), FactorError> {
+    let nw = sched.workers();
+    let nsuper = ssym.nsuper();
+    val.fill(0.0);
+
+    // ---- assembly (sequential, same as the sequential kernel) ----
+    assemble(a, ssym, val, map);
+
+    // ---- phase 1: workers factor their subtrees concurrently ----
+    // Panels tile `val` contiguously in supernode order, so a single
+    // split_at_mut walk hands each worker exclusive &mut slices of exactly
+    // the panels it owns — no locks, no unsafe, trunk panels untouched.
+    {
+        let mut lists: Vec<Vec<&mut [f64]>> = (0..nw).map(|_| Vec::new()).collect();
+        let mut rest: &mut [f64] = val;
+        for s in 0..nsuper {
+            let len = ssym.panel_ptr[s + 1] - ssym.panel_ptr[s];
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            if sched.owner[s] != TRUNK {
+                lists[sched.owner[s]].push(head);
+            }
+        }
+        let results: Vec<Result<(), FactorError>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = lists
+                .into_iter()
+                .zip(wscr.iter_mut())
+                .enumerate()
+                .map(|(wid, (panels, scratch))| {
+                    sc.spawn(move || worker_run(ssym, sched, wid, panels, scratch))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("factor worker panicked")).collect()
+        });
+        for r in results {
+            r?;
+        }
+    }
+
+    // ---- phase 2: the join — ascending-index replay restores the
+    // sequential update order on the trunk ----
+    for s in 0..nsuper {
+        let o = sched.owner[s];
+        if o == TRUNK {
+            let js = ssym.sn_ptr[s];
+            let w = ssym.sn_ptr[s + 1] - js;
+            let r = ssym.rows_ptr[s + 1] - ssym.rows_ptr[s];
+            let ld = w + r;
+            let base = ssym.panel_ptr[s];
+            factor_panel(&mut val[base..base + ld * w], ld, w, js)?;
+            if r == 0 {
+                continue;
+            }
+            let (lo, hi) = val.split_at_mut(ssym.panel_ptr[s + 1]);
+            let spanel = &lo[base..];
+            let off = ssym.panel_ptr[s + 1];
+            apply_updates(ssym, s, spanel, map, ucol, loc, |t, pos, v| {
+                debug_assert_eq!(sched.owner[t], TRUNK, "trunk update left the trunk");
+                hi[ssym.panel_ptr[t] - off + pos] -= v;
+            });
+        } else {
+            // this supernode was factored in phase 1; apply its staged
+            // cross-boundary updates now, exactly where the sequential
+            // kernel would have applied them
+            let scratch = &mut wscr[o];
+            if scratch.st_cursor < scratch.st_groups.len()
+                && scratch.st_groups[scratch.st_cursor].0 == s
+            {
+                let end = scratch.st_groups[scratch.st_cursor].1;
+                for k in scratch.st_start..end {
+                    val[scratch.st_pos[k]] -= scratch.st_val[k];
+                }
+                scratch.st_start = end;
+                scratch.st_cursor += 1;
+            }
+        }
+    }
+    debug_assert!(
+        wscr.iter().all(|sc| sc.st_start == sc.st_pos.len()),
+        "unapplied staged updates"
+    );
+    Ok(())
+}
+
+/// Phase-1 body for one worker: factor the owned supernodes in ascending
+/// index order; updates landing in the worker's own subtree are applied
+/// directly (the target panel is in `panels`), updates crossing into the
+/// trunk are staged per source supernode for the replay.
+fn worker_run(
+    ssym: &SupernodalSymbolic,
+    sched: &Schedule,
+    wid: usize,
+    mut panels: Vec<&mut [f64]>,
+    scratch: &mut WorkerScratch,
+) -> Result<(), FactorError> {
+    let WorkerScratch { map, ucol, loc, st_pos, st_val, st_groups, .. } = scratch;
+    let sns = &sched.worker_sns[wid];
+    debug_assert_eq!(sns.len(), panels.len());
+    for i in 0..sns.len() {
+        let s = sns[i];
+        let js = ssym.sn_ptr[s];
+        let w = ssym.sn_ptr[s + 1] - js;
+        let r = ssym.rows_ptr[s + 1] - ssym.rows_ptr[s];
+        let ld = w + r;
+        let (head, tail) = panels.split_at_mut(i + 1);
+        let cur = &mut *head[i];
+        factor_panel(cur, ld, w, js)?;
+        if r == 0 {
+            continue;
+        }
+        let spanel: &[f64] = cur;
+        let mark = st_pos.len();
+        apply_updates(ssym, s, spanel, map, ucol, loc, |t, pos, v| {
+            if sched.owner[t] == wid {
+                // target list position is ahead of i: the work list is
+                // ascending and every target has a larger supernode index
+                tail[sched.local_pos[t] - i - 1][pos] -= v;
+            } else {
+                debug_assert_eq!(sched.owner[t], TRUNK, "update crossed workers");
+                st_pos.push(ssym.panel_ptr[t] + pos);
+                st_val.push(v);
+            }
+        });
+        if st_pos.len() > mark {
+            st_groups.push((s, st_pos.len()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::symbolic::{analyze, fundamental_supernodes};
+    use crate::gen::grid::{laplacian_2d, laplacian_3d};
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg64;
+
+    fn ssym_for(a: &Csr) -> Arc<SupernodalSymbolic> {
+        let sym = analyze(a);
+        let sn_ptr = fundamental_supernodes(&sym);
+        Arc::new(SupernodalSymbolic::build(a, &sym, sn_ptr))
+    }
+
+    fn random_spd(n: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut coo = Coo::square(n);
+        let mut diag = vec![1.0; n];
+        for _ in 0..(3 * n) {
+            let i = rng.next_below(n);
+            let j = rng.next_below(n);
+            if i == j {
+                continue;
+            }
+            let w = 0.1 + rng.next_f64();
+            coo.push_sym(i, j, -w);
+            diag[i] += w;
+            diag[j] += w;
+        }
+        for (i, d) in diag.iter().enumerate() {
+            coo.push(i, i, *d + 0.5);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn small_matrices_stay_sequential() {
+        // below the flop cutoff the builder must decline: serving-sized
+        // requests never pay a spawn
+        let a = laplacian_2d(8, 8);
+        let pap = a.permute_sym(&crate::order::amd(&a));
+        assert!(Schedule::build(&ssym_for(&pap), 8).is_none());
+    }
+
+    #[test]
+    fn path_etree_stays_sequential() {
+        // a banded matrix under the natural order has a path etree:
+        // every non-root supernode has exactly one child, so there is at
+        // most one task no matter the cutoff
+        let a = laplacian_2d(32, 32);
+        assert!(Schedule::build_with(&ssym_for(&a), 4, 0.0).is_none());
+    }
+
+    #[test]
+    fn forest_engages_independent_blocks() {
+        // two disconnected grids: a forest with two roots → two tasks even
+        // though each block alone is a path
+        let b = laplacian_2d(12, 12);
+        let n = b.nrows();
+        let mut coo = Coo::square(2 * n);
+        for i in 0..n {
+            let (cols, vals) = b.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                coo.push(i, j, v);
+                coo.push(i + n, j + n, v);
+            }
+        }
+        let a = coo.to_csr();
+        let sched = Schedule::build_with(&ssym_for(&a), 2, 0.0).expect("forest must engage");
+        assert_eq!(sched.workers(), 2);
+        assert_eq!(sched.trunk_len(), 0, "disconnected blocks need no trunk");
+    }
+
+    #[test]
+    fn partition_is_valid_and_deterministic() {
+        let a = laplacian_3d(8, 8, 8);
+        let pap = a.permute_sym(&crate::order::amd(&a));
+        let ssym = ssym_for(&pap);
+        let sched = Schedule::build_with(&ssym, 4, 0.0).expect("AMD 3D must engage");
+        assert!(sched.workers() >= 2 && sched.workers() <= 4);
+        // work lists ascending, local_pos consistent, owners in range
+        for (w, sns) in sched.worker_sns.iter().enumerate() {
+            for (i, &s) in sns.iter().enumerate() {
+                assert_eq!(sched.owner[s], w);
+                assert_eq!(sched.local_pos[s], i);
+                if i > 0 {
+                    assert!(sns[i - 1] < s, "work list must ascend");
+                }
+            }
+        }
+        // every supernode is either trunk or on exactly one work list
+        let listed: usize = sched.worker_sns.iter().map(Vec::len).sum();
+        assert_eq!(listed + sched.trunk_len(), ssym.nsuper());
+        // deterministic: an identical build yields an identical schedule
+        let again = Schedule::build_with(&ssym, 4, 0.0).unwrap();
+        assert_eq!(sched.owner, again.owner);
+        assert_eq!(sched.worker_sns, again.worker_sns);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = laplacian_3d(6, 6, 6);
+        let amd = crate::order::amd(&g);
+        let cases = [g.permute_sym(&amd), random_spd(150, 5)];
+        for a in &cases {
+            let ssym = ssym_for(a);
+            let mut ws = FactorWorkspace::new();
+            let mut seq = vec![0.0f64; ssym.values_len()];
+            supernodal::factorize_into(a, &ssym, &mut seq, &mut ws).unwrap();
+            for threads in [2, 3, 4, 8] {
+                let Some(sched) = Schedule::build_with(&ssym, threads, 0.0) else {
+                    continue;
+                };
+                let mut par = vec![0.0f64; ssym.values_len()];
+                factorize_into_parallel(a, &ssym, &mut par, &mut ws, &sched).unwrap();
+                let same = seq
+                    .iter()
+                    .zip(&par)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "threads={threads}: parallel factor must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_steady_state_performs_zero_allocations() {
+        let g = laplacian_3d(7, 7, 7);
+        let a = g.permute_sym(&crate::order::amd(&g));
+        let ssym = ssym_for(&a);
+        let sched = Schedule::build_with(&ssym, 4, 0.0).expect("must engage");
+        let mut ws = FactorWorkspace::new();
+        let mut f = factorize_parallel(&a, ssym, &mut ws, &sched).unwrap();
+        let grows = ws.grow_events();
+        for _ in 0..3 {
+            f.refactor_parallel(&a, &mut ws, &sched).unwrap();
+        }
+        assert_eq!(ws.grow_events(), grows, "parallel refactor must not allocate");
+    }
+
+    #[test]
+    fn indefinite_reports_the_sequential_error() {
+        let g = laplacian_3d(6, 6, 6);
+        let a = g.permute_sym(&crate::order::amd(&g));
+        let n = a.nrows();
+        // poison one diagonal entry near the middle of the elimination
+        let bad = n / 2;
+        let mut data = a.data().to_vec();
+        for (k, &j) in a.indices()[a.indptr()[bad]..a.indptr()[bad + 1]]
+            .iter()
+            .enumerate()
+        {
+            if j == bad {
+                data[a.indptr()[bad] + k] = -100.0;
+            }
+        }
+        let poisoned =
+            Csr::from_parts(n, n, a.indptr().to_vec(), a.indices().to_vec(), data);
+        let ssym = ssym_for(&poisoned);
+        let mut ws = FactorWorkspace::new();
+        let mut seq = vec![0.0f64; ssym.values_len()];
+        let e_seq = supernodal::factorize_into(&poisoned, &ssym, &mut seq, &mut ws)
+            .expect_err("poisoned diagonal must fail");
+        let sched = Schedule::build_with(&ssym, 4, 0.0).expect("must engage");
+        let mut par = vec![0.0f64; ssym.values_len()];
+        let e_par = factorize_into_parallel(&poisoned, &ssym, &mut par, &mut ws, &sched)
+            .expect_err("parallel must fail identically");
+        match (e_seq, e_par) {
+            (
+                FactorError::NotPositiveDefinite { row: r1, pivot: p1 },
+                FactorError::NotPositiveDefinite { row: r2, pivot: p2 },
+            ) => {
+                assert_eq!(r1, r2, "same failing row");
+                assert_eq!(p1.to_bits(), p2.to_bits(), "same pivot value");
+            }
+            other => panic!("unexpected error pair: {other:?}"),
+        }
+    }
+}

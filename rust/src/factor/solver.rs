@@ -19,10 +19,12 @@ use std::time::Instant;
 
 use crate::factor::lu::{self, LuFactor, LuOptions, LuSymbolic};
 use crate::factor::numeric::{self, CholFactor, FactorError};
+use crate::factor::sched::{self, Schedule};
 use crate::factor::supernodal::{self, SupernodalFactor};
 use crate::factor::symbolic::{factor_flops, fill_ratio};
 use crate::factor::workspace::{FactorContext, FactorWorkspace, PatternAnalysis};
 use crate::sparse::Csr;
+use crate::util::sync::effective_threads;
 
 /// Tolerance used when auto-detecting matrix symmetry for kind dispatch.
 pub const SYMMETRY_TOL: f64 = 1e-12;
@@ -139,6 +141,10 @@ pub struct DirectSolver {
     order: Vec<usize>,
     analysis: Analysis,
     factor: Factorization,
+    /// Task-DAG schedule for parallel supernodal (re)factorization —
+    /// `Some` iff this solver was prepared with `factor_threads > 1` AND
+    /// the pattern has enough subtree parallelism (`Schedule::build`).
+    sched: Option<Arc<Schedule>>,
     /// Statistics gathered during `prepare`.
     pub stats: SolveStats,
 }
@@ -201,20 +207,54 @@ impl DirectSolver {
         ordering_time: f64,
         ctx: &mut FactorContext,
     ) -> Result<Self, FactorError> {
+        DirectSolver::prepare_kind_threaded(a, order, kind, ordering_time, ctx, 1)
+    }
+
+    /// [`prepare_kind_with`](Self::prepare_kind_with) plus a
+    /// `factor_threads` knob: with more than one (effective) thread and a
+    /// pattern with usable subtree parallelism, the supernodal numeric
+    /// phase runs through the task-DAG scheduler (`factor::sched`) —
+    /// bit-identical factor, and [`refactor`](Self::refactor) reuses the
+    /// same schedule. The request is clamped by the machine's available
+    /// parallelism; patterns the scheduler declines (small, path-etree)
+    /// factor sequentially with no threads spawned.
+    pub fn prepare_kind_threaded(
+        a: &Csr,
+        order: Vec<usize>,
+        kind: FactorKind,
+        ordering_time: f64,
+        ctx: &mut FactorContext,
+        factor_threads: usize,
+    ) -> Result<Self, FactorError> {
+        let threads = effective_threads(factor_threads);
         let t0 = Instant::now();
         let pap = a.permute_sym(&order);
+        let mut sched = None;
         let (analysis, symbolic_time, factor, factor_time, lnnz, fr, flops) = match kind {
             FactorKind::Cholesky => {
                 let analysis = ctx.cache.analyze(&pap);
+                if threads > 1 {
+                    if let Some(ssym) = &analysis.ssym {
+                        sched = Schedule::build(ssym, threads).map(Arc::new);
+                    }
+                }
                 let symbolic_time = t0.elapsed().as_secs_f64();
                 let t1 = Instant::now();
-                let factor = match &analysis.ssym {
-                    Some(ssym) => Factorization::CholSupernodal(supernodal::factorize(
+                let factor = match (&analysis.ssym, &sched) {
+                    (Some(ssym), Some(sched)) => {
+                        Factorization::CholSupernodal(sched::factorize_parallel(
+                            &pap,
+                            ssym.clone(),
+                            &mut ctx.workspace,
+                            sched,
+                        )?)
+                    }
+                    (Some(ssym), None) => Factorization::CholSupernodal(supernodal::factorize(
                         &pap,
                         ssym.clone(),
                         &mut ctx.workspace,
                     )?),
-                    None => Factorization::CholUpLooking(numeric::cholesky_with_ws(
+                    (None, _) => Factorization::CholUpLooking(numeric::cholesky_with_ws(
                         &pap,
                         &analysis.sym,
                         &mut ctx.workspace,
@@ -261,7 +301,13 @@ impl DirectSolver {
             kernel: factor.kernel(),
             factor_kind: kind.label(),
         };
-        Ok(DirectSolver { order, analysis, factor, stats })
+        Ok(DirectSolver { order, analysis, factor, sched, stats })
+    }
+
+    /// Is the task-DAG parallel factorization path active for this
+    /// solver (schedule built and used by prepare/refactor)?
+    pub fn parallel_factor_active(&self) -> bool {
+        self.sched.is_some()
     }
 
     /// Numeric re-factorization for a matrix with the **same pattern** as
@@ -278,7 +324,10 @@ impl DirectSolver {
             (Factorization::CholUpLooking(f), Analysis::Chol(an)) => {
                 numeric::refactor_into(&pap, &an.sym, f, ws)?
             }
-            (Factorization::CholSupernodal(f), Analysis::Chol(_)) => f.refactor(&pap, ws)?,
+            (Factorization::CholSupernodal(f), Analysis::Chol(_)) => match &self.sched {
+                Some(sched) => f.refactor_parallel(&pap, ws, sched)?,
+                None => f.refactor(&pap, ws)?,
+            },
             (Factorization::Lu(f), Analysis::Lu(_)) => {
                 lu::refactor_into(&pap, LuOptions::default(), f, ws)?;
                 self.stats.lnnz = f.lu_nnz();
@@ -442,6 +491,64 @@ mod tests {
         assert_eq!(ctx.cache.misses(), 1, "no LU symbolic re-analysis");
         assert_eq!(ctx.cache.hits(), 4);
         assert_eq!(ctx.workspace.grow_events(), grows, "no scratch re-allocation");
+    }
+
+    #[test]
+    fn threaded_prepare_is_bit_identical_and_allocation_free() {
+        // the tentpole contract at the solver layer: factor_threads > 1
+        // yields the same factor bit for bit, and the steady state
+        // (threaded refactor) performs zero scratch allocations
+        let a = laplacian_3d(12, 12, 12);
+        let order = crate::order::amd(&a);
+        let mut ctx_seq = FactorContext::new();
+        let base = DirectSolver::prepare_kind_threaded(
+            &a, order.clone(), FactorKind::Cholesky, 0.0, &mut ctx_seq, 1,
+        )
+        .unwrap();
+        assert!(!base.parallel_factor_active());
+        let base_chol = base.factor().to_chol().unwrap();
+        for threads in [2, 4] {
+            let mut ctx = FactorContext::new();
+            let mut solver = DirectSolver::prepare_kind_threaded(
+                &a, order.clone(), FactorKind::Cholesky, 0.0, &mut ctx, threads,
+            )
+            .unwrap();
+            assert_eq!(solver.stats.kernel, "supernodal");
+            let chol = solver.factor().to_chol().unwrap();
+            for i in 0..a.nrows() {
+                assert_eq!(base_chol.row(i).0, chol.row(i).0);
+                let same = base_chol
+                    .row(i)
+                    .1
+                    .iter()
+                    .zip(chol.row(i).1)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "threads={threads} row {i}: factor must be bit-identical");
+            }
+            let grows = ctx.workspace.grow_events();
+            for _ in 0..3 {
+                solver.refactor(&a, &mut ctx.workspace).unwrap();
+            }
+            assert_eq!(
+                ctx.workspace.grow_events(),
+                grows,
+                "threaded refactor must not allocate"
+            );
+        }
+    }
+
+    #[test]
+    fn small_matrices_never_build_a_schedule() {
+        // the spawn-cost guard: a serving-sized matrix with a large
+        // factor_threads request still factors sequentially
+        let a = laplacian_2d(8, 8);
+        let order = crate::order::amd(&a);
+        let mut ctx = FactorContext::new();
+        let solver = DirectSolver::prepare_kind_threaded(
+            &a, order, FactorKind::Cholesky, 0.0, &mut ctx, 8,
+        )
+        .unwrap();
+        assert!(!solver.parallel_factor_active(), "below cutoff: no schedule");
     }
 
     #[test]

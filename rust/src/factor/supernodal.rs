@@ -205,26 +205,10 @@ pub fn cholesky(a: &Csr) -> Result<SupernodalFactor, FactorError> {
     factorize(a, ssym, &mut FactorWorkspace::new())
 }
 
-/// Numeric phase into caller-owned storage (`val.len() == values_len()`).
-pub fn factorize_into(
-    a: &Csr,
-    ssym: &SupernodalSymbolic,
-    val: &mut [f64],
-    ws: &mut FactorWorkspace,
-) -> Result<(), FactorError> {
-    if a.nrows() != a.ncols() {
-        return Err(FactorError::NotSquare { nrows: a.nrows(), ncols: a.ncols() });
-    }
-    let n = ssym.n;
-    assert_eq!(a.nrows(), n, "matrix/symbolic size mismatch");
-    assert_eq!(val.len(), ssym.values_len(), "value storage size mismatch");
-    ws.acquire(n);
-    let (map, ucol, loc) = ws.supernodal_buffers();
-    val.fill(0.0);
-    let nsuper = ssym.nsuper();
-
-    // ---- assembly: scatter A's lower columns into the panels ----
-    for s in 0..nsuper {
+/// Assembly: scatter A's lower columns into the packed panels. `val` must
+/// already be zeroed; `map` is the n-sized global→local scratch.
+pub(crate) fn assemble(a: &Csr, ssym: &SupernodalSymbolic, val: &mut [f64], map: &mut [usize]) {
+    for s in 0..ssym.nsuper() {
         let (js, je) = (ssym.sn_ptr[s], ssym.sn_ptr[s + 1]);
         let w = je - js;
         let rows_s = &ssym.rows[ssym.rows_ptr[s]..ssym.rows_ptr[s + 1]];
@@ -247,104 +231,168 @@ pub fn factorize_into(
             }
         }
     }
+}
+
+/// Dense panel factorization of one supernode (`w` columns starting at
+/// global column `js`, leading dimension `ld`): for column k, subtract the
+/// contributions of block columns t < k (one contiguous axpy each), then
+/// pivot and scale — this factors the diagonal block and performs the
+/// blocked triangular solve of the sub-panel at once.
+///
+/// Shared verbatim by the sequential kernel and the parallel scheduler
+/// (`factor::sched`): identical code on identical inputs is what makes the
+/// parallel factor bit-identical to the sequential one.
+pub(crate) fn factor_panel(
+    panel: &mut [f64],
+    ld: usize,
+    w: usize,
+    js: usize,
+) -> Result<(), FactorError> {
+    for k in 0..w {
+        let (done, cur) = panel.split_at_mut(k * ld);
+        let colk = &mut cur[..ld];
+        for t in 0..k {
+            let lkt = done[t * ld + k];
+            if lkt != 0.0 {
+                let colt = &done[t * ld..t * ld + ld];
+                for rr in k..ld {
+                    colk[rr] -= lkt * colt[rr];
+                }
+            }
+        }
+        let piv = colk[k];
+        if piv <= 0.0 {
+            return Err(FactorError::NotPositiveDefinite { row: js + k, pivot: piv });
+        }
+        let d = piv.sqrt();
+        colk[k] = d;
+        let inv = 1.0 / d;
+        for rr in k + 1..ld {
+            colk[rr] *= inv;
+        }
+    }
+    Ok(())
+}
+
+/// Rank-w scatter updates of one factored supernode: C = Lsub·Lsubᵀ hits
+/// ancestor panels at (rows_s[p], rows_s[q]). Target columns are grouped
+/// by their owning supernode so the global→local map is built once per
+/// target; every contribution is handed to `sink(t, pos, v)` meaning
+/// "subtract `v` from position `pos` (relative to `panel_ptr[t]`) of
+/// panel `t`", in a fixed order that does not depend on who the sink is.
+///
+/// The sequential kernel's sink subtracts directly; the parallel
+/// scheduler's sink routes to the worker's own panels or to its staging
+/// log. Same accumulation (`update column` loop), same order, same values
+/// — only the destination differs.
+pub(crate) fn apply_updates<F: FnMut(usize, usize, f64)>(
+    ssym: &SupernodalSymbolic,
+    s: usize,
+    spanel: &[f64],
+    map: &mut [usize],
+    ucol: &mut [f64],
+    loc: &mut [usize],
+    mut sink: F,
+) {
+    let (js, je) = (ssym.sn_ptr[s], ssym.sn_ptr[s + 1]);
+    let w = je - js;
+    let rows_s = &ssym.rows[ssym.rows_ptr[s]..ssym.rows_ptr[s + 1]];
+    let r = rows_s.len();
+    let ld = w + r;
+    let mut q0 = 0usize;
+    while q0 < r {
+        let t = ssym.sn_of[rows_s[q0]];
+        let (ts, te) = (ssym.sn_ptr[t], ssym.sn_ptr[t + 1]);
+        let wt = te - ts;
+        let rows_t = &ssym.rows[ssym.rows_ptr[t]..ssym.rows_ptr[t + 1]];
+        let ld_t = wt + rows_t.len();
+        let mut q1 = q0 + 1;
+        while q1 < r && rows_s[q1] < te {
+            q1 += 1;
+        }
+        for g in ts..te {
+            map[g] = g - ts;
+        }
+        for (kk, &g) in rows_t.iter().enumerate() {
+            map[g] = wt + kk;
+        }
+        for p in q0..r {
+            loc[p] = map[rows_s[p]];
+        }
+        for q in q0..q1 {
+            // ucol[p] = Σ_k Lsub[p][k]·Lsub[q][k], p = q..r — one
+            // contiguous axpy per panel column k
+            for u in ucol[q..r].iter_mut() {
+                *u = 0.0;
+            }
+            for k in 0..w {
+                let colk = &spanel[k * ld + w..k * ld + w + r];
+                let lqk = colk[q];
+                if lqk != 0.0 {
+                    for p in q..r {
+                        ucol[p] += colk[p] * lqk;
+                    }
+                }
+            }
+            let cbase = (rows_s[q] - ts) * ld_t;
+            for p in q..r {
+                sink(t, cbase + loc[p], ucol[p]);
+            }
+        }
+        q0 = q1;
+    }
+}
+
+/// Numeric phase into caller-owned storage (`val.len() == values_len()`).
+pub fn factorize_into(
+    a: &Csr,
+    ssym: &SupernodalSymbolic,
+    val: &mut [f64],
+    ws: &mut FactorWorkspace,
+) -> Result<(), FactorError> {
+    if a.nrows() != a.ncols() {
+        return Err(FactorError::NotSquare { nrows: a.nrows(), ncols: a.ncols() });
+    }
+    let n = ssym.n;
+    assert_eq!(a.nrows(), n, "matrix/symbolic size mismatch");
+    assert_eq!(val.len(), ssym.values_len(), "value storage size mismatch");
+    ws.acquire(n);
+    let (map, ucol, loc) = ws.supernodal_buffers();
+    val.fill(0.0);
+    let nsuper = ssym.nsuper();
+
+    // ---- assembly: scatter A's lower columns into the panels ----
+    assemble(a, ssym, val, map);
 
     // ---- factor each supernode, then push its updates right ----
     for s in 0..nsuper {
         let (js, je) = (ssym.sn_ptr[s], ssym.sn_ptr[s + 1]);
         let w = je - js;
-        let rows_s = &ssym.rows[ssym.rows_ptr[s]..ssym.rows_ptr[s + 1]];
-        let r = rows_s.len();
+        let r = ssym.rows_ptr[s + 1] - ssym.rows_ptr[s];
         let ld = w + r;
         let base = ssym.panel_ptr[s];
-
-        // dense panel factorization: for column k, subtract the
-        // contributions of block columns t < k (one contiguous axpy each),
-        // then pivot and scale — this factors the diagonal block and
-        // performs the blocked triangular solve of the sub-panel at once.
-        {
-            let panel = &mut val[base..base + ld * w];
-            for k in 0..w {
-                let (done, cur) = panel.split_at_mut(k * ld);
-                let colk = &mut cur[..ld];
-                for t in 0..k {
-                    let lkt = done[t * ld + k];
-                    if lkt != 0.0 {
-                        let colt = &done[t * ld..t * ld + ld];
-                        for rr in k..ld {
-                            colk[rr] -= lkt * colt[rr];
-                        }
-                    }
-                }
-                let piv = colk[k];
-                if piv <= 0.0 {
-                    return Err(FactorError::NotPositiveDefinite { row: js + k, pivot: piv });
-                }
-                let d = piv.sqrt();
-                colk[k] = d;
-                let inv = 1.0 / d;
-                for rr in k + 1..ld {
-                    colk[rr] *= inv;
-                }
-            }
-        }
-
-        // rank-w scatter updates: C = Lsub·Lsubᵀ hits ancestor panels at
-        // (rows_s[p], rows_s[q]). Group target columns by their owning
-        // supernode so the global→local map is built once per target.
+        factor_panel(&mut val[base..base + ld * w], ld, w, js)?;
         if r == 0 {
             continue;
         }
         let (lo, hi) = val.split_at_mut(ssym.panel_ptr[s + 1]);
         let spanel = &lo[base..];
         let off = ssym.panel_ptr[s + 1];
-        let mut q0 = 0usize;
-        while q0 < r {
-            let t = ssym.sn_of[rows_s[q0]];
-            let (ts, te) = (ssym.sn_ptr[t], ssym.sn_ptr[t + 1]);
-            let wt = te - ts;
-            let rows_t = &ssym.rows[ssym.rows_ptr[t]..ssym.rows_ptr[t + 1]];
-            let ld_t = wt + rows_t.len();
-            let mut q1 = q0 + 1;
-            while q1 < r && rows_s[q1] < te {
-                q1 += 1;
-            }
-            for g in ts..te {
-                map[g] = g - ts;
-            }
-            for (kk, &g) in rows_t.iter().enumerate() {
-                map[g] = wt + kk;
-            }
-            for p in q0..r {
-                loc[p] = map[rows_s[p]];
-            }
-            let tbase = ssym.panel_ptr[t] - off;
-            for q in q0..q1 {
-                // ucol[p] = Σ_k Lsub[p][k]·Lsub[q][k], p = q..r — one
-                // contiguous axpy per panel column k
-                for u in ucol[q..r].iter_mut() {
-                    *u = 0.0;
-                }
-                for k in 0..w {
-                    let colk = &spanel[k * ld + w..k * ld + w + r];
-                    let lqk = colk[q];
-                    if lqk != 0.0 {
-                        for p in q..r {
-                            ucol[p] += colk[p] * lqk;
-                        }
-                    }
-                }
-                let cbase = tbase + (rows_s[q] - ts) * ld_t;
-                for p in q..r {
-                    hi[cbase + loc[p]] -= ucol[p];
-                }
-            }
-            q0 = q1;
-        }
+        apply_updates(ssym, s, spanel, map, ucol, loc, |t, pos, v| {
+            hi[ssym.panel_ptr[t] - off + pos] -= v;
+        });
     }
     Ok(())
 }
 
 impl SupernodalFactor {
+    /// Assemble a factor from a symbolic handle and a packed value array
+    /// (the parallel scheduler's constructor).
+    pub(crate) fn from_parts(ssym: Arc<SupernodalSymbolic>, val: Vec<f64>) -> SupernodalFactor {
+        debug_assert_eq!(val.len(), ssym.values_len());
+        SupernodalFactor { ssym, val }
+    }
+
     pub fn n(&self) -> usize {
         self.ssym.n
     }
@@ -369,6 +417,19 @@ impl SupernodalFactor {
     pub fn refactor(&mut self, a: &Csr, ws: &mut FactorWorkspace) -> Result<(), FactorError> {
         let ssym = self.ssym.clone();
         factorize_into(a, &ssym, &mut self.val, ws)
+    }
+
+    /// Like [`refactor`](Self::refactor), but through the task-DAG
+    /// scheduler (`sched` must have been built for this factor's
+    /// symbolic structure). Bit-identical to the sequential refactor.
+    pub fn refactor_parallel(
+        &mut self,
+        a: &Csr,
+        ws: &mut FactorWorkspace,
+        sched: &crate::factor::sched::Schedule,
+    ) -> Result<(), FactorError> {
+        let ssym = self.ssym.clone();
+        crate::factor::sched::factorize_into_parallel(a, &ssym, &mut self.val, ws, sched)
     }
 
     /// Solve L·y = b.

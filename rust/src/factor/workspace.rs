@@ -49,8 +49,38 @@ pub struct FactorWorkspace {
     pub(crate) lu_stack: Vec<usize>,
     /// DFS per-depth resume position (LU reachability)
     pub(crate) lu_pstack: Vec<usize>,
+    /// per-worker scratch for the parallel supernodal scheduler
+    /// (`factor::sched`); empty until a parallel factorization runs
+    pub(crate) workers: Vec<WorkerScratch>,
     grow_events: u64,
     factorizations: u64,
+}
+
+/// Scratch owned by one task-DAG worker: its own scatter buffers (map /
+/// ucol / loc, same roles as the sequential kernel's) plus the staging
+/// log for rank-k updates that cross the subtree boundary into the trunk.
+/// The log is `(position, value)` pairs in the packed value array, grouped
+/// by source supernode (`st_groups` records `(source, end offset)` in
+/// ascending source order) so the join can replay each group exactly when
+/// the sequential schedule would have applied it.
+///
+/// Buffers grow on first use and are only cleared — never shrunk —
+/// afterwards, so the steady state (repeated refactorization of one
+/// pattern at one thread count) allocates nothing: the staging log's
+/// size is a function of pattern + schedule alone, so once grown its
+/// capacity is always sufficient.
+#[derive(Debug, Default)]
+pub(crate) struct WorkerScratch {
+    pub(crate) map: Vec<usize>,
+    pub(crate) ucol: Vec<f64>,
+    pub(crate) loc: Vec<usize>,
+    pub(crate) st_pos: Vec<usize>,
+    pub(crate) st_val: Vec<f64>,
+    pub(crate) st_groups: Vec<(usize, usize)>,
+    /// replay cursor into `st_groups` (reset per acquire)
+    pub(crate) st_cursor: usize,
+    /// replay start offset into `st_pos`/`st_val` (reset per acquire)
+    pub(crate) st_start: usize,
 }
 
 /// The probe pool hands each scoped worker an exclusive
@@ -120,6 +150,45 @@ impl FactorWorkspace {
         &mut self,
     ) -> (&mut [usize], &mut [f64], &mut [usize]) {
         (&mut self.map, &mut self.ucol, &mut self.loc)
+    }
+
+    /// Make `count` worker scratches usable for an n×n parallel
+    /// factorization: grow what's missing (counted in
+    /// [`grow_events`](Self::grow_events)) and reset every staging log.
+    /// Clearing keeps capacity, so repeating the same (pattern, schedule)
+    /// stages into already-grown logs — zero allocations in steady state.
+    pub(crate) fn acquire_workers(&mut self, n: usize, count: usize) {
+        let mut grew = false;
+        if self.workers.len() < count {
+            grew = true;
+            self.workers.resize_with(count, WorkerScratch::default);
+        }
+        for wsc in self.workers[..count].iter_mut() {
+            if wsc.map.len() < n {
+                grew = true;
+                wsc.map.resize(n, 0);
+                wsc.ucol.resize(n, 0.0);
+                wsc.loc.resize(n, 0);
+            }
+            wsc.st_pos.clear();
+            wsc.st_val.clear();
+            wsc.st_groups.clear();
+            wsc.st_cursor = 0;
+            wsc.st_start = 0;
+        }
+        if grew {
+            self.grow_events += 1;
+        }
+    }
+
+    /// Disjoint borrows for the parallel driver: the main scatter buffers
+    /// (assembly + trunk replay) alongside the per-worker scratches.
+    /// Call [`acquire`](Self::acquire) and
+    /// [`acquire_workers`](Self::acquire_workers) first.
+    pub(crate) fn parallel_buffers(
+        &mut self,
+    ) -> (&mut [usize], &mut [f64], &mut [usize], &mut [WorkerScratch]) {
+        (&mut self.map, &mut self.ucol, &mut self.loc, &mut self.workers)
     }
 
     /// Disjoint borrows of the up-looking buffers (x, mark, pattern).
@@ -394,6 +463,22 @@ mod tests {
         assert_eq!(ws.factorizations(), 3);
         ws.acquire(200);
         assert_eq!(ws.grow_events(), 2);
+    }
+
+    #[test]
+    fn worker_scratch_grows_once() {
+        let mut ws = FactorWorkspace::new();
+        ws.acquire(100);
+        assert_eq!(ws.grow_events(), 1);
+        ws.acquire_workers(100, 4);
+        assert_eq!(ws.grow_events(), 2);
+        ws.workers[0].st_pos.push(7); // a staged entry from a "run"
+        ws.acquire_workers(100, 4);
+        ws.acquire_workers(60, 2); // smaller: no growth
+        assert_eq!(ws.grow_events(), 2, "repeat acquires must not grow");
+        assert!(ws.workers[0].st_pos.is_empty(), "staging log must reset");
+        ws.acquire_workers(100, 8); // more workers: grows
+        assert_eq!(ws.grow_events(), 3);
     }
 
     #[test]

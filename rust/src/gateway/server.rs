@@ -296,6 +296,7 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                 req.eval_fill,
                 req.factor_kind,
                 req.opt_budget,
+                req.factor_threads,
             );
             match submitted {
                 Ok(rx) => {
@@ -505,6 +506,7 @@ mod tests {
             eval_fill: true,
             factor_kind: None,
             opt_budget: None,
+            factor_threads: None,
             matrix: laplacian_2d(8, 8),
         };
         match c.request(&req).unwrap() {

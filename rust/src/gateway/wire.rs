@@ -107,6 +107,9 @@ pub struct WireRequest {
     pub eval_fill: bool,
     pub factor_kind: Option<FactorKind>,
     pub opt_budget: Option<OptBudget>,
+    /// parallel-factorization width for the native-optimizer path (`None`
+    /// uses the service's configured default)
+    pub factor_threads: Option<usize>,
     pub matrix: Csr,
 }
 
@@ -123,6 +126,7 @@ pub struct WireResult {
     pub factor_kind: Option<String>,
     pub opt_iters: usize,
     pub probe_threads: usize,
+    pub factor_threads: usize,
     pub levels_refined: usize,
     pub order: Vec<usize>,
 }
@@ -237,6 +241,7 @@ fn put_str16(buf: &mut Vec<u8>, s: &str) {
 const FLAG_EVAL_FILL: u8 = 1 << 0;
 const FLAG_HAS_KIND: u8 = 1 << 1;
 const FLAG_HAS_BUDGET: u8 = 1 << 2;
+const FLAG_HAS_FACTOR_THREADS: u8 = 1 << 3;
 
 /// Encode a reorder request payload. Fails (rather than truncating) when
 /// the matrix cannot fit the frame-level payload cap.
@@ -269,6 +274,9 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>, String> {
     if req.opt_budget.is_some() {
         flags |= FLAG_HAS_BUDGET;
     }
+    if req.factor_threads.is_some() {
+        flags |= FLAG_HAS_FACTOR_THREADS;
+    }
     buf.push(flags);
     if let Some(kind) = req.factor_kind {
         buf.push(match kind {
@@ -283,6 +291,9 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>, String> {
         buf.push(b.adaptive_rho as u8);
         buf.push(b.time_ms.is_some() as u8);
         put_u64(&mut buf, b.time_ms.unwrap_or(0));
+    }
+    if let Some(t) = req.factor_threads {
+        put_u32(&mut buf, t.min(u32::MAX as usize) as u32);
     }
     put_u32(&mut buf, a.nrows() as u32);
     put_u32(&mut buf, a.ncols() as u32);
@@ -338,6 +349,11 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, DecodeFailure> {
     } else {
         None
     };
+    let factor_threads = if flags & FLAG_HAS_FACTOR_THREADS != 0 {
+        Some(r.u32().map_err(&fail)? as usize)
+    } else {
+        None
+    };
     let nrows = r.u32().map_err(&fail)? as usize;
     let ncols = r.u32().map_err(&fail)? as usize;
     let nnz = r.u32().map_err(&fail)? as usize;
@@ -385,6 +401,7 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, DecodeFailure> {
         eval_fill: flags & FLAG_EVAL_FILL != 0,
         factor_kind,
         opt_budget,
+        factor_threads,
         matrix,
     })
 }
@@ -404,6 +421,7 @@ pub fn encode_result(id: u64, res: &crate::coordinator::ReorderResult) -> Vec<u8
     put_str16(&mut buf, res.factor_kind.unwrap_or(""));
     put_u32(&mut buf, res.opt_iters as u32);
     put_u32(&mut buf, res.probe_threads as u32);
+    put_u32(&mut buf, res.factor_threads as u32);
     put_u32(&mut buf, res.levels_refined as u32);
     put_u32(&mut buf, res.order.len() as u32);
     for &v in &res.order {
@@ -425,6 +443,7 @@ pub fn decode_result(payload: &[u8]) -> Result<WireResult, String> {
     let factor_kind = r.str16()?;
     let opt_iters = r.u32()? as usize;
     let probe_threads = r.u32()? as usize;
+    let factor_threads = r.u32()? as usize;
     let levels_refined = r.u32()? as usize;
     let n = r.u32()? as usize;
     if n > MAX_WIRE_N {
@@ -448,6 +467,7 @@ pub fn decode_result(payload: &[u8]) -> Result<WireResult, String> {
         factor_kind: (!factor_kind.is_empty()).then_some(factor_kind),
         opt_iters,
         probe_threads,
+        factor_threads,
         levels_refined,
         order,
     })
@@ -536,6 +556,7 @@ mod tests {
                 adaptive_rho: true,
                 time_ms: Some(250),
             }),
+            factor_threads: Some(3),
             matrix: laplacian_2d(6, 6),
         }
     }
@@ -554,6 +575,7 @@ mod tests {
         assert_eq!((b.outer, b.refine, b.level_refine), (2, 8, 3));
         assert!(b.adaptive_rho);
         assert_eq!(b.time_ms, Some(250));
+        assert_eq!(got.factor_threads, Some(3));
         assert_eq!(got.matrix, req.matrix);
     }
 
@@ -566,6 +588,7 @@ mod tests {
             eval_fill: false,
             factor_kind: None,
             opt_budget: None,
+            factor_threads: None,
             matrix: Csr::identity(3),
         };
         let payload = encode_request(&req).unwrap();
@@ -573,6 +596,7 @@ mod tests {
         assert_eq!(got.method, req.method);
         assert_eq!(got.factor_kind, None);
         assert!(got.opt_budget.is_none());
+        assert_eq!(got.factor_threads, None);
         assert!(!got.eval_fill);
         assert_eq!(got.matrix, req.matrix);
     }
@@ -612,6 +636,7 @@ mod tests {
             eval_fill: false,
             factor_kind: None,
             opt_budget: None,
+            factor_threads: None,
             matrix: Csr::identity(4),
         };
         let good = encode_request(&req).unwrap();
@@ -648,6 +673,7 @@ mod tests {
             factor_kind: Some("lu"),
             opt_iters: 6,
             probe_threads: 2,
+            factor_threads: 4,
             levels_refined: 3,
         };
         let payload = encode_result(99, &res);
@@ -660,6 +686,7 @@ mod tests {
         assert_eq!(got.fill_ratio, Some(1.75));
         assert_eq!(got.factor_kind.as_deref(), Some("lu"));
         assert_eq!((got.opt_iters, got.probe_threads, got.levels_refined), (6, 2, 3));
+        assert_eq!(got.factor_threads, 4);
         assert_eq!(got.order, vec![2, 0, 1, 3]);
     }
 
@@ -675,6 +702,7 @@ mod tests {
             factor_kind: None,
             opt_iters: 0,
             probe_threads: 0,
+            factor_threads: 0,
             levels_refined: 0,
         };
         let got = decode_result(&encode_result(1, &res)).unwrap();

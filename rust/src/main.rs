@@ -59,6 +59,8 @@ PFM OPTIONS:
     --refine <k>           refinement steps        [default: 60]
     --level-refine <k>     V-cycle per-level refinement steps [default: 8]
     --threads <k>          probe-pool workers (same ordering at any k) [default: 1]
+    --factor-threads <k>   parallel-factorization width (bit-identical factors at
+                           any k; also accepted by serve and remote) [default: 1]
     --adaptive-rho         residual-balancing ADMM penalty (mu=10, tau=2)
     --budget-ms <ms>       wall-clock cap
     --check-fill           exit nonzero unless optimized fill <= natural fill
@@ -124,6 +126,7 @@ struct Opts {
     refine: Option<usize>,
     level_refine: Option<usize>,
     threads: Option<usize>,
+    factor_threads: Option<usize>,
     adaptive_rho: bool,
     budget_ms: Option<u64>,
     check_fill: bool,
@@ -152,6 +155,7 @@ impl Opts {
             refine: None,
             level_refine: None,
             threads: None,
+            factor_threads: None,
             adaptive_rho: false,
             budget_ms: None,
             check_fill: false,
@@ -185,6 +189,7 @@ impl Opts {
                 "--refine" => o.refine = it.next().and_then(|s| s.parse().ok()),
                 "--level-refine" => o.level_refine = it.next().and_then(|s| s.parse().ok()),
                 "--threads" => o.threads = it.next().and_then(|s| s.parse().ok()),
+                "--factor-threads" => o.factor_threads = it.next().and_then(|s| s.parse().ok()),
                 "--adaptive-rho" => o.adaptive_rho = true,
                 "--budget-ms" => o.budget_ms = it.next().and_then(|s| s.parse().ok()),
                 "--check-fill" => o.check_fill = true,
@@ -390,14 +395,16 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
     };
     let opt = PfmOptimizer::new(budget, seed)
         .with_init(init)
-        .with_threads(o.threads.unwrap_or(1));
+        .with_threads(o.threads.unwrap_or(1))
+        .with_factor_threads(o.factor_threads.unwrap_or(1));
     let t0 = std::time::Instant::now();
     let rep = opt.optimize(&a);
     let dt = t0.elapsed().as_secs_f64();
     // the optimizer already evaluated the identity as its free candidate
     let natural = rep.natural_objective;
     println!(
-        "matrix {} {}x{} nnz={} [{}] | native PFM ({:?} init, {} probe threads): \
+        "matrix {} {}x{} nnz={} [{}] | native PFM ({:?} init, {} probe threads, \
+         {} factor threads): \
          factor nnz {:.0} (init {:.0}, natural {:.0}) | {} ADMM iters{}, {} refine steps, \
          {} levels refined, {} evals, {:.1} ms",
         name,
@@ -407,6 +414,7 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
         rep.kind.label(),
         opt.init,
         rep.probe_threads,
+        opt.factor_threads,
         rep.objective,
         rep.init_objective,
         natural,
@@ -434,6 +442,7 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
             .set("refine_steps", rep.refine_steps)
             .set("levels_refined", rep.levels_refined)
             .set("probe_threads", rep.probe_threads)
+            .set("factor_threads", opt.factor_threads)
             .set("evals", rep.evals)
             .set("wall_ms", dt * 1e3);
         std::fs::write(format!("{}/pfm_report.json", o.out), json.to_string())
@@ -471,6 +480,7 @@ fn cmd_serve(o: &Opts) -> Result<(), String> {
         service: ServiceConfig {
             artifact_dir: o.artifacts.clone(),
             persist,
+            factor_threads: o.factor_threads.unwrap_or(1),
             ..Default::default()
         },
         rate: o.rate.unwrap_or(0.0),
@@ -537,6 +547,7 @@ fn cmd_remote(o: &Opts) -> Result<(), String> {
         eval_fill: true,
         factor_kind: None,
         opt_budget: None,
+        factor_threads: o.factor_threads,
         matrix: a,
     };
     let addr = resolve_addr(&o.addr)?;

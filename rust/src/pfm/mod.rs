@@ -53,6 +53,7 @@ use crate::pfm::objective::DenseWindow;
 use crate::pfm::perm::{rank_scores, standardize};
 use crate::sparse::Csr;
 use crate::util::rng::Pcg64;
+use crate::util::sync::composed_threads;
 
 /// Lanczos budget of the spectral init — matches the `S_e` baseline and
 /// the runtime's spectral fallback exactly, so the optimizer's init
@@ -128,6 +129,14 @@ pub struct PfmOptimizer {
     /// a wall-clock budget expires mid-run (where results are timing-
     /// dependent at *any* thread count; see `pfm::probes`)
     pub probe_threads: usize,
+    /// parallel-factorization width each probe may use (`factor::sched`).
+    /// The probe objective is symbolic for Cholesky and sequential for LU
+    /// today, so this knob's effect *here* is the oversubscription cap:
+    /// the effective pool width is `composed_threads(probe_threads,
+    /// factor_threads)` so probes × factors never exceed the machine. The
+    /// numeric win itself lands on the solver/serving path
+    /// (`DirectSolver::prepare_kind_threaded`).
+    pub factor_threads: usize,
 }
 
 impl PfmOptimizer {
@@ -139,6 +148,7 @@ impl PfmOptimizer {
             params: AdmmParams::default(),
             dense_cap: DEFAULT_DENSE_CAP,
             probe_threads: 1,
+            factor_threads: 1,
         }
     }
 
@@ -154,6 +164,14 @@ impl PfmOptimizer {
     /// still holds; see `pfm::probes`).
     pub fn with_threads(mut self, threads: usize) -> PfmOptimizer {
         self.probe_threads = threads.max(1);
+        self
+    }
+
+    /// Set the per-probe parallel-factorization width (see the
+    /// [`factor_threads`](Self::factor_threads) field docs: today this
+    /// caps the probe pool so the product never oversubscribes).
+    pub fn with_factor_threads(mut self, threads: usize) -> PfmOptimizer {
+        self.factor_threads = threads.max(1);
         self
     }
 
@@ -186,7 +204,7 @@ impl PfmOptimizer {
                 evals: usize::from(n > 0),
                 trace: vec![objective],
                 coarse_n: None,
-                probe_threads: self.probe_threads.max(1),
+                probe_threads: composed_threads(self.probe_threads, self.factor_threads),
                 kind: FactorKind::for_matrix(a),
             };
         }
@@ -200,7 +218,8 @@ impl PfmOptimizer {
         };
         let gm = proxy.as_ref().unwrap_or(a);
 
-        let mut pool = ProbePool::new(self.probe_threads);
+        let mut pool =
+            ProbePool::new(composed_threads(self.probe_threads, self.factor_threads));
         let mut rng = Pcg64::new(self.seed);
         let mut y = match self.init {
             ScoreInit::Spectral => {
@@ -524,7 +543,7 @@ mod tests {
             assert_eq!(rep.objective, base.objective);
             assert_eq!(rep.trace, base.trace, "threads={threads} changed the trace");
             assert_eq!(rep.evals, base.evals);
-            assert_eq!(rep.probe_threads, threads);
+            assert_eq!(rep.probe_threads, crate::util::sync::effective_threads(threads));
         }
     }
 

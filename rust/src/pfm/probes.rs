@@ -53,6 +53,7 @@ use std::time::Instant;
 use crate::factor::{FactorKind, FactorWorkspace};
 use crate::pfm::objective::eval_order;
 use crate::sparse::Csr;
+use crate::util::sync::effective_threads;
 
 /// Two-sided SPSA directions (and segment-move candidates) generated per
 /// refinement step. Fixed — the batch shape must not depend on the thread
@@ -77,9 +78,12 @@ pub struct ProbePool {
 }
 
 impl ProbePool {
-    /// Pool with `threads` workers (clamped to ≥ 1).
+    /// Pool with `threads` workers, clamped to `[1, available_parallelism]`
+    /// — a request beyond the machine would only oversubscribe (results
+    /// are bit-identical at any width, so clamping is free).
+    /// [`threads`](Self::threads) reports the *effective* width.
     pub fn new(threads: usize) -> ProbePool {
-        let threads = threads.max(1);
+        let threads = effective_threads(threads);
         ProbePool { threads, workspaces: FactorWorkspace::pool(threads), evals: 0 }
     }
 

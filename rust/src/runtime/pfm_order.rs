@@ -149,15 +149,17 @@ impl Learned {
         seed: u64,
         budget: Option<OptBudget>,
     ) -> Result<OrderOutcome, RuntimeError> {
-        self.order_detailed_shared(rt, a, seed, budget, 1, None)
+        self.order_detailed_shared(rt, a, seed, budget, 1, 1, None)
     }
 
     /// [`order_detailed`](Self::order_detailed) with the coordinator's
     /// extra levers: a probe-pool width for the native optimizer's
     /// refinement passes (quality-neutral — results are bit-identical at
-    /// any width unless a wall-clock deadline expires mid-run) and an
-    /// optional [`SharedPrep`] computed once for an identical-matrix
-    /// batch.
+    /// any width unless a wall-clock deadline expires mid-run), a
+    /// parallel-factorization width per probe (composed with the pool
+    /// width so their product never oversubscribes the machine; see
+    /// `PfmOptimizer::factor_threads`), and an optional [`SharedPrep`]
+    /// computed once for an identical-matrix batch.
     pub fn order_detailed_shared(
         &self,
         rt: &mut PfmRuntime,
@@ -165,6 +167,7 @@ impl Learned {
         seed: u64,
         budget: Option<OptBudget>,
         probe_threads: usize,
+        factor_threads: usize,
         prep: Option<&SharedPrep>,
     ) -> Result<OrderOutcome, RuntimeError> {
         if rt.covers(self.variant(), a.nrows()) {
@@ -180,7 +183,8 @@ impl Learned {
         if let Some(init) = self.native_init() {
             let opt = PfmOptimizer::new(budget.unwrap_or_default(), seed)
                 .with_init(init)
-                .with_threads(probe_threads);
+                .with_threads(probe_threads)
+                .with_factor_threads(factor_threads);
             let rep = opt.optimize_shared(a, prep);
             return Ok(OrderOutcome {
                 order: rep.order,

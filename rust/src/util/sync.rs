@@ -15,10 +15,59 @@ pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// What `std::thread::available_parallelism` reports, defaulting to 1 when
+/// the platform can't say (the documented failure mode for restricted
+/// environments — a safe, sequential default).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Clamp a requested worker count to what the machine can actually run:
+/// at least 1, at most [`available_parallelism`]. Every pool constructor
+/// goes through this so a config asking for 64 threads on a 4-core box
+/// spawns 4 workers instead of oversubscribing — and metrics report the
+/// clamped (*effective*) value, not the request.
+pub fn effective_threads(requested: usize) -> usize {
+    requested.max(1).min(available_parallelism())
+}
+
+/// Clamp an *outer* worker count whose workers each run `inner`-way
+/// parallel work inside (probe pool × parallel factorization): the
+/// product `outer × inner` must not exceed the machine, so the outer
+/// count is capped at `available_parallelism / inner` (≥ 1).
+pub fn composed_threads(outer: usize, inner: usize) -> usize {
+    let budget = (available_parallelism() / inner.max(1)).max(1);
+    outer.max(1).min(budget)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn thread_clamps_are_bounded_and_monotone() {
+        let avail = available_parallelism();
+        assert!(avail >= 1);
+        assert_eq!(effective_threads(0), 1);
+        assert_eq!(effective_threads(1), 1);
+        assert_eq!(effective_threads(usize::MAX), avail);
+        for req in 1..=2 * avail {
+            let eff = effective_threads(req);
+            assert!(eff >= 1 && eff <= avail && eff <= req);
+        }
+        // composition: outer × inner never exceeds the machine (except the
+        // guaranteed minimum of one outer worker)
+        for outer in 1..=2 * avail {
+            for inner in 1..=2 * avail {
+                let eff = composed_threads(outer, inner);
+                assert!(eff >= 1 && eff <= outer);
+                assert!(eff == 1 || eff * inner <= avail);
+            }
+        }
+        // inner = 1 degenerates to the plain clamp
+        assert_eq!(composed_threads(usize::MAX, 1), avail);
+    }
 
     #[test]
     fn recovers_a_poisoned_mutex() {

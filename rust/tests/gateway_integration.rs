@@ -40,6 +40,7 @@ fn request(id: u64, method: Method, matrix: Csr) -> WireRequest {
         eval_fill: false,
         factor_kind: None,
         opt_budget: None,
+        factor_threads: None,
         matrix,
     }
 }
@@ -370,9 +371,11 @@ fn warm_store_survives_gateway_restart_and_snapshot_admin_compacts() {
     let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
     let mut req = request(1, Method::Learned(Learned::Pfm), a.clone());
     req.opt_budget = Some(quick);
+    req.factor_threads = Some(2);
     let first = match c.request(&req).unwrap() {
         Reply::Result(res) => {
             assert_eq!(res.provenance.as_deref(), Some("native"));
+            assert_eq!(res.factor_threads, 2, "native run reports the requested width");
             res
         }
         other => panic!("unexpected reply {other:?}"),
@@ -393,6 +396,7 @@ fn warm_store_survives_gateway_restart_and_snapshot_admin_compacts() {
         Reply::Result(res) => {
             assert_eq!(res.provenance.as_deref(), Some("warm"));
             assert_eq!(res.order, first.order, "warm hit must be bit-identical");
+            assert_eq!(res.factor_threads, 0, "warm hits run no factorization");
         }
         other => panic!("unexpected reply {other:?}"),
     }

@@ -4,7 +4,8 @@
 
 use pfm_reorder::factor::lu::{self, LuOptions};
 use pfm_reorder::factor::{
-    analyze, cholesky_with, factor_flops, fill_ratio_of_order, supernodal, FactorWorkspace,
+    analyze, cholesky_with, factor_flops, factorize_into_parallel, fill_ratio_of_order,
+    fundamental_supernodes, supernodal, FactorWorkspace, Schedule,
 };
 use pfm_reorder::gen::{ProblemClass, Symmetry};
 use pfm_reorder::graph::Graph;
@@ -733,6 +734,132 @@ fn prop_pfm_hierarchy_prolongation_valid_on_all_8_classes() {
                     "{class:?}: aggregate-internal order flipped for ({u},{v})"
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Etree task-DAG parallel factorization invariants
+// ---------------------------------------------------------------------------
+
+/// SPD version of a class instance: symmetric classes are diagonally
+/// dominant already; the two unsymmetric classes are symmetrized and
+/// diagonally shifted until dominant.
+fn spd_of(a: &Csr) -> Csr {
+    if a.is_symmetric(1e-12) {
+        return a.clone();
+    }
+    let s = a.symmetrize();
+    let n = s.nrows();
+    let mut shift = 0.0f64;
+    for i in 0..n {
+        let (cols, vals) = s.row(i);
+        let mut off = 0.0;
+        let mut diag = 0.0;
+        for (&j, &v) in cols.iter().zip(vals) {
+            if j == i {
+                diag = v;
+            } else {
+                off += v.abs();
+            }
+        }
+        shift = shift.max(off - diag);
+    }
+    let mut coo = Coo::square(n);
+    for i in 0..n {
+        let (cols, vals) = s.row(i);
+        let mut has_diag = false;
+        for (&j, &v) in cols.iter().zip(vals) {
+            if j == i {
+                coo.push(i, i, v + shift + 1.0);
+                has_diag = true;
+            } else {
+                coo.push(i, j, v);
+            }
+        }
+        if !has_diag {
+            coo.push(i, i, shift + 1.0);
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_parallel_factor_bit_identical_on_all_8_classes() {
+    // the tentpole invariant: for every problem class, under both the
+    // natural and the AMD ordering, the task-DAG parallel factorization is
+    // bit-identical to the sequential supernodal kernel at every thread
+    // count (the flop cutoff is forced to 0 so small instances engage)
+    use pfm_reorder::factor::supernodal::SupernodalSymbolic;
+    let classes: Vec<ProblemClass> = ProblemClass::ALL
+        .iter()
+        .chain(&ProblemClass::UNSYMMETRIC)
+        .copied()
+        .collect();
+    forall(10, |rng| {
+        let class = classes[rng.next_below(classes.len())];
+        let n = 80 + rng.next_below(120);
+        let a0 = spd_of(&class.generate(n, rng.next_u64()));
+        let mut engaged = 0usize;
+        for (olabel, a) in [("natural", a0.clone()), ("amd", a0.permute_sym(&amd(&a0)))] {
+            let sym = analyze(&a);
+            let ssym = SupernodalSymbolic::build(&a, &sym, fundamental_supernodes(&sym));
+            let mut ws = FactorWorkspace::new();
+            let mut seq = vec![0.0f64; ssym.values_len()];
+            supernodal::factorize_into(&a, &ssym, &mut seq, &mut ws)
+                .map_err(|e| format!("{class:?}/{olabel}: sequential: {e}"))?;
+            for threads in [1usize, 2, 4, 8] {
+                // threads=1 and path etrees decline: the parallel entry
+                // point must then be the sequential kernel verbatim
+                let Some(sched) = Schedule::build_with(&ssym, threads, 0.0) else {
+                    continue;
+                };
+                engaged += 1;
+                let mut par = vec![0.0f64; ssym.values_len()];
+                factorize_into_parallel(&a, &ssym, &mut par, &mut ws, &sched)
+                    .map_err(|e| format!("{class:?}/{olabel} threads={threads}: {e}"))?;
+                if !seq.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()) {
+                    return Err(format!(
+                        "{class:?}/{olabel}: threads={threads} not bit-identical"
+                    ));
+                }
+            }
+        }
+        // AMD must have engaged at least once — otherwise this test
+        // silently degenerates to sequential-vs-sequential
+        if engaged == 0 {
+            return Err(format!("{class:?} n={n}: no thread count engaged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_schedule_declines_serving_sized_and_path_etrees() {
+    use pfm_reorder::factor::sched::PAR_MIN_FLOPS;
+    use pfm_reorder::factor::supernodal::SupernodalSymbolic;
+    forall(12, |rng| {
+        // (a) serving-sized work below the flop cutoff never spawns, even
+        // on a wide AMD etree with many threads requested
+        let class = ProblemClass::ALL[rng.next_below(6)];
+        let a = spd_of(&class.generate(40 + rng.next_below(60), rng.next_u64()));
+        let a = a.permute_sym(&amd(&a));
+        let sym = analyze(&a);
+        if (factor_flops(&sym) as f64) < PAR_MIN_FLOPS {
+            let ssym = SupernodalSymbolic::build(&a, &sym, fundamental_supernodes(&sym));
+            if Schedule::build(&ssym, 8).is_some() {
+                return Err(format!("small {class:?} must stay sequential"));
+            }
+        }
+        // (b) a banded matrix under the natural order has a path etree —
+        // no subtree width at any cutoff, at any thread count
+        let side = 12 + rng.next_below(20);
+        let b = pfm_reorder::gen::grid::laplacian_2d(side, side);
+        let bsym = analyze(&b);
+        let bssym = SupernodalSymbolic::build(&b, &bsym, fundamental_supernodes(&bsym));
+        if Schedule::build_with(&bssym, 2 + rng.next_below(7), 0.0).is_some() {
+            return Err(format!("path etree (side {side}) must stay sequential"));
         }
         Ok(())
     });
