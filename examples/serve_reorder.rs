@@ -71,17 +71,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("\nsubmitted {submitted} requests in {submit_wall:.2}s; all {ok} completed in {wall:.2}s");
+    println!(
+        "\nsubmitted {submitted} requests in {submit_wall:.2}s; all {ok} completed in {wall:.2}s"
+    );
     println!("throughput: {:.1} req/s", ok as f64 / wall);
-    println!("\nper-method latency:");
-    for (name, s) in service.metrics.latency_stats() {
+    println!("\nper-method latency (log-bucketed histograms, O(1) memory):");
+    for (name, h) in service.metrics.latency_histograms() {
         println!(
-            "  {:<22} n={:<4} mean {:>8.2} ms   p95 {:>8.2} ms   max {:>8.2} ms",
+            "  {:<22} n={:<4} mean {:>8.2} ms   p95 {:>8.2} ms   p99 {:>8.2} ms   max {:>8.2} ms",
             name,
-            s.n,
-            s.mean * 1e3,
-            s.p95 * 1e3,
-            s.max * 1e3
+            h.count(),
+            h.mean() * 1e3,
+            h.quantile(0.95) * 1e3,
+            h.quantile(0.99) * 1e3,
+            h.max() * 1e3
         );
     }
     println!(

@@ -4,14 +4,22 @@
 //! mutex is taken through `lock_unpoisoned`, so a panic inside any holder
 //! (worker, network thread, gateway connection) can never make the metrics
 //! sink itself start panicking.
+//!
+//! Memory is O(1) in request count: latencies go into fixed-bucket
+//! [`Histogram`]s (one per method plus one for queue wait), batches into
+//! a running sum/count, and completed request traces into a bounded
+//! [`TraceRing`]. Nothing here grows per sample — asserted by
+//! `memory_is_bounded_in_request_count` below.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
+use std::time::Duration;
 
+use crate::obs::hist::Histogram;
+use crate::obs::trace::{RequestTrace, TraceRing};
 use crate::runtime::Provenance;
 use crate::util::json::Json;
 use crate::util::sync::lock_unpoisoned;
-use crate::util::timer::Stats;
 
 /// Why the gateway answered a request with a `Busy` frame instead of a
 /// result: the service's bounded queue was full, or the client exceeded
@@ -24,13 +32,17 @@ pub enum BusyKind {
 
 #[derive(Default)]
 struct Inner {
-    /// per-method latency samples (seconds)
-    latencies: HashMap<&'static str, Vec<f64>>,
+    /// per-method latency histograms (seconds) — fixed memory per method
+    latencies: HashMap<&'static str, Histogram>,
+    /// submit → start-of-compute wait, separate from service time so
+    /// queue saturation and slow optimization are distinguishable
+    queue_wait: Histogram,
     /// per-method request counts
     completed: HashMap<&'static str, usize>,
     errors: usize,
-    /// batch sizes observed by the network executor
-    batch_sizes: Vec<usize>,
+    /// network-executor batch occupancy, as a running sum/count
+    batch_sum: usize,
+    batch_count: usize,
     fallbacks: usize,
     /// orderings served by the native in-Rust PFM optimizer — with
     /// `fallbacks` this makes spectral-fallback rows distinguishable from
@@ -81,6 +93,8 @@ struct Inner {
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// bounded ring of recent request traces (`admin trace`)
+    traces: TraceRing,
 }
 
 impl Metrics {
@@ -99,10 +113,11 @@ impl Metrics {
         provenance: Option<Provenance>,
     ) {
         let mut m = lock_unpoisoned(&self.inner);
-        m.latencies.entry(method).or_default().push(latency);
+        m.latencies.entry(method).or_default().record(latency);
         *m.completed.entry(method).or_default() += 1;
         if batch > 0 {
-            m.batch_sizes.push(batch);
+            m.batch_sum += batch;
+            m.batch_count += 1;
         }
         match provenance {
             Some(Provenance::SpectralFallback) => m.fallbacks += 1,
@@ -110,6 +125,12 @@ impl Metrics {
             Some(Provenance::WarmStore) => m.p_warm_hits += 1,
             Some(Provenance::Network) | None => {}
         }
+    }
+
+    /// Record how long a request sat between submission and the start of
+    /// its compute (dispatcher hop + pool channel included).
+    pub fn record_queue_wait(&self, secs: f64) {
+        lock_unpoisoned(&self.inner).queue_wait.record(secs);
     }
 
     pub fn record_error(&self) {
@@ -326,43 +347,91 @@ impl Metrics {
         lock_unpoisoned(&self.inner).p_errors
     }
 
-    /// Latency stats per method.
-    pub fn latency_stats(&self) -> Vec<(&'static str, Stats)> {
+    /// Per-method latency histograms, sorted by method label.
+    pub fn latency_histograms(&self) -> Vec<(&'static str, Histogram)> {
         let m = lock_unpoisoned(&self.inner);
-        let mut out: Vec<(&'static str, Stats)> = m
-            .latencies
-            .iter()
-            .filter(|(_, v)| !v.is_empty())
-            .map(|(k, v)| (*k, Stats::from_samples(v.clone())))
-            .collect();
+        let mut out: Vec<(&'static str, Histogram)> =
+            m.latencies.iter().map(|(k, h)| (*k, h.clone())).collect();
         out.sort_by_key(|(k, _)| *k);
         out
+    }
+
+    /// Per-method completion counts, sorted by method label.
+    pub fn completed_by_method(&self) -> Vec<(&'static str, usize)> {
+        let m = lock_unpoisoned(&self.inner);
+        let mut out: Vec<(&'static str, usize)> =
+            m.completed.iter().map(|(k, v)| (*k, *v)).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// The submit→compute-start wait histogram.
+    pub fn queue_wait_histogram(&self) -> Histogram {
+        lock_unpoisoned(&self.inner).queue_wait.clone()
     }
 
     /// Mean network batch occupancy.
     pub fn mean_batch(&self) -> f64 {
         let m = lock_unpoisoned(&self.inner);
-        if m.batch_sizes.is_empty() {
+        if m.batch_count == 0 {
             return 0.0;
         }
-        m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+        m.batch_sum as f64 / m.batch_count as f64
+    }
+
+    /// Re-arm the trace ring from `ServiceConfig` (capacity + slow
+    /// threshold), applied once at service start.
+    pub fn configure_traces(&self, capacity: usize, slow_threshold: Duration) {
+        self.traces.configure(capacity, slow_threshold);
+    }
+
+    /// Fold one completed request's stage spans into the trace ring.
+    pub fn record_trace(&self, trace: RequestTrace) {
+        self.traces.push(trace);
+    }
+
+    /// Late-append the gateway's encode span to an already-recorded
+    /// trace (looked up by coordinator request id).
+    pub fn annotate_trace_encode(&self, id: u64, secs: f64) {
+        self.traces.annotate_encode(id, secs);
+    }
+
+    /// Recent traces, newest first (tests, debugging).
+    pub fn recent_traces(&self) -> Vec<RequestTrace> {
+        self.traces.recent()
+    }
+
+    /// The `admin trace` payload.
+    pub fn traces_json(&self) -> Json {
+        self.traces.to_json()
+    }
+
+    /// Prometheus text exposition of counters + histograms
+    /// (`admin metrics --text`).
+    pub fn prometheus_text(&self) -> String {
+        crate::obs::export::prometheus_text(self)
+    }
+
+    /// Bytes of state whose size could conceivably scale with request
+    /// count: the fixed-bucket histograms, the batch accumulators, and
+    /// the bounded trace ring. The bounded-memory test records tens of
+    /// thousands of samples and asserts this number stops moving.
+    pub fn sample_state_bytes(&self) -> usize {
+        let m = lock_unpoisoned(&self.inner);
+        let hist = std::mem::size_of::<Histogram>();
+        m.latencies.len() * hist                    // per-method histograms
+            + hist                                  // queue_wait
+            + 2 * std::mem::size_of::<usize>()      // batch sum/count
+            + self.traces.state_bytes()             // bounded ring
     }
 
     /// Export everything as JSON.
     pub fn to_json(&self) -> Json {
-        let stats = self.latency_stats();
         let mut per_method = Json::obj();
-        for (name, s) in stats {
-            per_method = per_method.set(
-                name,
-                Json::obj()
-                    .set("count", s.n)
-                    .set("mean_s", s.mean)
-                    .set("p95_s", s.p95)
-                    .set("max_s", s.max),
-            );
+        for (name, h) in self.latency_histograms() {
+            per_method = per_method.set(name, h.to_json());
         }
-        let (gateway, persist) = {
+        let (gateway, persist, queue_wait) = {
             let m = lock_unpoisoned(&self.inner);
             let gateway = Json::obj()
                 .set("connections", m.gw_connections)
@@ -381,7 +450,7 @@ impl Metrics {
                 .set("segments_quarantined", m.p_quarantined)
                 .set("records_rejected", m.p_rejected)
                 .set("persist_errors", m.p_errors);
-            (gateway, persist)
+            (gateway, persist, m.queue_wait.to_json())
         };
         Json::obj()
             .set("completed", self.total_completed())
@@ -399,6 +468,7 @@ impl Metrics {
             .set("factor_threads", self.factor_threads())
             .set("gateway", gateway)
             .set("persist", persist)
+            .set("queue_wait", queue_wait)
             .set("latency", per_method)
     }
 }
@@ -406,6 +476,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::trace::{Stage, StageLog};
 
     #[test]
     fn records_and_reports() {
@@ -421,12 +492,65 @@ mod tests {
         assert_eq!(m.fallbacks(), 1);
         assert_eq!(m.native_optimized(), 1);
         assert!((m.mean_batch() - 10.0 / 3.0).abs() < 1e-9);
-        let stats = m.latency_stats();
-        assert_eq!(stats.len(), 3);
+        let hists = m.latency_histograms();
+        assert_eq!(hists.len(), 3);
+        let pfm = &hists.iter().find(|(k, _)| *k == "PFM").unwrap().1;
+        assert_eq!(pfm.count(), 2);
+        assert!((pfm.max() - 0.02).abs() < 1e-12);
         let json = m.to_json().to_string();
+        // seed-era keys stay; the histogram summary adds the quantile ladder
         assert!(json.contains("\"completed\":4"));
         assert!(json.contains("\"native_optimizer\":1"));
         assert!(json.contains("PFM"));
+        assert!(json.contains("\"mean_s\":"));
+        assert!(json.contains("\"p95_s\":"));
+        assert!(json.contains("\"p99_s\":"));
+        assert!(json.contains("\"p999_s\":"));
+        assert!(json.contains("\"max_s\":"));
+        assert!(json.contains("\"queue_wait\":"));
+    }
+
+    #[test]
+    fn queue_wait_is_tracked_separately_from_service_time() {
+        let m = Metrics::new();
+        m.record("PFM", 0.5, 0, None); // slow service…
+        m.record_queue_wait(0.001); // …but an empty queue
+        m.record_queue_wait(0.002);
+        let qw = m.queue_wait_histogram();
+        assert_eq!(qw.count(), 2);
+        assert!(qw.max() < 0.01);
+        let pfm = &m.latency_histograms()[0].1;
+        assert!(pfm.max() >= 0.5);
+    }
+
+    #[test]
+    fn memory_is_bounded_in_request_count() {
+        let m = Metrics::new();
+        m.configure_traces(16, Duration::from_millis(500));
+        let methods = ["PFM", "AMD", "RCM"];
+        let warm = |m: &Metrics, rounds: usize, salt: u64| {
+            for i in 0..rounds {
+                let method = methods[i % methods.len()];
+                m.record(method, 1e-4 * ((i as u64 + salt) % 977) as f64, i % 5, None);
+                m.record_queue_wait(1e-5 * (i % 131) as f64);
+                let mut log = StageLog::new();
+                log.add(Stage::QueueWait, 1e-5);
+                log.add(Stage::Order, 1e-4);
+                m.record_trace(log.finish(i as u64, method));
+            }
+        };
+        warm(&m, 1_000, 1);
+        let after_1k = m.sample_state_bytes();
+        warm(&m, 50_000, 7);
+        let after_51k = m.sample_state_bytes();
+        assert_eq!(
+            after_1k, after_51k,
+            "metrics state grew with request count: {after_1k} -> {after_51k} bytes"
+        );
+        // sanity: everything was actually recorded
+        assert_eq!(m.total_completed(), 51_000);
+        assert_eq!(m.queue_wait_histogram().count(), 51_000);
+        assert_eq!(m.recent_traces().len(), 16);
     }
 
     #[test]
@@ -524,5 +648,24 @@ mod tests {
         let m = Metrics::new();
         m.record_dequeued();
         assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn trace_ring_and_text_exposition_surface() {
+        let m = Metrics::new();
+        m.record("AMD", 0.004, 0, None);
+        m.record_queue_wait(0.0001);
+        let mut log = StageLog::new();
+        log.add(Stage::QueueWait, 0.0001);
+        log.add(Stage::Order, 0.004);
+        m.record_trace(log.finish(42, "AMD"));
+        m.annotate_trace_encode(42, 0.0002);
+        let tj = m.traces_json().to_string();
+        assert!(tj.contains("\"id\":42"));
+        assert!(tj.contains("\"queue_wait\""));
+        assert!(tj.contains("\"encode\""));
+        let text = m.prometheus_text();
+        assert!(text.contains("pfm_request_latency_seconds_bucket"));
+        assert!(text.contains("pfm_queue_wait_seconds_count 1"));
     }
 }

@@ -4,6 +4,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::factor::FactorKind;
+use crate::obs::trace::{Span, StageLog};
 use crate::order::Classical;
 use crate::pfm::OptBudget;
 use crate::runtime::{Learned, Provenance};
@@ -106,6 +107,10 @@ pub struct ReorderRequest {
     /// oversubscribes the machine (`util::sync::composed_threads`).
     pub factor_threads: Option<usize>,
     pub submitted: Instant,
+    /// stage spans collected along the serving path — started by whoever
+    /// accepted the request (gateway frame receipt or in-process submit)
+    /// and appended to by the worker that serves it
+    pub stages: StageLog,
     pub respond: mpsc::Sender<ReorderResponse>,
 }
 
@@ -146,6 +151,9 @@ pub struct ReorderResult {
     /// intermediate V-cycle levels the native optimizer refined (0 unless
     /// the multilevel path engaged with a per-level budget)
     pub levels_refined: usize,
+    /// per-stage breakdown of where this request spent its time (see
+    /// `obs::trace::Stage`); the sum of span durations is ≤ `latency`
+    pub stages: Vec<Span>,
 }
 
 #[cfg(test)]

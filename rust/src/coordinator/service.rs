@@ -41,6 +41,7 @@ use crate::coordinator::request::{
 use crate::factor::lu::{self, LuOptions};
 use crate::factor::symbolic::fill_ratio;
 use crate::factor::{FactorContext, FactorKind};
+use crate::obs::trace::{Stage, StageLog};
 use crate::pfm::{prepare_shared, OptBudget, SharedPrep, DEFAULT_DENSE_CAP};
 use crate::runtime::PfmRuntime;
 use crate::sparse::Csr;
@@ -90,6 +91,13 @@ pub struct ServiceConfig {
     ///
     /// [`Provenance::WarmStore`]: crate::runtime::Provenance
     pub persist: Option<crate::persist::PersistConfig>,
+    /// How many recent request traces the bounded ring keeps for
+    /// `admin trace` (`obs::trace::TraceRing`). Memory is O(capacity),
+    /// never O(requests).
+    pub trace_capacity: usize,
+    /// Wall-time threshold above which a request's trace is flagged
+    /// slow in the ring (and counted in the `slow` counter).
+    pub slow_threshold: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -105,6 +113,8 @@ impl Default for ServiceConfig {
             factor_threads: 1,
             fault_seed: None,
             persist: None,
+            trace_capacity: crate::obs::trace::DEFAULT_TRACE_CAPACITY,
+            slow_threshold: crate::obs::trace::DEFAULT_SLOW_THRESHOLD,
         }
     }
 }
@@ -128,6 +138,7 @@ impl ReorderService {
         let metrics = Arc::new(Metrics::new());
         metrics.set_probe_threads(config.probe_threads.max(1));
         metrics.set_factor_threads(effective_threads(config.factor_threads));
+        metrics.configure_traces(config.trace_capacity, config.slow_threshold);
         let shutdown = Arc::new(AtomicBool::new(false));
 
         // warm-start store: recover before serving, so the very first
@@ -160,7 +171,7 @@ impl ReorderService {
                 std::thread::Builder::new()
                     .name("pfm-dispatch".into())
                     .spawn(move || {
-                        while let Ok(req) = rx.recv() {
+                        while let Ok(mut req) = rx.recv() {
                             metrics.record_dequeued();
                             if shutdown.load(Ordering::Relaxed) {
                                 // an already-received request must not be
@@ -173,7 +184,7 @@ impl ReorderService {
                                 continue;
                             }
                             if let Some(store) = &store {
-                                if serve_warm_hit(store, &req, &metrics) {
+                                if serve_warm_hit(store, &mut req, &metrics) {
                                     continue;
                                 }
                             }
@@ -210,10 +221,16 @@ impl ReorderService {
                                 let guard = lock_unpoisoned(&crx);
                                 guard.recv()
                             };
-                            let Ok(req) = req else { break };
+                            let Ok(mut req) = req else { break };
                             let Method::Classical(method) = req.method else {
                                 unreachable!("dispatcher routed learned to classical pool")
                             };
+                            // queue wait ends where compute starts — the
+                            // histogram is what makes saturation visible
+                            // separately from slow ordering work
+                            let wait = req.submitted.elapsed().as_secs_f64();
+                            metrics.record_queue_wait(wait);
+                            req.stages.add(Stage::QueueWait, wait);
                             // panic isolation: a fault while serving one
                             // request is answered as an error on that
                             // request; the worker (and its siblings) keep
@@ -222,7 +239,8 @@ impl ReorderService {
                                 if fault_seed == Some(req.seed) {
                                     panic!("injected worker fault (ServiceConfig::fault_seed)");
                                 }
-                                let order = method.order(&req.matrix);
+                                let order =
+                                    req.stages.time(Stage::Order, || method.order(&req.matrix));
                                 // latency = queue wait + ordering compute;
                                 // the optional fill evaluation is
                                 // bookkeeping and must not skew
@@ -235,6 +253,7 @@ impl ReorderService {
                                         req.factor_kind,
                                         &mut fctx,
                                         &metrics,
+                                        &mut req.stages,
                                     );
                                     (Some(f), Some(k))
                                 } else {
@@ -245,6 +264,9 @@ impl ReorderService {
                             match work {
                                 Ok((order, latency, fill, fill_kind)) => {
                                     metrics.record(method.label(), latency, 0, None);
+                                    metrics.record_trace(
+                                        req.stages.finish(req.id, method.label()),
+                                    );
                                     let _ = req.respond.send(ReorderResponse {
                                         id: req.id,
                                         result: Ok(ReorderResult {
@@ -259,6 +281,7 @@ impl ReorderService {
                                             probe_threads: 0,
                                             factor_threads: 0,
                                             levels_refined: 0,
+                                            stages: req.stages.spans().to_vec(),
                                         }),
                                     });
                                 }
@@ -409,6 +432,7 @@ impl ReorderService {
             opt_budget,
             factor_threads,
             submitted: Instant::now(),
+            stages: StageLog::new(),
             respond: rtx,
         };
         if self.tx.send(req).is_ok() {
@@ -436,6 +460,35 @@ impl ReorderService {
         opt_budget: Option<OptBudget>,
         factor_threads: Option<usize>,
     ) -> Result<mpsc::Receiver<ReorderResponse>, TrySubmitError> {
+        self.try_submit_traced(
+            matrix,
+            method,
+            seed,
+            eval_fill,
+            factor_kind,
+            opt_budget,
+            factor_threads,
+            StageLog::new(),
+        )
+    }
+
+    /// [`try_submit_with_budget`](Self::try_submit_with_budget) with a
+    /// caller-provided stage log. The gateway starts the log at frame
+    /// receipt (decode + rate-limit spans already recorded), so the
+    /// resulting trace covers the whole wire round-trip, not just the
+    /// coordinator's part.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_submit_traced(
+        &self,
+        matrix: Csr,
+        method: Method,
+        seed: u64,
+        eval_fill: bool,
+        factor_kind: Option<FactorKind>,
+        opt_budget: Option<OptBudget>,
+        factor_threads: Option<usize>,
+        stages: StageLog,
+    ) -> Result<mpsc::Receiver<ReorderResponse>, TrySubmitError> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = ReorderRequest {
@@ -448,6 +501,7 @@ impl ReorderService {
             opt_budget,
             factor_threads,
             submitted: Instant::now(),
+            stages,
             respond: rtx,
         };
         match self.tx.try_send(req) {
@@ -521,25 +575,43 @@ fn panic_message(p: &(dyn Any + Send)) -> String {
 /// (pivoting included) for unsymmetric ones, with the structural A+Aᵀ
 /// bound as the fallback if the numeric phase hits a singular column.
 /// Records the cache hit/miss in the service metrics. Returns the fill
-/// and the label of the kind that ran.
+/// and the label of the kind that ran. The symbolic analysis and (for
+/// LU) the numeric factorization are timed into `stages` so the trace
+/// shows whether fill evaluation rode the cache or paid for analysis.
 fn eval_fill(
     a: &Csr,
     order: &[usize],
     kind: Option<FactorKind>,
     fctx: &mut FactorContext,
     metrics: &Metrics,
+    stages: &mut StageLog,
 ) -> (f64, &'static str) {
     let kind = kind.unwrap_or_else(|| FactorKind::for_matrix(a));
     let pap = a.permute_sym(order);
     let hits_before = fctx.cache.hits();
+    let symbolic_stage = |fctx: &FactorContext| {
+        if fctx.cache.hits() > hits_before {
+            Stage::SymbolicHit
+        } else {
+            Stage::SymbolicMiss
+        }
+    };
     let fill = match kind {
         FactorKind::Cholesky => {
+            let t0 = Instant::now();
             let analysis = fctx.cache.analyze(&pap);
-            fill_ratio(&pap, &analysis.sym)
+            let fill = fill_ratio(&pap, &analysis.sym);
+            stages.add(symbolic_stage(fctx), t0.elapsed().as_secs_f64());
+            fill
         }
         FactorKind::Lu => {
+            let t0 = Instant::now();
             let lsym = fctx.cache.analyze_lu(&pap);
-            match lu::factorize(&pap, &lsym, LuOptions::default(), &mut fctx.workspace) {
+            stages.add(symbolic_stage(fctx), t0.elapsed().as_secs_f64());
+            let t1 = Instant::now();
+            let factored = lu::factorize(&pap, &lsym, LuOptions::default(), &mut fctx.workspace);
+            stages.add(Stage::NumericFactor, t1.elapsed().as_secs_f64());
+            match factored {
                 Ok(f) => lu::lu_fill_ratio(&pap, &f),
                 Err(_) => lsym.lu_nnz_bound as f64 / pap.nnz() as f64,
             }
@@ -556,22 +628,31 @@ fn eval_fill(
 /// optimizer across seeds and restarts is the point of the store.
 fn serve_warm_hit(
     store: &Arc<Mutex<crate::persist::OrderingStore>>,
-    req: &ReorderRequest,
+    req: &mut ReorderRequest,
     metrics: &Metrics,
 ) -> bool {
     let Method::Learned(l) = req.method else { return false };
     if !l.has_native_path() {
         return false;
     }
+    let wait = req.submitted.elapsed().as_secs_f64();
+    let t0 = Instant::now();
     let hit = {
         let guard = lock_unpoisoned(store);
         guard
             .lookup(l.variant(), &req.matrix)
             .map(|rec| (rec.order.clone(), rec.factor_kind, rec.fill_ratio))
     };
+    let lookup_secs = t0.elapsed().as_secs_f64();
     let Some((order, kind, fill)) = hit else { return false };
+    // spans only materialize on a hit: a miss continues into a worker,
+    // which records its own queue wait at compute start
+    metrics.record_queue_wait(wait);
+    req.stages.add(Stage::QueueWait, wait);
+    req.stages.add(Stage::WarmLookup, lookup_secs);
     let latency = req.submitted.elapsed().as_secs_f64();
     metrics.record(l.label(), latency, 0, Some(crate::runtime::Provenance::WarmStore));
+    metrics.record_trace(req.stages.finish(req.id, l.label()));
     // the stored fill evaluation is reused only when the request would
     // accept it: fill was asked for, a stored value exists, and the
     // request didn't pin a different factorization kind
@@ -595,6 +676,7 @@ fn serve_warm_hit(
             probe_threads: 0,
             factor_threads: 0,
             levels_refined: 0,
+            stages: req.stages.spans().to_vec(),
         }),
     });
     true
@@ -733,11 +815,16 @@ fn network_loop(
                     }
                 }
             }
-            for (i, req) in reqs.into_iter().enumerate() {
+            for (i, mut req) in reqs.into_iter().enumerate() {
                 let Method::Learned(l) = req.method else { unreachable!() };
                 let budget = req.opt_budget.unwrap_or(cfg.opt_budget);
                 let fthreads = req.factor_threads.unwrap_or(cfg.factor_threads).max(1);
                 let prep = pgroup_of.get(i).and_then(|&g| preps[g].as_ref());
+                // queue wait ends here — batching delay included, which is
+                // exactly what the separate histogram is for
+                let wait = req.submitted.elapsed().as_secs_f64();
+                metrics.record_queue_wait(wait);
+                req.stages.add(Stage::QueueWait, wait);
                 // panic isolation, same contract as the classical pool: a
                 // fault while serving one learned request becomes an error
                 // reply on that request; the network thread keeps draining
@@ -745,6 +832,7 @@ fn network_loop(
                     if cfg.fault_seed == Some(req.seed) {
                         panic!("injected network-thread fault (ServiceConfig::fault_seed)");
                     }
+                    let t0 = Instant::now();
                     l.order_detailed_shared(
                         &mut runtime,
                         &req.matrix,
@@ -755,6 +843,29 @@ fn network_loop(
                         prep,
                     )
                     .map(|out| {
+                        let order_secs = t0.elapsed().as_secs_f64();
+                        // native runs expose their optimizer phases; the
+                        // un-phased remainder (init, prolongation, identity
+                        // evals) stays visible as an `order` span so the
+                        // spans still account for the whole ordering time
+                        let ph = out.phases;
+                        let phased = ph.coarsen_s + ph.admm_s + ph.refine_s;
+                        if phased > 0.0 {
+                            if ph.coarsen_s > 0.0 {
+                                req.stages.add(Stage::Coarsen, ph.coarsen_s);
+                            }
+                            if ph.admm_s > 0.0 {
+                                req.stages.add(Stage::Admm, ph.admm_s);
+                            }
+                            if ph.refine_s > 0.0 {
+                                req.stages.add(Stage::Refine, ph.refine_s);
+                            }
+                            if order_secs > phased {
+                                req.stages.add(Stage::Order, order_secs - phased);
+                            }
+                        } else {
+                            req.stages.add(Stage::Order, order_secs);
+                        }
                         // latency before fill evaluation (see worker note)
                         let latency = req.submitted.elapsed().as_secs_f64();
                         let (fill, fill_kind) = if req.eval_fill {
@@ -764,6 +875,7 @@ fn network_loop(
                                 req.factor_kind,
                                 &mut fctx,
                                 &metrics,
+                                &mut req.stages,
                             );
                             (Some(f), Some(k))
                         } else {
@@ -792,6 +904,7 @@ fn network_loop(
                     Ok((out, latency, fill, fill_kind)) => {
                         metrics.record(l.label(), latency, batch_size, Some(out.provenance));
                         metrics.record_levels_refined(out.levels_refined);
+                        metrics.record_trace(req.stages.finish(req.id, l.label()));
                         let native_run =
                             out.provenance == crate::runtime::Provenance::NativeOptimizer;
                         // persist accepted native results *before* the
@@ -843,6 +956,7 @@ fn network_loop(
                                 },
                                 factor_threads: if native_run { fthreads } else { 0 },
                                 levels_refined: out.levels_refined,
+                                stages: req.stages.spans().to_vec(),
                             }),
                         });
                     }
@@ -903,6 +1017,56 @@ mod tests {
         assert_eq!(res.method, "AMD");
         assert!(res.latency >= 0.0);
         assert_eq!(service.metrics.total_completed(), 1);
+    }
+
+    #[test]
+    fn requests_carry_stage_breakdowns_and_land_in_the_trace_ring() {
+        let service = ReorderService::start(ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-svc-trace".into(),
+            ..Default::default()
+        });
+        let a = laplacian_2d(9, 9);
+        let t0 = Instant::now();
+        let res = service
+            .reorder_blocking_with_fill(a, Method::Classical(Classical::Amd), 1)
+            .unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let labels: Vec<&str> = res.stages.iter().map(|s| s.stage.label()).collect();
+        assert!(labels.contains(&"queue_wait"), "stages: {labels:?}");
+        assert!(labels.contains(&"order"), "stages: {labels:?}");
+        assert!(
+            labels.contains(&"symbolic_hit") || labels.contains(&"symbolic_miss"),
+            "fill evaluation must surface a symbolic span: {labels:?}"
+        );
+        let sum: f64 = res.stages.iter().map(|s| s.secs).sum();
+        assert!(sum <= wall + 1e-9, "span sum {sum} exceeds wall {wall}");
+        assert!(sum <= res.latency + 1.0, "span sum should be near latency");
+        // the same spans are visible through the trace ring
+        let traces = service.metrics.recent_traces();
+        assert_eq!(traces.len(), 1);
+        assert!(traces[0].spans.iter().any(|s| s.stage.label() == "order"));
+        assert!(traces[0].spans.iter().map(|s| s.secs).sum::<f64>() <= traces[0].wall_s + 1e-9);
+        // queue wait went into its own histogram, separate from latency
+        assert_eq!(service.metrics.queue_wait_histogram().count(), 1);
+        // a learned request reports optimizer-phase spans
+        let budget = OptBudget { outer: 1, refine: 4, time_ms: None, ..OptBudget::default() };
+        let rx = service.submit_with_budget(
+            laplacian_2d(18, 18),
+            Method::Learned(crate::runtime::Learned::Pfm),
+            1,
+            false,
+            None,
+            Some(budget),
+        );
+        let res = rx.recv().unwrap().result.unwrap();
+        let labels: Vec<&str> = res.stages.iter().map(|s| s.stage.label()).collect();
+        assert!(
+            labels.contains(&"admm") && labels.contains(&"refine"),
+            "native run must expose optimizer phases: {labels:?}"
+        );
+        let sum: f64 = res.stages.iter().map(|s| s.secs).sum();
+        assert!(sum <= res.latency + 1e-6, "span sum {sum} exceeds latency {}", res.latency);
     }
 
     #[test]

@@ -53,6 +53,14 @@ impl GatewayClient {
         self.stream.set_write_timeout(timeout)
     }
 
+    /// Clone the underlying connection so one thread can keep sending
+    /// while another receives (the gateway's per-connection replies are
+    /// FIFO, so a dedicated receiver can correlate them in order). Both
+    /// halves share the socket and its timeouts.
+    pub fn try_clone(&self) -> io::Result<GatewayClient> {
+        Ok(GatewayClient { stream: self.stream.try_clone()? })
+    }
+
     /// Send one reorder request frame (does not wait for the reply).
     pub fn send_request(&mut self, req: &WireRequest) -> Result<(), String> {
         let payload = wire::encode_request(req)?;

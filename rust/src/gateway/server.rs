@@ -32,7 +32,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     BusyKind, Metrics, ReorderResponse, ReorderService, ServiceConfig, TrySubmitError,
@@ -40,6 +40,7 @@ use crate::coordinator::{
 use crate::gateway::frame::{self, Frame, FrameError, FrameType, HEADER_LEN};
 use crate::gateway::rate_limit::RateLimiter;
 use crate::gateway::wire::{self, AdminCmd, BusyReason};
+use crate::obs::trace::{Stage, StageLog};
 use crate::util::sync::lock_unpoisoned;
 
 /// Default listen address of `pfm serve`.
@@ -261,7 +262,10 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
     let metrics = &ctx.service.metrics;
     match f.ftype {
         FrameType::Request => {
-            let req = match wire::decode_request(&f.payload) {
+            // the stage log starts at frame receipt, so decode and
+            // rate-limit admission are part of the request's breakdown
+            let mut stages = StageLog::new();
+            let req = match stages.time(Stage::Decode, || wire::decode_request(&f.payload)) {
                 Ok(r) => r,
                 Err(e) => {
                     // payload-level garbage: framing is intact, so answer
@@ -281,7 +285,7 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                 ));
                 return true;
             }
-            if !ctx.limiter.admit(peer) {
+            if !stages.time(Stage::RateLimit, || ctx.limiter.admit(peer)) {
                 metrics.record_gateway_busy(BusyKind::RateLimited);
                 let _ = wtx.send(Outgoing::Immediate(
                     FrameType::Busy,
@@ -289,7 +293,7 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                 ));
                 return true;
             }
-            let submitted = ctx.service.try_submit_with_budget(
+            let submitted = ctx.service.try_submit_traced(
                 req.matrix,
                 req.method,
                 req.seed,
@@ -297,6 +301,7 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                 req.factor_kind,
                 req.opt_budget,
                 req.factor_threads,
+                stages,
             );
             match submitted {
                 Ok(rx) => {
@@ -329,6 +334,8 @@ fn handle_frame(f: Frame, peer: &str, ctx: &ConnCtx, wtx: &mpsc::Sender<Outgoing
                 let json = match cmd {
                     AdminCmd::Ping => "{\"ok\":true}".to_string(),
                     AdminCmd::Metrics => metrics.to_json().to_string(),
+                    AdminCmd::Trace => metrics.traces_json().to_string(),
+                    AdminCmd::MetricsText => metrics.prometheus_text(),
                     AdminCmd::Throttle => ctx.limiter.stats_json(),
                     AdminCmd::Shutdown => "{\"ok\":true,\"shutting_down\":true}".to_string(),
                     AdminCmd::Snapshot => match ctx.service.persist_snapshot() {
@@ -380,7 +387,15 @@ fn writer_loop(mut stream: TcpStream, wrx: mpsc::Receiver<Outgoing>, metrics: &M
             Outgoing::Immediate(t, p) => (t, p),
             Outgoing::Pending { id, rx } => match rx.recv() {
                 Ok(resp) => match resp.result {
-                    Ok(res) => (FrameType::Response, wire::encode_result(id, &res)),
+                    Ok(res) => {
+                        // annotate the ring entry (keyed by coordinator
+                        // id) with the encode span after the fact — the
+                        // trace was already recorded at compute time
+                        let t0 = Instant::now();
+                        let payload = wire::encode_result(id, &res);
+                        metrics.annotate_trace_encode(resp.id, t0.elapsed().as_secs_f64());
+                        (FrameType::Response, payload)
+                    }
                     Err(msg) => (FrameType::Error, wire::encode_error(id, &msg)),
                 },
                 Err(_) => (

@@ -60,6 +60,10 @@ pub enum AdminCmd {
     /// Compact the warm-start persistence store into one snapshot
     /// (errors when the service runs without `--persist-dir`).
     Snapshot = 4,
+    /// Recent request traces from the coordinator's bounded ring (JSON).
+    Trace = 5,
+    /// Prometheus text exposition of counters + latency histograms.
+    MetricsText = 6,
 }
 
 impl AdminCmd {
@@ -70,6 +74,8 @@ impl AdminCmd {
             2 => Some(AdminCmd::Throttle),
             3 => Some(AdminCmd::Shutdown),
             4 => Some(AdminCmd::Snapshot),
+            5 => Some(AdminCmd::Trace),
+            6 => Some(AdminCmd::MetricsText),
             _ => None,
         }
     }
@@ -82,6 +88,8 @@ impl AdminCmd {
             "throttle" => Some(AdminCmd::Throttle),
             "shutdown" => Some(AdminCmd::Shutdown),
             "snapshot" => Some(AdminCmd::Snapshot),
+            "trace" => Some(AdminCmd::Trace),
+            "metrics-text" => Some(AdminCmd::MetricsText),
             _ => None,
         }
     }
@@ -93,6 +101,8 @@ impl AdminCmd {
             AdminCmd::Throttle => "throttle",
             AdminCmd::Shutdown => "shutdown",
             AdminCmd::Snapshot => "snapshot",
+            AdminCmd::Trace => "trace",
+            AdminCmd::MetricsText => "metrics-text",
         }
     }
 }
@@ -129,6 +139,9 @@ pub struct WireResult {
     pub factor_threads: usize,
     pub levels_refined: usize,
     pub order: Vec<usize>,
+    /// per-stage breakdown as (stage label, seconds); empty when the
+    /// server predates the stage section (it is end-anchored + optional)
+    pub stages: Vec<(String, f64)>,
 }
 
 /// Payload-level decode failure: the frame was well-formed, the body was
@@ -427,6 +440,17 @@ pub fn encode_result(id: u64, res: &crate::coordinator::ReorderResult) -> Vec<u8
     for &v in &res.order {
         put_u32(&mut buf, v as u32);
     }
+    // end-anchored optional section: per-stage spans. Old clients stop
+    // reading after the order array; new clients read it only when bytes
+    // remain, so both directions stay compatible.
+    if !res.stages.is_empty() {
+        let n = res.stages.len().min(u8::MAX as usize);
+        buf.push(n as u8);
+        for span in &res.stages[..n] {
+            put_str16(&mut buf, span.stage.label());
+            put_f64(&mut buf, span.secs);
+        }
+    }
     buf
 }
 
@@ -456,6 +480,16 @@ pub fn decode_result(payload: &[u8]) -> Result<WireResult, String> {
     for _ in 0..n {
         order.push(r.u32()? as usize);
     }
+    // optional end-anchored stage section (absent from old servers)
+    let mut stages = Vec::new();
+    if r.remaining() > 0 {
+        let count = r.u8()? as usize;
+        for _ in 0..count {
+            let label = r.str16()?;
+            let secs = r.f64()?;
+            stages.push((label, secs));
+        }
+    }
     r.done()?;
     Ok(WireResult {
         id,
@@ -470,6 +504,7 @@ pub fn decode_result(payload: &[u8]) -> Result<WireResult, String> {
         factor_threads,
         levels_refined,
         order,
+        stages,
     })
 }
 
@@ -538,6 +573,7 @@ mod tests {
 
     use crate::coordinator::ReorderResult;
     use crate::gen::grid::laplacian_2d;
+    use crate::obs::trace::{Span, Stage};
     use crate::order::Classical;
     use crate::runtime::{Learned, Provenance};
     use crate::util::rng::Pcg64;
@@ -675,6 +711,11 @@ mod tests {
             probe_threads: 2,
             factor_threads: 4,
             levels_refined: 3,
+            stages: vec![
+                Span { stage: Stage::QueueWait, secs: 0.001 },
+                Span { stage: Stage::Order, secs: 0.2 },
+                Span { stage: Stage::SymbolicMiss, secs: 0.04 },
+            ],
         };
         let payload = encode_result(99, &res);
         let got = decode_result(&payload).unwrap();
@@ -688,6 +729,14 @@ mod tests {
         assert_eq!((got.opt_iters, got.probe_threads, got.levels_refined), (6, 2, 3));
         assert_eq!(got.factor_threads, 4);
         assert_eq!(got.order, vec![2, 0, 1, 3]);
+        assert_eq!(
+            got.stages,
+            vec![
+                ("queue_wait".to_string(), 0.001),
+                ("order".to_string(), 0.2),
+                ("symbolic_miss".to_string(), 0.04),
+            ]
+        );
     }
 
     #[test]
@@ -704,11 +753,22 @@ mod tests {
             probe_threads: 0,
             factor_threads: 0,
             levels_refined: 0,
+            stages: Vec::new(),
         };
-        let got = decode_result(&encode_result(1, &res)).unwrap();
+        let payload = encode_result(1, &res);
+        let got = decode_result(&payload).unwrap();
         assert_eq!(got.provenance, None);
         assert_eq!(got.fill_ratio, None);
         assert_eq!(got.factor_kind, None);
+        // an empty stage list encodes to no stage section at all — the
+        // payload a pre-stage server would have produced — and decodes
+        // back to an empty list (backward compatibility both ways)
+        assert!(got.stages.is_empty());
+        let mut with_header = res.clone();
+        with_header.stages = vec![Span { stage: Stage::Decode, secs: 0.5 }];
+        let longer = encode_result(1, &with_header);
+        assert!(longer.len() > payload.len(), "stage section must add bytes");
+        assert_eq!(decode_result(&longer).unwrap().stages, vec![("decode".to_string(), 0.5)]);
     }
 
     #[test]
@@ -732,6 +792,8 @@ mod tests {
             AdminCmd::Throttle,
             AdminCmd::Shutdown,
             AdminCmd::Snapshot,
+            AdminCmd::Trace,
+            AdminCmd::MetricsText,
         ] {
             assert_eq!(decode_admin(&encode_admin(cmd)).unwrap(), cmd);
             assert_eq!(AdminCmd::parse(cmd.label()), Some(cmd));

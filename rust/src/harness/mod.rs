@@ -5,10 +5,14 @@
 //! * [`table2`] — fill-in ratio + factorization time, 8 methods × 6 classes
 //! * [`table3`] — ablation (spectral embedding / encoder / loss)
 //! * [`fig4`]   — fill ratio, LU time, ordering time vs matrix size
+//! * [`replay`] — traffic-replay load driver for the serving path
+//!   (open-loop traces, per-class latency quantiles, SLO assertions,
+//!   `BENCH_serving.json`)
 //!
 //! All emit markdown (paper-shaped rows) plus CSV for downstream plotting.
 
 pub mod fig4;
+pub mod replay;
 pub mod runner;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,796 @@
+//! Traffic-replay load driver: deterministic synthetic request traces
+//! played open-loop against a live gateway (`pfm-reorder replay --addr`)
+//! or an in-process service (`--inproc`), with per-class latency
+//! quantiles and SLO assertions written to `BENCH_serving.json`.
+//!
+//! Open-loop means sends follow the trace's schedule regardless of how
+//! fast responses come back — the driver measures the latency the
+//! *offered* load experiences, instead of throttling itself to whatever
+//! the server can absorb (closed-loop coordination omission). Completed
+//! requests are classified by what actually served them, not by what the
+//! trace intended: `warm_hit` (warm-store provenance), `cold` (any other
+//! learned-path serve), `classical` (direct orderings). See DESIGN.md
+//! §Observability for the trace format and the SLO contract.
+
+use std::net::SocketAddr;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Method, ReorderResponse, ReorderService, TrySubmitError};
+use crate::gateway::{GatewayClient, Reply, WireRequest};
+use crate::gen::ProblemClass;
+use crate::obs::hist::exact_quantile;
+use crate::order::Classical;
+use crate::pfm::OptBudget;
+use crate::runtime::Learned;
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Inter-arrival gap between consecutive trace events at 1× speed.
+pub const BASE_INTERARRIVAL_S: f64 = 0.010;
+
+/// Schema tag of the committed serving benchmark artifact.
+pub const BENCH_SCHEMA: &str = "pfm-serving-bench/v1";
+
+/// Synthetic trace families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// ~55% classical (AMD/RCM/Metis rotation), ~25% warm-pool repeats,
+    /// ~20% unique cold native-PFM requests.
+    Mixed,
+    /// Pattern-repeat warm bursts: blocks of identical matrices from a
+    /// small pool, so the warm-start store serves the steady state.
+    Warm,
+    /// Cold-miss storm: every request is a unique native-PFM matrix.
+    ColdStorm,
+}
+
+impl TraceKind {
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mixed" => Some(TraceKind::Mixed),
+            "warm" => Some(TraceKind::Warm),
+            "coldstorm" | "cold-storm" | "cold" => Some(TraceKind::ColdStorm),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::Mixed => "mixed",
+            TraceKind::Warm => "warm",
+            TraceKind::ColdStorm => "coldstorm",
+        }
+    }
+}
+
+/// What to replay: everything needed to regenerate the identical trace.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplaySpec {
+    pub kind: TraceKind,
+    /// trace-time compression: 10.0 sends events at 10× their 1× rate
+    pub speed: f64,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+/// One scheduled request of a trace.
+pub struct ReplayEvent {
+    /// scheduled send offset from the run start, seconds (monotone in
+    /// the event index — the open-loop schedule)
+    pub at_s: f64,
+    pub method: Method,
+    pub seed: u64,
+    pub opt_budget: Option<OptBudget>,
+    pub matrix: Csr,
+}
+
+/// Serving budget every learned trace event carries, so a single slow
+/// native run cannot wedge the tail of the replay.
+fn learned_budget() -> OptBudget {
+    OptBudget {
+        outer: 1,
+        refine: 6,
+        level_refine: 2,
+        adaptive_rho: true,
+        time_ms: Some(250),
+    }
+}
+
+/// Generate the deterministic trace for `spec`: same spec, same events,
+/// byte-identical matrices (warm-pool repeats share one pattern, which
+/// is what makes them warm-store hits on the server).
+pub fn generate(spec: &ReplaySpec) -> Vec<ReplayEvent> {
+    let speed = if spec.speed > 0.0 { spec.speed } else { 1.0 };
+    let gap = BASE_INTERARRIVAL_S / speed;
+    let mut rng = Pcg64::new(spec.seed ^ 0x5E18_41D0);
+    let pool: Vec<Csr> = (0..3)
+        .map(|i| ProblemClass::ALL[i].generate(80 + 16 * i, spec.seed))
+        .collect();
+    let classical = [Classical::Amd, Classical::Rcm, Classical::Metis];
+    let budget = learned_budget();
+    (0..spec.requests)
+        .map(|i| {
+            let (method, matrix, opt_budget) = match spec.kind {
+                TraceKind::Warm => {
+                    // bursts of 8 consecutive repeats of one pool pattern
+                    let m = pool[(i / 8) % pool.len()].clone();
+                    (Method::Learned(Learned::Pfm), m, Some(budget))
+                }
+                TraceKind::ColdStorm => {
+                    let class = ProblemClass::ALL[rng.next_below(ProblemClass::ALL.len())];
+                    let n = 64 + 8 * rng.next_below(16);
+                    let m = class.generate(n, spec.seed.wrapping_add(1 + i as u64));
+                    (Method::Learned(Learned::Pfm), m, Some(budget))
+                }
+                TraceKind::Mixed => {
+                    let draw = rng.next_below(100);
+                    if draw < 55 {
+                        let class = ProblemClass::ALL[i % ProblemClass::ALL.len()];
+                        let n = [100, 144, 196][i % 3];
+                        let m = class.generate(n, spec.seed.wrapping_add(1 + i as u64));
+                        (Method::Classical(classical[i % 3]), m, None)
+                    } else if draw < 80 {
+                        let m = pool[i % pool.len()].clone();
+                        (Method::Learned(Learned::Pfm), m, Some(budget))
+                    } else {
+                        let class = ProblemClass::ALL[rng.next_below(ProblemClass::ALL.len())];
+                        let n = 64 + 8 * (i % 10);
+                        let m = class.generate(n, spec.seed.wrapping_add(0x900 + i as u64));
+                        (Method::Learned(Learned::Pfm), m, Some(budget))
+                    }
+                }
+            };
+            ReplayEvent {
+                at_s: i as f64 * gap,
+                method,
+                seed: spec.seed.wrapping_add(i as u64),
+                opt_budget,
+                matrix,
+            }
+        })
+        .collect()
+}
+
+/// Request class a completed response lands in, judged by what actually
+/// served it (so a warm-pool request that raced the store's first write
+/// honestly counts as `cold`).
+fn classify(learned: bool, provenance: Option<&str>) -> &'static str {
+    if provenance == Some("warm") {
+        "warm_hit"
+    } else if learned {
+        "cold"
+    } else {
+        "classical"
+    }
+}
+
+// --------------------------------------------------------------- report
+
+/// Exact latency summary of one request class (sorted-sample quantiles,
+/// not histogram estimates — the driver holds every sample anyway).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassSummary {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    pub max_s: f64,
+}
+
+impl ClassSummary {
+    fn from_latencies(mut v: Vec<f64>) -> ClassSummary {
+        if v.is_empty() {
+            return ClassSummary::default();
+        }
+        v.sort_by(f64::total_cmp);
+        ClassSummary {
+            count: v.len(),
+            mean_s: v.iter().sum::<f64>() / v.len() as f64,
+            p50_s: exact_quantile(&v, 0.50),
+            p99_s: exact_quantile(&v, 0.99),
+            p999_s: exact_quantile(&v, 0.999),
+            max_s: v[v.len() - 1],
+        }
+    }
+
+    fn stat(&self, name: &str) -> Option<f64> {
+        match name {
+            "p50" => Some(self.p50_s),
+            "p99" => Some(self.p99_s),
+            "p999" => Some(self.p999_s),
+            "mean" => Some(self.mean_s),
+            "max" => Some(self.max_s),
+            _ => None,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj()
+            .set("count", self.count)
+            .set("mean_s", self.mean_s)
+            .set("p50_s", self.p50_s)
+            .set("p99_s", self.p99_s)
+            .set("p999_s", self.p999_s)
+            .set("max_s", self.max_s)
+    }
+}
+
+/// What one replay run measured.
+pub struct ReplayReport {
+    pub mode: &'static str,
+    pub trace: &'static str,
+    pub speed: f64,
+    pub requests: usize,
+    /// explicit Busy replies / saturated submissions (not failures —
+    /// the server shedding load is it keeping its latency contract)
+    pub busy: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// per-class summaries; `"all"` (every completed request) is first
+    pub classes: Vec<(String, ClassSummary)>,
+}
+
+impl ReplayReport {
+    fn build(
+        mode: &'static str,
+        spec: &ReplaySpec,
+        samples: Vec<(&'static str, f64)>,
+        busy: usize,
+        errors: usize,
+        wall_s: f64,
+    ) -> ReplayReport {
+        let mut classes: Vec<(String, ClassSummary)> = Vec::new();
+        let all: Vec<f64> = samples.iter().map(|&(_, s)| s).collect();
+        classes.push(("all".to_string(), ClassSummary::from_latencies(all)));
+        for name in ["classical", "warm_hit", "cold"] {
+            let v: Vec<f64> =
+                samples.iter().filter(|&&(c, _)| c == name).map(|&(_, s)| s).collect();
+            if !v.is_empty() {
+                classes.push((name.to_string(), ClassSummary::from_latencies(v)));
+            }
+        }
+        ReplayReport {
+            mode,
+            trace: spec.kind.label(),
+            speed: spec.speed,
+            requests: spec.requests,
+            busy,
+            errors,
+            wall_s,
+            classes,
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.classes.first().map(|(_, s)| s.count).unwrap_or(0)
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self, class: &str) -> Option<&ClassSummary> {
+        self.classes.iter().find(|(c, _)| c == class).map(|(_, s)| s)
+    }
+
+    /// Evaluate every SLO rule against the measured summaries. A rule
+    /// naming a class with zero completed requests fails (an SLO you
+    /// never exercised is not met).
+    pub fn evaluate(&self, rules: &[SloRule]) -> Vec<SloOutcome> {
+        rules
+            .iter()
+            .map(|r| {
+                let class = r.class.as_deref().unwrap_or("all").to_string();
+                let actual_s =
+                    self.summary(&class).and_then(|s| s.stat(&r.stat)).filter(|_| {
+                        self.summary(&class).map(|s| s.count > 0).unwrap_or(false)
+                    });
+                let pass = actual_s.map(|a| a <= r.limit_s).unwrap_or(false);
+                SloOutcome {
+                    rule: r.raw.clone(),
+                    class,
+                    stat: r.stat.clone(),
+                    limit_s: r.limit_s,
+                    actual_s,
+                    pass,
+                }
+            })
+            .collect()
+    }
+
+    /// Fail (with every violation listed) if any SLO outcome failed, any
+    /// request errored, or — when `require_warm_faster` — the warm-hit
+    /// p99 is not strictly below the cold p99.
+    pub fn check(&self, outcomes: &[SloOutcome], require_warm_faster: bool) -> Result<(), String> {
+        let mut violations: Vec<String> = Vec::new();
+        for o in outcomes.iter().filter(|o| !o.pass) {
+            match o.actual_s {
+                Some(a) => violations.push(format!(
+                    "SLO `{}` violated: {}.{} = {:.4}s > {:.4}s",
+                    o.rule, o.class, o.stat, a, o.limit_s
+                )),
+                None => violations.push(format!(
+                    "SLO `{}` unmeasurable: class `{}` completed no requests",
+                    o.rule, o.class
+                )),
+            }
+        }
+        if self.errors > 0 {
+            violations.push(format!("{} request(s) failed", self.errors));
+        }
+        if require_warm_faster {
+            match (self.summary("warm_hit"), self.summary("cold")) {
+                (Some(w), Some(c)) if w.count > 0 && c.count > 0 => {
+                    if w.p99_s >= c.p99_s {
+                        violations.push(format!(
+                            "warm-hit p99 {:.4}s not below cold p99 {:.4}s",
+                            w.p99_s, c.p99_s
+                        ));
+                    }
+                }
+                _ => violations.push(
+                    "check-warm needs at least one warm_hit and one cold completion".to_string(),
+                ),
+            }
+        }
+        if violations.is_empty() {
+            Ok(())
+        } else {
+            Err(violations.join("; "))
+        }
+    }
+
+    /// The committed `BENCH_serving.json` document.
+    pub fn to_json(&self, outcomes: &[SloOutcome]) -> Json {
+        let mut classes = Json::obj();
+        for (name, s) in &self.classes {
+            classes = classes.set(name, s.to_json());
+        }
+        let slo: Vec<Json> = outcomes
+            .iter()
+            .map(|o| {
+                Json::obj()
+                    .set("rule", o.rule.as_str())
+                    .set("class", o.class.as_str())
+                    .set("stat", o.stat.as_str())
+                    .set("limit_s", o.limit_s)
+                    .set("actual_s", o.actual_s.map(Json::Num).unwrap_or(Json::Null))
+                    .set("pass", o.pass)
+            })
+            .collect();
+        Json::obj()
+            .set("schema", BENCH_SCHEMA)
+            .set("mode", self.mode)
+            .set("trace", self.trace)
+            .set("speed", self.speed)
+            .set("requests", self.requests)
+            .set("completed", self.completed())
+            .set("busy", self.busy)
+            .set("errors", self.errors)
+            .set("wall_s", self.wall_s)
+            .set("throughput_rps", self.throughput_rps())
+            .set("classes", classes)
+            .set("slo", Json::Arr(slo))
+    }
+
+    /// Human-readable run summary (stdout of the `replay` subcommand).
+    pub fn render(&self, outcomes: &[SloOutcome]) -> String {
+        let mut s = format!(
+            "replay [{} / {}] speed {}x: {} sent, {} completed, {} busy, {} errors \
+             in {:.2}s ({:.1} req/s)\n",
+            self.mode,
+            self.trace,
+            self.speed,
+            self.requests,
+            self.completed(),
+            self.busy,
+            self.errors,
+            self.wall_s,
+            self.throughput_rps(),
+        );
+        for (name, c) in &self.classes {
+            s.push_str(&format!(
+                "  {name:<10} n={:<5} p50 {:>8.2}ms  p99 {:>8.2}ms  p999 {:>8.2}ms  \
+                 mean {:>8.2}ms  max {:>8.2}ms\n",
+                c.count,
+                c.p50_s * 1e3,
+                c.p99_s * 1e3,
+                c.p999_s * 1e3,
+                c.mean_s * 1e3,
+                c.max_s * 1e3,
+            ));
+        }
+        for o in outcomes {
+            s.push_str(&format!(
+                "  slo {:<20} {} ({}.{} {} <= {:.4}s)\n",
+                o.rule,
+                if o.pass { "PASS" } else { "FAIL" },
+                o.class,
+                o.stat,
+                o.actual_s.map(|a| format!("{a:.4}s")).unwrap_or_else(|| "n/a".to_string()),
+                o.limit_s,
+            ));
+        }
+        s
+    }
+}
+
+// ------------------------------------------------------------------ SLO
+
+/// One `--slo` assertion: `[class:]stat=limit`, e.g. `p99=500ms`,
+/// `warm_hit:p99=2s`, `cold:mean=0.5`. Bare numbers are seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloRule {
+    pub class: Option<String>,
+    pub stat: String,
+    pub limit_s: f64,
+    /// the spelling the user wrote, echoed in reports
+    pub raw: String,
+}
+
+impl SloRule {
+    pub fn parse(s: &str) -> Result<SloRule, String> {
+        let (lhs, rhs) = s
+            .split_once('=')
+            .ok_or_else(|| format!("bad SLO `{s}`: expected [class:]stat=limit"))?;
+        let (class, stat) = match lhs.split_once(':') {
+            Some((c, st)) => (Some(c.trim().to_string()), st),
+            None => (None, lhs),
+        };
+        let stat = stat.trim().to_ascii_lowercase();
+        if !["p50", "p99", "p999", "mean", "max"].contains(&stat.as_str()) {
+            return Err(format!("bad SLO `{s}`: stat must be p50|p99|p999|mean|max"));
+        }
+        if let Some(c) = &class {
+            if !["all", "classical", "warm_hit", "cold"].contains(&c.as_str()) {
+                return Err(format!(
+                    "bad SLO `{s}`: class must be all|classical|warm_hit|cold"
+                ));
+            }
+        }
+        Ok(SloRule { class, stat, limit_s: parse_duration_s(rhs.trim())?, raw: s.to_string() })
+    }
+}
+
+/// How one SLO rule fared against the measured report.
+#[derive(Clone, Debug)]
+pub struct SloOutcome {
+    pub rule: String,
+    pub class: String,
+    pub stat: String,
+    pub limit_s: f64,
+    /// `None` when the class completed no requests
+    pub actual_s: Option<f64>,
+    pub pass: bool,
+}
+
+fn parse_duration_s(s: &str) -> Result<f64, String> {
+    let parse = |v: &str| -> Result<f64, String> {
+        v.trim().parse::<f64>().map_err(|_| format!("bad duration `{s}`"))
+    };
+    let secs = if let Some(ms) = s.strip_suffix("ms") {
+        parse(ms)? / 1e3
+    } else if let Some(sec) = s.strip_suffix('s') {
+        parse(sec)?
+    } else {
+        parse(s)?
+    };
+    if secs.is_finite() && secs >= 0.0 {
+        Ok(secs)
+    } else {
+        Err(format!("bad duration `{s}`: must be a non-negative number"))
+    }
+}
+
+// -------------------------------------------------------------- drivers
+
+/// Replay against an in-process [`ReorderService`] — no sockets, same
+/// open-loop schedule. Saturated submissions count as `busy` exactly
+/// like gateway `Busy` frames.
+pub fn run_inproc(service: &ReorderService, spec: &ReplaySpec) -> ReplayReport {
+    struct Pending {
+        rx: mpsc::Receiver<ReorderResponse>,
+        learned: bool,
+        sent: Instant,
+    }
+    fn poll(
+        pending: &mut Vec<Pending>,
+        samples: &mut Vec<(&'static str, f64)>,
+        errors: &mut usize,
+    ) {
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].rx.try_recv() {
+                Ok(resp) => {
+                    let p = pending.swap_remove(i);
+                    match resp.result {
+                        Ok(res) => samples.push((
+                            classify(p.learned, res.provenance.map(|pv| pv.label())),
+                            p.sent.elapsed().as_secs_f64(),
+                        )),
+                        Err(_) => *errors += 1,
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => i += 1,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    pending.swap_remove(i);
+                    *errors += 1;
+                }
+            }
+        }
+    }
+
+    let events = generate(spec);
+    let start = Instant::now();
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut samples: Vec<(&'static str, f64)> = Vec::new();
+    let (mut busy, mut errors) = (0usize, 0usize);
+    for ev in events {
+        loop {
+            poll(&mut pending, &mut samples, &mut errors);
+            let remaining = ev.at_s - start.elapsed().as_secs_f64();
+            if remaining <= 0.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64(remaining.min(0.001)));
+        }
+        let learned = matches!(ev.method, Method::Learned(_));
+        let sent = Instant::now();
+        match service.try_submit_with_budget(
+            ev.matrix,
+            ev.method,
+            ev.seed,
+            false,
+            None,
+            ev.opt_budget,
+            None,
+        ) {
+            Ok(rx) => pending.push(Pending { rx, learned, sent }),
+            Err(TrySubmitError::Saturated) => busy += 1,
+            Err(TrySubmitError::ShutDown) => errors += 1,
+        }
+    }
+    while !pending.is_empty() {
+        poll(&mut pending, &mut samples, &mut errors);
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    ReplayReport::build("inproc", spec, samples, busy, errors, wall_s)
+}
+
+/// Replay against a live gateway over `conns` pipelined connections
+/// (round-robin assignment; each connection runs a sender/receiver
+/// thread pair, relying on the gateway's per-connection FIFO reply
+/// order to correlate replies without ids).
+pub fn run_gateway(
+    addr: SocketAddr,
+    spec: &ReplaySpec,
+    conns: usize,
+    timeout: Duration,
+) -> Result<ReplayReport, String> {
+    struct LaneMeta {
+        learned: bool,
+        sent: Instant,
+    }
+    #[derive(Default)]
+    struct LaneOut {
+        samples: Vec<(&'static str, f64)>,
+        busy: usize,
+        errors: usize,
+    }
+
+    let conns = conns.max(1);
+    let events = generate(spec);
+    let mut lanes: Vec<Vec<(u64, ReplayEvent)>> = (0..conns).map(|_| Vec::new()).collect();
+    for (i, ev) in events.into_iter().enumerate() {
+        lanes[i % conns].push((i as u64, ev));
+    }
+
+    let start = Instant::now();
+    let mut senders = Vec::new();
+    let mut receivers = Vec::new();
+    for lane in lanes {
+        if lane.is_empty() {
+            continue;
+        }
+        let mut tx_client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
+            .map_err(|e| format!("connect {addr}: {e} (is `pfm-reorder serve` running?)"))?;
+        tx_client.set_io_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+        let mut rx_client = tx_client.try_clone().map_err(|e| e.to_string())?;
+        let (mtx, mrx) = mpsc::channel::<LaneMeta>();
+        senders.push(std::thread::spawn(move || -> usize {
+            let mut failed = 0usize;
+            let total = lane.len();
+            for (k, (id, ev)) in lane.into_iter().enumerate() {
+                let target = start + Duration::from_secs_f64(ev.at_s);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let req = WireRequest {
+                    id,
+                    method: ev.method,
+                    seed: ev.seed,
+                    eval_fill: false,
+                    factor_kind: None,
+                    opt_budget: ev.opt_budget,
+                    factor_threads: None,
+                    matrix: ev.matrix,
+                };
+                let learned = matches!(req.method, Method::Learned(_));
+                let sent = Instant::now();
+                if tx_client.send_request(&req).is_ok() {
+                    let _ = mtx.send(LaneMeta { learned, sent });
+                } else {
+                    // a failed send may have desynced the stream — stop
+                    // the lane and charge its remaining events as errors
+                    failed = total - k;
+                    break;
+                }
+            }
+            failed
+        }));
+        receivers.push(std::thread::spawn(move || -> LaneOut {
+            let mut out = LaneOut::default();
+            while let Ok(meta) = mrx.recv() {
+                match rx_client.recv_reply() {
+                    Ok(Reply::Result(res)) => out.samples.push((
+                        classify(meta.learned, res.provenance.as_deref()),
+                        meta.sent.elapsed().as_secs_f64(),
+                    )),
+                    Ok(Reply::Busy { .. }) => out.busy += 1,
+                    Ok(Reply::Error { .. }) | Ok(Reply::Admin(_)) => out.errors += 1,
+                    Err(_) => {
+                        out.errors += 1;
+                        break;
+                    }
+                }
+            }
+            out
+        }));
+    }
+
+    let mut samples: Vec<(&'static str, f64)> = Vec::new();
+    let (mut busy, mut errors) = (0usize, 0usize);
+    for h in senders {
+        errors += h.join().map_err(|_| "replay sender thread panicked".to_string())?;
+    }
+    for h in receivers {
+        let out = h.join().map_err(|_| "replay receiver thread panicked".to_string())?;
+        samples.extend(out.samples);
+        busy += out.busy;
+        errors += out.errors;
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    Ok(ReplayReport::build("gateway", spec, samples, busy, errors, wall_s))
+}
+
+/// Write the benchmark document (one JSON object + trailing newline).
+pub fn write_bench(path: &str, doc: &Json) -> Result<(), String> {
+    std::fs::write(path, doc.to_string() + "\n").map_err(|e| format!("write {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_generation_is_deterministic_and_scheduled_open_loop() {
+        let spec = ReplaySpec { kind: TraceKind::Mixed, speed: 10.0, requests: 60, seed: 42 };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), 60);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.method.label(), y.method.label());
+            assert_eq!(x.matrix, y.matrix);
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.seed, y.seed);
+        }
+        // open-loop schedule: strictly increasing at the compressed gap
+        for w in a.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+        }
+        let gap = a[1].at_s - a[0].at_s;
+        assert!((gap - BASE_INTERARRIVAL_S / 10.0).abs() < 1e-12, "gap {gap}");
+        // the mix has all three intents
+        assert!(a.iter().any(|e| matches!(e.method, Method::Classical(_))));
+        assert!(a.iter().any(|e| matches!(e.method, Method::Learned(_))));
+    }
+
+    #[test]
+    fn warm_trace_repeats_identical_patterns_in_bursts() {
+        let spec = ReplaySpec { kind: TraceKind::Warm, speed: 100.0, requests: 24, seed: 7 };
+        let ev = generate(&spec);
+        // burst of 8: identical matrices (this is what makes them warm
+        // hits — the store is keyed on the exact sparsity pattern)
+        for i in 1..8 {
+            assert_eq!(ev[i].matrix, ev[0].matrix);
+        }
+        assert_ne!(ev[8].matrix, ev[0].matrix, "next burst must switch patterns");
+        assert!(ev.iter().all(|e| matches!(e.method, Method::Learned(Learned::Pfm))));
+        assert!(ev.iter().all(|e| e.opt_budget.is_some()));
+    }
+
+    #[test]
+    fn slo_rules_parse_units_classes_and_reject_garbage() {
+        let r = SloRule::parse("p99=500ms").unwrap();
+        assert_eq!((r.class.as_deref(), r.stat.as_str()), (None, "p99"));
+        assert!((r.limit_s - 0.5).abs() < 1e-12);
+        let r = SloRule::parse("warm_hit:p999=2s").unwrap();
+        assert_eq!(r.class.as_deref(), Some("warm_hit"));
+        assert!((r.limit_s - 2.0).abs() < 1e-12);
+        let r = SloRule::parse("cold:mean=0.25").unwrap();
+        assert!((r.limit_s - 0.25).abs() < 1e-12);
+        for bad in ["p99", "p77=1s", "nope:p99=1s", "p99=fast", "p99=-1s"] {
+            assert!(SloRule::parse(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn report_classifies_summarizes_and_enforces_slos() {
+        let spec = ReplaySpec { kind: TraceKind::Mixed, speed: 1.0, requests: 8, seed: 0 };
+        let samples = vec![
+            ("classical", 0.010),
+            ("classical", 0.020),
+            ("warm_hit", 0.001),
+            ("warm_hit", 0.002),
+            ("cold", 0.100),
+            ("cold", 0.200),
+        ];
+        let rep = ReplayReport::build("inproc", &spec, samples, 1, 0, 0.5);
+        assert_eq!(rep.completed(), 6);
+        assert_eq!(rep.busy, 1);
+        assert!((rep.throughput_rps() - 12.0).abs() < 1e-9);
+        let warm = rep.summary("warm_hit").unwrap();
+        let cold = rep.summary("cold").unwrap();
+        assert_eq!((warm.count, cold.count), (2, 2));
+        assert!(warm.p99_s < cold.p99_s);
+        assert_eq!(warm.p50_s, 0.001);
+        assert_eq!(cold.max_s, 0.200);
+
+        // passing SLO + warm-vs-cold check
+        let rules = vec![SloRule::parse("p99=1s").unwrap()];
+        let outcomes = rep.evaluate(&rules);
+        assert!(outcomes[0].pass);
+        rep.check(&outcomes, true).unwrap();
+
+        // violated SLO names the class and both numbers
+        let tight = rep.evaluate(&[SloRule::parse("cold:p99=50ms").unwrap()]);
+        assert!(!tight[0].pass);
+        let err = rep.check(&tight, false).unwrap_err();
+        assert!(err.contains("cold.p99"), "{err}");
+
+        // a rule over a class that never completed is a failure
+        let absent = rep.evaluate(&[SloRule::parse("p99=1s").unwrap()]);
+        let empty = ReplayReport::build("inproc", &spec, Vec::new(), 0, 0, 0.5);
+        let missing = empty.evaluate(&[SloRule::parse("warm_hit:p99=1s").unwrap()]);
+        assert!(!missing[0].pass);
+        assert!(empty.check(&missing, false).unwrap_err().contains("unmeasurable"));
+        assert!(absent[0].pass);
+
+        // JSON document carries the schema + per-class quantiles
+        let doc = rep.to_json(&outcomes).to_string();
+        assert!(doc.contains("\"schema\":\"pfm-serving-bench/v1\""), "{doc}");
+        assert!(doc.contains("\"warm_hit\""), "{doc}");
+        assert!(doc.contains("\"p999_s\""), "{doc}");
+        assert!(doc.contains("\"throughput_rps\""), "{doc}");
+    }
+
+    #[test]
+    fn duration_suffixes_are_understood() {
+        assert!((parse_duration_s("250ms").unwrap() - 0.25).abs() < 1e-12);
+        assert!((parse_duration_s("3s").unwrap() - 3.0).abs() < 1e-12);
+        assert!((parse_duration_s("0.5").unwrap() - 0.5).abs() < 1e-12);
+        assert!(parse_duration_s("").is_err());
+        assert!(parse_duration_s("1m").is_err());
+    }
+}

@@ -22,6 +22,7 @@ pub mod gateway;
 pub mod gen;
 pub mod harness;
 pub mod graph;
+pub mod obs;
 pub mod order;
 pub mod persist;
 pub mod pfm;

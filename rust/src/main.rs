@@ -15,6 +15,7 @@ use pfm_reorder::gateway::{
     AdminCmd, Gateway, GatewayClient, GatewayConfig, Reply, WireRequest, DEFAULT_ADDR,
 };
 use pfm_reorder::gen::ProblemClass;
+use pfm_reorder::harness::replay::{self, ReplaySpec, SloRule, TraceKind};
 use pfm_reorder::harness::{fig4, table1, table2, table3};
 use pfm_reorder::order::Classical;
 use pfm_reorder::pfm::{OptBudget, PfmOptimizer, ScoreInit};
@@ -38,8 +39,14 @@ COMMANDS:
     order <file.mtx>       reorder one MatrixMarket matrix and report fill
     pfm <file.mtx>         native PFM optimizer: permutation + fill report
     serve                  run the TCP reorder gateway (framed protocol)
-    admin <cmd>            query a running gateway: ping|metrics|throttle|snapshot|shutdown
+    admin <cmd>            query a running gateway:
+                           ping|metrics|throttle|snapshot|trace|shutdown
+                           (metrics --text = Prometheus exposition)
     remote <file.mtx>      reorder one matrix through a running gateway
+                           (--json adds the per-stage latency breakdown)
+    replay                 open-loop traffic replay against a gateway (or
+                           --inproc): per-class p50/p99/p999 + SLO checks,
+                           writes BENCH_serving.json
     demo                   run the in-process service demo (batching stats)
     help                   this message
 
@@ -74,8 +81,25 @@ GATEWAY OPTIONS:
                            under <dir>; repeat patterns are served from disk
                            across restarts  [default: off]
     --fsync <always|never> (serve) WAL durability policy  [default: always]
-    --timeout-ms <ms>      (admin/remote) read/write timeout on the gateway
-                           connection  [default: 10000 admin, 60000 remote]
+    --timeout-ms <ms>      (admin/remote/replay) read/write timeout on the
+                           gateway connection  [default: 10000 admin,
+                           60000 remote/replay]
+    --text                 (admin metrics) Prometheus text exposition
+    --json                 (remote) JSON output incl. per-stage breakdown
+
+REPLAY OPTIONS:
+    --gen <trace>          trace family: mixed|warm|coldstorm  [default: mixed]
+    --requests <n>         trace length  [default: 200]
+    --speed <x>            replay at x times the trace's 1x rate (10ms
+                           inter-arrival): 1, 10, 100, ...  [default: 1]
+    --conns <k>            pipelined gateway connections  [default: 4]
+    --inproc               drive an in-process service instead of a gateway
+                           (--persist-dir enables the warm-start path)
+    --slo <rule>           assert `[class:]stat=limit` on exit, repeatable,
+                           e.g. --slo p99=500ms --slo warm_hit:p99=50ms
+                           (stat: p50|p99|p999|mean|max; ms/s suffixes)
+    --check-warm           require warm-hit p99 strictly below cold p99
+    --bench <file>         benchmark output path  [default: BENCH_serving.json]
 ";
 
 fn main() -> ExitCode {
@@ -95,6 +119,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&opts),
         "admin" => cmd_admin(&opts),
         "remote" => cmd_remote(&opts),
+        "replay" => cmd_replay(&opts),
         "demo" => cmd_demo(&opts),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -136,6 +161,15 @@ struct Opts {
     persist_dir: Option<String>,
     fsync: Option<String>,
     timeout_ms: Option<u64>,
+    requests: Option<usize>,
+    speed: Option<f64>,
+    conns: Option<usize>,
+    slo: Vec<String>,
+    inproc: bool,
+    check_warm: bool,
+    text: bool,
+    json: bool,
+    bench: Option<String>,
     positional: Vec<String>,
 }
 
@@ -165,6 +199,15 @@ impl Opts {
             persist_dir: None,
             fsync: None,
             timeout_ms: None,
+            requests: None,
+            speed: None,
+            conns: None,
+            slo: Vec::new(),
+            inproc: false,
+            check_warm: false,
+            text: false,
+            json: false,
+            bench: None,
             positional: Vec::new(),
         };
         let mut it = args.iter();
@@ -199,6 +242,19 @@ impl Opts {
                 "--persist-dir" => o.persist_dir = it.next().cloned(),
                 "--fsync" => o.fsync = it.next().cloned(),
                 "--timeout-ms" => o.timeout_ms = it.next().and_then(|s| s.parse().ok()),
+                "--requests" => o.requests = it.next().and_then(|s| s.parse().ok()),
+                "--speed" => o.speed = it.next().and_then(|s| s.parse().ok()),
+                "--conns" => o.conns = it.next().and_then(|s| s.parse().ok()),
+                "--slo" => {
+                    if let Some(rule) = it.next() {
+                        o.slo.push(rule.clone());
+                    }
+                }
+                "--inproc" => o.inproc = true,
+                "--check-warm" => o.check_warm = true,
+                "--text" => o.text = true,
+                "--json" => o.json = true,
+                "--bench" => o.bench = it.next().cloned(),
                 other => o.positional.push(other.to_string()),
             }
         }
@@ -512,10 +568,17 @@ fn resolve_addr(addr: &str) -> Result<SocketAddr, String> {
 
 fn cmd_admin(o: &Opts) -> Result<(), String> {
     let name = o.positional.first().map(String::as_str).unwrap_or("metrics");
-    let Some(cmd) = AdminCmd::parse(name) else {
-        return Err(format!(
-            "unknown admin command `{name}` (ping|metrics|throttle|snapshot|shutdown)"
-        ));
+    // `admin metrics --text` is the Prometheus exposition of the same
+    // counters the JSON snapshot carries
+    let cmd = if name == "metrics" && o.text {
+        AdminCmd::MetricsText
+    } else {
+        AdminCmd::parse(name).ok_or_else(|| {
+            format!(
+                "unknown admin command `{name}` \
+                 (ping|metrics|throttle|snapshot|trace|shutdown)"
+            )
+        })?
     };
     let addr = resolve_addr(&o.addr)?;
     let mut client = GatewayClient::connect_timeout(&addr, Duration::from_secs(5))
@@ -560,6 +623,29 @@ fn cmd_remote(o: &Opts) -> Result<(), String> {
     match client.request(&req)? {
         Reply::Result(res) => {
             check_permutation(&res.order)?;
+            if o.json {
+                let stages: Vec<Json> = res
+                    .stages
+                    .iter()
+                    .map(|(stage, secs)| {
+                        Json::obj().set("stage", stage.as_str()).set("ms", secs * 1e3)
+                    })
+                    .collect();
+                let doc = Json::obj()
+                    .set("matrix", name.as_str())
+                    .set("n", n)
+                    .set("method", res.method.as_str())
+                    .set(
+                        "provenance",
+                        res.provenance.as_deref().map(Json::from).unwrap_or(Json::Null),
+                    )
+                    .set("latency_ms", res.latency * 1e3)
+                    .set("fill_ratio", res.fill_ratio.map(Json::Num).unwrap_or(Json::Null))
+                    .set("batch_size", res.batch_size)
+                    .set("stages", Json::Arr(stages));
+                println!("{}", doc.to_string());
+                return Ok(());
+            }
             println!(
                 "{name}: n={n} served by {} via {addr} | fill {} | latency {:.1} ms{}",
                 res.method,
@@ -573,6 +659,44 @@ fn cmd_remote(o: &Opts) -> Result<(), String> {
         Reply::Error { message, .. } => Err(message),
         Reply::Admin(_) => Err("unexpected admin reply to a reorder request".into()),
     }
+}
+
+fn cmd_replay(o: &Opts) -> Result<(), String> {
+    let trace = o.gen.as_deref().unwrap_or("mixed");
+    let kind = TraceKind::parse(trace)
+        .ok_or_else(|| format!("unknown trace `{trace}` (mixed|warm|coldstorm)"))?;
+    let spec = ReplaySpec {
+        kind,
+        speed: o.speed.unwrap_or(1.0),
+        requests: o.requests.unwrap_or(200),
+        seed: o.seed.unwrap_or(42),
+    };
+    let rules: Vec<SloRule> =
+        o.slo.iter().map(|s| SloRule::parse(s)).collect::<Result<_, _>>()?;
+    let report = if o.inproc {
+        let persist =
+            o.persist_dir.as_ref().map(|d| pfm_reorder::persist::PersistConfig::new(d));
+        let service = ReorderService::start(ServiceConfig {
+            artifact_dir: o.artifacts.clone(),
+            persist,
+            ..Default::default()
+        });
+        let rep = replay::run_inproc(&service, &spec);
+        service.shutdown();
+        rep
+    } else {
+        let addr = resolve_addr(&o.addr)?;
+        let timeout = Duration::from_millis(o.timeout_ms.unwrap_or(60_000));
+        replay::run_gateway(addr, &spec, o.conns.unwrap_or(4), timeout)?
+    };
+    let outcomes = report.evaluate(&rules);
+    print!("{}", report.render(&outcomes));
+    let bench = o.bench.clone().unwrap_or_else(|| "BENCH_serving.json".to_string());
+    replay::write_bench(&bench, &report.to_json(&outcomes))?;
+    println!("(bench -> {bench})");
+    // nonzero exit on SLO violations / errors / a warm path that is not
+    // actually faster — this is the CI regression gate
+    report.check(&outcomes, o.check_warm)
 }
 
 fn cmd_demo(o: &Opts) -> Result<(), String> {

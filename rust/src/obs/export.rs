@@ -1,0 +1,243 @@
+//! Prometheus-style text exposition of the coordinator metrics.
+//!
+//! `admin metrics` keeps its JSON snapshot; `admin metrics --text`
+//! renders the same counters plus the latency histograms in the
+//! Prometheus text format (`# TYPE` lines, cumulative `_bucket{le=...}`
+//! series, `_sum`/`_count`), so a scraper pointed at a sidecar that
+//! shells out to the admin protocol needs no translation layer. All
+//! metric names carry a `pfm_` prefix. Bucket series are sparse: only
+//! buckets that hold samples are emitted (plus the mandatory `+Inf`),
+//! which keeps the 128-bucket grid from bloating the page.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::Metrics;
+use crate::obs::hist::Histogram;
+
+fn counter(out: &mut String, name: &str, help: &str, value: usize) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Emit one histogram's cumulative bucket series. `labels` is either
+/// empty or a ready-made `key="value"` list without braces.
+fn histogram(out: &mut String, name: &str, help: &str, labels: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let sep = if labels.is_empty() { "" } else { "," };
+    for (upper, cum) in h.cumulative_buckets() {
+        if upper.is_infinite() {
+            continue; // folded into the +Inf series below
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{upper}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count());
+    let tail = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    let _ = writeln!(out, "{name}_sum{tail} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{tail} {}", h.count());
+}
+
+/// Render the full metrics surface as Prometheus text.
+pub fn prometheus_text(m: &Metrics) -> String {
+    let mut out = String::new();
+
+    // request counters
+    let _ = writeln!(out, "# HELP pfm_requests_completed_total completed ordering requests");
+    let _ = writeln!(out, "# TYPE pfm_requests_completed_total counter");
+    for (method, n) in m.completed_by_method() {
+        let _ = writeln!(out, "pfm_requests_completed_total{{method=\"{method}\"}} {n}");
+    }
+    counter(&mut out, "pfm_errors_total", "requests answered with an error", m.errors());
+    counter(
+        &mut out,
+        "pfm_worker_panics_total",
+        "serving-thread panics caught and answered as errors",
+        m.worker_panics(),
+    );
+    gauge(
+        &mut out,
+        "pfm_queue_depth",
+        "submissions sitting in the bounded queue",
+        m.queue_depth() as f64,
+    );
+    counter(
+        &mut out,
+        "pfm_fallbacks_total",
+        "learned requests served by the spectral fallback",
+        m.fallbacks(),
+    );
+    counter(
+        &mut out,
+        "pfm_native_optimizer_total",
+        "learned requests served by the native PFM optimizer",
+        m.native_optimized(),
+    );
+    counter(&mut out, "pfm_symbolic_cache_hits_total", "symbolic-cache hits", m.symbolic_hits());
+    counter(
+        &mut out,
+        "pfm_symbolic_cache_misses_total",
+        "symbolic-cache misses",
+        m.symbolic_misses(),
+    );
+    counter(
+        &mut out,
+        "pfm_shared_analyses_total",
+        "analyses saved by pattern-keyed batch sharing",
+        m.shared_analyses(),
+    );
+    counter(
+        &mut out,
+        "pfm_levels_refined_total",
+        "V-cycle levels refined by native-PFM requests",
+        m.levels_refined(),
+    );
+    gauge(&mut out, "pfm_probe_threads", "configured probe-pool width", m.probe_threads() as f64);
+    gauge(
+        &mut out,
+        "pfm_factor_threads",
+        "effective parallel-factorization width",
+        m.factor_threads() as f64,
+    );
+    gauge(&mut out, "pfm_mean_batch", "mean network-executor batch occupancy", m.mean_batch());
+
+    // gateway counters
+    counter(
+        &mut out,
+        "pfm_gateway_connections_total",
+        "accepted gateway connections",
+        m.gateway_connections(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_frames_rx_total",
+        "well-framed gateway frames read",
+        m.gateway_frames_rx(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_frames_tx_total",
+        "gateway frames written",
+        m.gateway_frames_tx(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_busy_queue_full_total",
+        "requests answered Busy: bounded queue full",
+        m.gateway_busy_queue(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_busy_rate_limited_total",
+        "requests answered Busy: token bucket exceeded",
+        m.gateway_busy_throttled(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_malformed_frames_total",
+        "malformed frames rejected",
+        m.gateway_malformed(),
+    );
+    counter(
+        &mut out,
+        "pfm_gateway_admin_requests_total",
+        "admin-protocol requests served",
+        m.gateway_admin(),
+    );
+
+    // warm-start persistence counters
+    counter(
+        &mut out,
+        "pfm_persist_replayed_total",
+        "orderings recovered at startup",
+        m.persist_replayed(),
+    );
+    counter(
+        &mut out,
+        "pfm_persist_warm_hits_total",
+        "requests short-circuited by the warm store",
+        m.warm_hits(),
+    );
+    counter(
+        &mut out,
+        "pfm_persist_wal_appends_total",
+        "records durably appended to the WAL",
+        m.wal_appends(),
+    );
+    counter(
+        &mut out,
+        "pfm_persist_snapshots_total",
+        "warm-store snapshots written",
+        m.persist_snapshots(),
+    );
+    counter(
+        &mut out,
+        "pfm_persist_errors_total",
+        "persistence I/O failures absorbed",
+        m.persist_errors(),
+    );
+
+    // latency histograms
+    for (method, h) in m.latency_histograms() {
+        histogram(
+            &mut out,
+            "pfm_request_latency_seconds",
+            "submit-to-respond request latency",
+            &format!("method=\"{method}\""),
+            &h,
+        );
+    }
+    histogram(
+        &mut out,
+        "pfm_queue_wait_seconds",
+        "submit to start-of-compute wait",
+        "",
+        &m.queue_wait_histogram(),
+    );
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    #[test]
+    fn exposition_has_counters_buckets_and_inf_series() {
+        let m = Metrics::new();
+        m.record("AMD", 0.004, 0, None);
+        m.record("AMD", 0.008, 0, None);
+        m.record("PFM", 0.120, 2, None);
+        m.record_queue_wait(0.0003);
+        m.record_error();
+        let text = prometheus_text(&m);
+        assert!(text.contains("pfm_requests_completed_total{method=\"AMD\"} 2"));
+        assert!(text.contains("pfm_requests_completed_total{method=\"PFM\"} 1"));
+        assert!(text.contains("pfm_errors_total 1"));
+        assert!(text.contains("# TYPE pfm_request_latency_seconds histogram"));
+        assert!(text.contains("pfm_request_latency_seconds_bucket{method=\"AMD\",le=\"+Inf\"} 2"));
+        assert!(text.contains("pfm_request_latency_seconds_count{method=\"AMD\"} 2"));
+        assert!(text.contains("pfm_queue_wait_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("pfm_queue_wait_seconds_sum 0.0003"));
+        assert!(text.contains("pfm_queue_wait_seconds_count 1"));
+        // sparse: far fewer bucket lines than the 128-bucket grid
+        let bucket_lines = text.lines().filter(|l| l.contains("_bucket{")).count();
+        assert!(bucket_lines < 20, "bucket series not sparse: {bucket_lines} lines");
+        // cumulative within a series: AMD's two samples land in two
+        // buckets whose cumulative counts are 1 then 2
+        let amd: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("pfm_request_latency_seconds_bucket{method=\"AMD\""))
+            .collect();
+        assert_eq!(amd.len(), 3); // two sample buckets + +Inf
+        assert!(amd[0].ends_with(" 1"));
+        assert!(amd[1].ends_with(" 2"));
+    }
+}

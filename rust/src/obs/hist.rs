@@ -1,0 +1,399 @@
+//! Fixed-memory log-bucketed latency histograms.
+//!
+//! The serving metrics used to keep every latency sample in a
+//! `Vec<f64>` — a slow leak on a long-running `serve` (every request
+//! forever). A [`Histogram`] replaces that with a fixed array of
+//! `BUCKETS` counters on a logarithmic grid: ten buckets per decade
+//! starting at 1 µs, so bucket width is a constant ~26% relative error
+//! anywhere in the range and the whole structure is ~1 KiB regardless
+//! of how many samples it has absorbed.
+//!
+//! Quantiles are estimated by walking the cumulative counts to the
+//! bucket containing the requested rank and reporting that bucket's
+//! upper bound (clamped to the exact observed `min`/`max`, which are
+//! tracked alongside). Because the bucket index is a monotone function
+//! of the value, the estimate is guaranteed to land in the same bucket
+//! as the exact sorted-sample quantile — "within one bucket" accuracy,
+//! asserted by the property tests below.
+//!
+//! Histograms merge by elementwise addition, so per-worker or
+//! per-shard instances can be combined without losing accuracy — merge
+//! is associative and identical to having recorded all samples into
+//! one instance (also asserted below).
+
+use crate::util::json::Json;
+
+/// Number of buckets. Bucket 0 is the underflow bucket `[0, MIN]`, the
+/// last bucket is the overflow bucket; the 126 in between cover
+/// `(MIN·G^(i-1), MIN·G^i]`. At 10 buckets/decade that spans 12.6
+/// decades: 1 µs up to ~46 days, far past any plausible request.
+pub const BUCKETS: usize = 128;
+
+/// Lower edge of the grid in seconds: nothing we time resolves below
+/// a microsecond.
+const MIN_S: f64 = 1e-6;
+
+/// Buckets per decade — the grid growth factor is `10^(1/PER_DECADE)`.
+const PER_DECADE: f64 = 10.0;
+
+/// A mergeable latency histogram with O(1) memory in sample count.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value in seconds. Monotone non-decreasing in
+    /// `x`, which is what makes the quantile estimate bucket-exact.
+    pub fn bucket_index(x: f64) -> usize {
+        if !(x > MIN_S) {
+            // NaN, negatives and everything up to MIN_S land in the
+            // underflow bucket.
+            return 0;
+        }
+        let i = ((x / MIN_S).log10() * PER_DECADE).ceil() as isize;
+        i.clamp(1, BUCKETS as isize - 1) as usize
+    }
+
+    /// Inclusive upper bound of a bucket in seconds (`+inf` for the
+    /// overflow bucket).
+    pub fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            MIN_S
+        } else if i >= BUCKETS - 1 {
+            f64::INFINITY
+        } else {
+            MIN_S * 10f64.powf(i as f64 / PER_DECADE)
+        }
+    }
+
+    /// Record one sample (seconds). Non-finite and negative values are
+    /// clamped to zero rather than dropped so `count` stays in step
+    /// with the number of requests observed.
+    pub fn record(&mut self, secs: f64) {
+        let x = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.counts[Self::bucket_index(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Fold another histogram into this one. Equivalent to having
+    /// recorded all of `other`'s samples here.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the upper bound of the
+    /// bucket containing the sample of rank `ceil(q·n)`, clamped to the
+    /// exact observed extrema. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Index of the bucket containing the sample of rank `ceil(q·n)` —
+    /// the bucket `quantile(q)` reports from. Used by the accuracy
+    /// tests to assert bucket-exactness against sorted samples.
+    pub fn quantile_bucket(&self, q: f64) -> usize {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return i;
+            }
+        }
+        BUCKETS - 1
+    }
+
+    /// Non-empty buckets as `(upper_bound_s, cumulative_count)` pairs in
+    /// ascending order — the shape Prometheus text exposition wants.
+    /// The final `+Inf` bucket is the caller's to emit (it equals
+    /// `count()`).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((Self::bucket_upper(i), cum));
+        }
+        out
+    }
+
+    /// Summary block used by the metrics JSON. Keeps the seed-era keys
+    /// (`count`, `mean_s`, `p95_s`, `max_s`) and adds the rest of the
+    /// quantile ladder.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count as usize)
+            .set("mean_s", self.mean())
+            .set("min_s", self.min())
+            .set("p50_s", self.quantile(0.50))
+            .set("p95_s", self.quantile(0.95))
+            .set("p99_s", self.quantile(0.99))
+            .set("p999_s", self.quantile(0.999))
+            .set("max_s", self.max())
+    }
+}
+
+/// Exact quantile of a sorted sample set at rank `ceil(q·n)` — the
+/// reference the histogram estimate is tested against, and what the
+/// replay driver (which holds its full sample set anyway) reports.
+pub fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Log-uniform samples spanning the interesting serving range
+    /// (~1 µs to ~100 s) plus occasional out-of-range extremes.
+    fn random_workload(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match rng.next_below(20) {
+                0 => 0.0,
+                1 => -1.0,
+                2 => 1e-9,
+                3 => 1e5,
+                _ => 10f64.powf(-6.0 + 8.0 * rng.next_f64()),
+            })
+            .collect()
+    }
+
+    fn hist_of(samples: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut rng = Pcg64::new(7);
+        let mut xs = random_workload(&mut rng, 4000);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = 0usize;
+        for &x in &xs {
+            let i = Histogram::bucket_index(x);
+            assert!(i < BUCKETS);
+            assert!(i >= prev, "bucket index not monotone at {x}");
+            // the value must actually lie under its bucket's bound
+            assert!(x.max(0.0) <= Histogram::bucket_upper(i));
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn quantile_lands_in_the_exact_samples_bucket() {
+        // proptest-style: many random workloads, each checked at the
+        // whole quantile ladder against exact sorted-sample quantiles.
+        for seed in 0..40u64 {
+            let mut rng = Pcg64::new(seed * 31 + 1);
+            let n = 1 + rng.next_below(3000) as usize;
+            let samples = random_workload(&mut rng, n);
+            let h = hist_of(&samples);
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &q in &[0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+                let exact = exact_quantile(&sorted, q).max(0.0);
+                let exact_bucket = Histogram::bucket_index(exact);
+                assert_eq!(
+                    h.quantile_bucket(q),
+                    exact_bucket,
+                    "seed {seed} q {q}: estimate bucket != exact sample's bucket"
+                );
+                // and the reported value bounds the exact one from
+                // above within the bucket (clamped to observed max)
+                let est = h.quantile(q);
+                assert!(
+                    est >= exact || (est - exact).abs() < 1e-12,
+                    "seed {seed} q {q}: estimate {est} below exact {exact}"
+                );
+                assert!(est <= h.max() + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_single_recording() {
+        for seed in 0..10u64 {
+            let mut rng = Pcg64::new(seed + 100);
+            let a = random_workload(&mut rng, 500);
+            let b = random_workload(&mut rng, 700);
+            let c = random_workload(&mut rng, 300);
+            let (ha, hb, hc) = (hist_of(&a), hist_of(&b), hist_of(&c));
+
+            // (a ⊕ b) ⊕ c
+            let mut left = ha.clone();
+            left.merge(&hb);
+            left.merge(&hc);
+            // a ⊕ (b ⊕ c)
+            let mut bc = hb.clone();
+            bc.merge(&hc);
+            let mut right = ha.clone();
+            right.merge(&bc);
+
+            // single pass over the concatenation
+            let mut all = a.clone();
+            all.extend_from_slice(&b);
+            all.extend_from_slice(&c);
+            let one = hist_of(&all);
+
+            for h in [&left, &right] {
+                assert_eq!(h.counts, one.counts);
+                assert_eq!(h.count, one.count);
+                assert!((h.sum - one.sum).abs() < 1e-9 * one.sum.abs().max(1.0));
+                assert_eq!(h.min, one.min);
+                assert_eq!(h.max, one.max);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert!(h.cumulative_buckets().is_empty());
+
+        let mut h = Histogram::new();
+        h.record(0.125);
+        assert_eq!(h.count(), 1);
+        // every quantile of one sample is that sample's bucket, and the
+        // clamp to observed extrema makes the estimate exact
+        for &q in &[0.0, 0.5, 0.999, 1.0] {
+            assert!((h.quantile(q) - 0.125).abs() < 1e-12);
+        }
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.len(), 1);
+        assert_eq!(cum[0].1, 1);
+        assert!(cum[0].0 >= 0.125);
+    }
+
+    #[test]
+    fn overflow_and_underflow_buckets() {
+        let mut h = Histogram::new();
+        h.record(1e9); // > top of grid → overflow bucket
+        h.record(0.0); // underflow
+        h.record(-3.0); // clamped to 0, underflow
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 1e9);
+        assert_eq!(h.min(), 0.0);
+        // p99 of 3 samples is rank 3 → the overflow bucket, clamped to max
+        assert_eq!(h.quantile(0.99), 1e9);
+        assert_eq!(Histogram::bucket_index(1e9), BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+    }
+
+    #[test]
+    fn json_summary_has_seed_era_and_new_keys() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let s = h.to_json().to_string();
+        let keys = [
+            "\"count\":100",
+            "\"mean_s\":",
+            "\"p95_s\":",
+            "\"max_s\":",
+            "\"p50_s\":",
+            "\"p99_s\":",
+            "\"p999_s\":",
+            "\"min_s\":",
+        ];
+        for key in keys {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Observability: bounded latency histograms, per-request stage
+//! tracing, and Prometheus-style text exposition.
+//!
+//! - [`hist`] — fixed-memory log-bucketed histograms (the store behind
+//!   every latency figure the coordinator exports).
+//! - [`trace`] — stage spans on a monotonic clock, collected per
+//!   request and kept in a bounded ring for `admin trace`.
+//! - [`export`] — Prometheus text rendering of counters + histograms
+//!   for `admin metrics --text`.
+//!
+//! Zero-dependency like the rest of the crate; see DESIGN.md
+//! §Observability for the span taxonomy and histogram layout.
+
+pub mod export;
+pub mod hist;
+pub mod trace;

@@ -1,0 +1,366 @@
+//! Per-request stage spans on a monotonic clock.
+//!
+//! Each serving request carries a [`StageLog`] from the moment the
+//! gateway reads its frame (or the coordinator accepts the submit) to
+//! the moment the reply is encoded. Workers append non-overlapping
+//! leaf [`Span`]s — decode, rate-limit, queue wait, warm-store lookup,
+//! symbolic analysis, optimizer phases, numeric factor, encode — so
+//! the sum of span durations is always ≤ the request's wall time (the
+//! gaps are untimed glue: channel hops, result assembly).
+//!
+//! Completed logs are folded into a bounded [`TraceRing`] of the most
+//! recent N request traces with a slow-request threshold, surfaced
+//! through `admin trace`; the same spans ride the wire result so
+//! `remote --json` can show the breakdown client-side.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
+
+/// The span taxonomy. One label per distinct place a request spends
+/// time; see DESIGN.md §Observability for the table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Gateway: wire payload → `WireRequest` (CSR bounds checks included).
+    Decode,
+    /// Gateway: token-bucket admission check.
+    RateLimit,
+    /// Coordinator: submit → start of compute (submission queue + pool channel).
+    QueueWait,
+    /// Dispatcher: warm-ordering-store probe that hit.
+    WarmLookup,
+    /// Classical ordering, or the un-phased remainder of a native PFM run.
+    Order,
+    /// PFM: coarsening-hierarchy construction.
+    Coarsen,
+    /// PFM: ADMM on the dense or coarsest window.
+    Admm,
+    /// PFM: V-cycle + native-scale refinement passes.
+    Refine,
+    /// Fill evaluation: symbolic analysis served from the cache.
+    SymbolicHit,
+    /// Fill evaluation: symbolic analysis computed fresh.
+    SymbolicMiss,
+    /// Fill evaluation: LU numeric factorization.
+    NumericFactor,
+    /// Gateway: result → wire payload.
+    Encode,
+}
+
+impl Stage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::RateLimit => "rate_limit",
+            Stage::QueueWait => "queue_wait",
+            Stage::WarmLookup => "warm_lookup",
+            Stage::Order => "order",
+            Stage::Coarsen => "coarsen",
+            Stage::Admm => "admm",
+            Stage::Refine => "refine",
+            Stage::SymbolicHit => "symbolic_hit",
+            Stage::SymbolicMiss => "symbolic_miss",
+            Stage::NumericFactor => "numeric_factor",
+            Stage::Encode => "encode",
+        }
+    }
+}
+
+/// One timed stage of one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub stage: Stage,
+    pub secs: f64,
+}
+
+/// The in-flight span collector a request carries from acceptance to
+/// completion. `started` anchors wall time on the monotonic clock.
+#[derive(Clone, Debug)]
+pub struct StageLog {
+    started: Instant,
+    spans: Vec<Span>,
+}
+
+impl Default for StageLog {
+    fn default() -> Self {
+        StageLog::new()
+    }
+}
+
+impl StageLog {
+    /// Start the clock now (frame receipt / submit time).
+    pub fn new() -> Self {
+        StageLog { started: Instant::now(), spans: Vec::new() }
+    }
+
+    /// Append a span measured by the caller.
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.spans.push(Span { stage, secs: secs.max(0.0) });
+    }
+
+    /// Time a closure as one span.
+    pub fn time<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Sum of recorded span durations — by construction ≤ `wall()`.
+    pub fn sum(&self) -> f64 {
+        self.spans.iter().map(|s| s.secs).sum()
+    }
+
+    /// Wall time since the log was started.
+    pub fn wall(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Seal the log into a ring entry for a completed request.
+    pub fn finish(&self, id: u64, method: &'static str) -> RequestTrace {
+        RequestTrace {
+            id,
+            method,
+            started: self.started,
+            wall_s: self.wall(),
+            slow: false, // the ring applies its threshold on push
+            spans: self.spans.clone(),
+        }
+    }
+}
+
+/// A completed request's trace as held by the ring.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub method: &'static str,
+    /// Monotonic start, kept so a post-hoc encode annotation can extend
+    /// `wall_s` and preserve the spans-≤-wall invariant.
+    pub started: Instant,
+    pub wall_s: f64,
+    pub slow: bool,
+    pub spans: Vec<Span>,
+}
+
+impl RequestTrace {
+    /// Bytes of heap + inline state this entry holds (bounded: spans
+    /// are capped by the stage taxonomy, the ring by its capacity).
+    pub fn state_bytes(&self) -> usize {
+        std::mem::size_of::<RequestTrace>() + self.spans.capacity() * std::mem::size_of::<Span>()
+    }
+}
+
+/// Default ring capacity (`ServiceConfig::trace_capacity` overrides).
+pub const DEFAULT_TRACE_CAPACITY: usize = 64;
+
+/// Default slow-request threshold (`ServiceConfig::slow_threshold`).
+pub const DEFAULT_SLOW_THRESHOLD: Duration = Duration::from_millis(500);
+
+struct RingInner {
+    buf: VecDeque<RequestTrace>,
+    cap: usize,
+    slow_threshold_s: f64,
+    recorded: u64,
+    slow: u64,
+}
+
+/// Bounded ring of the most recent request traces.
+pub struct TraceRing {
+    inner: Mutex<RingInner>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(DEFAULT_TRACE_CAPACITY, DEFAULT_SLOW_THRESHOLD)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize, slow_threshold: Duration) -> Self {
+        TraceRing {
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::new(),
+                cap: cap.max(1),
+                slow_threshold_s: slow_threshold.as_secs_f64(),
+                recorded: 0,
+                slow: 0,
+            }),
+        }
+    }
+
+    /// Re-arm capacity and threshold (service start applies its config;
+    /// existing entries are trimmed to the new capacity).
+    pub fn configure(&self, cap: usize, slow_threshold: Duration) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.cap = cap.max(1);
+        g.slow_threshold_s = slow_threshold.as_secs_f64();
+        while g.buf.len() > g.cap {
+            g.buf.pop_front();
+        }
+    }
+
+    /// Push a completed trace, evicting the oldest past capacity.
+    pub fn push(&self, mut trace: RequestTrace) {
+        let mut g = lock_unpoisoned(&self.inner);
+        trace.slow = trace.wall_s >= g.slow_threshold_s;
+        g.recorded += 1;
+        if trace.slow {
+            g.slow += 1;
+        }
+        g.buf.push_back(trace);
+        if g.buf.len() > g.cap {
+            g.buf.pop_front();
+        }
+    }
+
+    /// Append an encode span to the ring entry for `id` (the gateway
+    /// writer learns the encode duration only after the coordinator's
+    /// trace was recorded). Wall time is extended to now so the
+    /// invariant `sum(spans) ≤ wall` survives the late append. No-op
+    /// if the entry has already been evicted.
+    pub fn annotate_encode(&self, id: u64, secs: f64) {
+        let mut g = lock_unpoisoned(&self.inner);
+        let threshold = g.slow_threshold_s;
+        let mut became_slow = false;
+        if let Some(t) = g.buf.iter_mut().rev().find(|t| t.id == id) {
+            t.spans.push(Span { stage: Stage::Encode, secs: secs.max(0.0) });
+            t.wall_s = t.started.elapsed().as_secs_f64();
+            if !t.slow && t.wall_s >= threshold {
+                t.slow = true;
+                became_slow = true;
+            }
+        }
+        if became_slow {
+            g.slow += 1;
+        }
+    }
+
+    /// Newest-first copy of the ring (tests, JSON).
+    pub fn recent(&self) -> Vec<RequestTrace> {
+        let g = lock_unpoisoned(&self.inner);
+        g.buf.iter().rev().cloned().collect()
+    }
+
+    /// Bytes held by the ring — bounded by `cap × per-trace bound`,
+    /// independent of how many requests have passed through.
+    pub fn state_bytes(&self) -> usize {
+        let g = lock_unpoisoned(&self.inner);
+        g.buf.iter().map(|t| t.state_bytes()).sum()
+    }
+
+    /// The `admin trace` payload: ring config, counters, and the most
+    /// recent traces newest-first with per-span milliseconds.
+    pub fn to_json(&self) -> Json {
+        let g = lock_unpoisoned(&self.inner);
+        let traces: Vec<Json> = g
+            .buf
+            .iter()
+            .rev()
+            .map(|t| {
+                let spans: Vec<Json> = t
+                    .spans
+                    .iter()
+                    .map(|s| Json::obj().set("stage", s.stage.label()).set("ms", s.secs * 1e3))
+                    .collect();
+                Json::obj()
+                    .set("id", t.id as usize)
+                    .set("method", t.method)
+                    .set("wall_ms", t.wall_s * 1e3)
+                    .set("slow", t.slow)
+                    .set("stages", spans)
+            })
+            .collect();
+        Json::obj()
+            .set("capacity", g.cap)
+            .set("slow_threshold_ms", g.slow_threshold_s * 1e3)
+            .set("recorded", g.recorded as usize)
+            .set("slow", g.slow as usize)
+            .set("traces", traces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn spans_are_ordered_and_cover_at_most_wall_time() {
+        let mut log = StageLog::new();
+        log.time(Stage::Decode, || sleep(Duration::from_millis(2)));
+        log.time(Stage::QueueWait, || sleep(Duration::from_millis(3)));
+        log.time(Stage::Order, || sleep(Duration::from_millis(2)));
+        sleep(Duration::from_millis(1)); // untimed glue
+        let wall = log.wall();
+        assert!(log.sum() <= wall + 1e-9, "sum {} > wall {}", log.sum(), wall);
+        assert!(log.sum() > 0.0);
+        // recorded in call order
+        let stages: Vec<&str> = log.spans().iter().map(|s| s.stage.label()).collect();
+        assert_eq!(stages, ["decode", "queue_wait", "order"]);
+        // durations are monotone w.r.t. the sleeps (coarse check: each ≥ its sleep)
+        assert!(log.spans()[0].secs >= 0.002);
+        assert!(log.spans()[1].secs >= 0.003);
+    }
+
+    #[test]
+    fn negative_durations_are_clamped() {
+        let mut log = StageLog::new();
+        log.add(Stage::Order, -1.0);
+        assert_eq!(log.spans()[0].secs, 0.0);
+        assert!(log.sum() <= log.wall() + 1e-9);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let ring = TraceRing::new(4, Duration::from_millis(500));
+        for i in 0..10u64 {
+            let log = StageLog::new();
+            ring.push(log.finish(i, "AMD"));
+        }
+        let recent = ring.recent();
+        assert_eq!(recent.len(), 4);
+        let ids: Vec<u64> = recent.iter().map(|t| t.id).collect();
+        assert_eq!(ids, [9, 8, 7, 6]);
+        let s = ring.to_json().to_string();
+        assert!(s.contains("\"recorded\":10"));
+        assert!(s.contains("\"capacity\":4"));
+    }
+
+    #[test]
+    fn slow_threshold_flags_requests() {
+        let ring = TraceRing::new(8, Duration::from_millis(1));
+        let log = StageLog::new();
+        sleep(Duration::from_millis(3));
+        ring.push(log.finish(1, "PFM"));
+        let fast = StageLog::new();
+        ring.push(fast.finish(2, "PFM"));
+        let recent = ring.recent();
+        assert!(recent.iter().find(|t| t.id == 1).unwrap().slow);
+        assert!(!recent.iter().find(|t| t.id == 2).unwrap().slow);
+        assert!(ring.to_json().to_string().contains("\"slow\":1"));
+    }
+
+    #[test]
+    fn encode_annotation_appends_span_and_extends_wall() {
+        let ring = TraceRing::new(8, Duration::from_millis(500));
+        let mut log = StageLog::new();
+        log.time(Stage::Order, || sleep(Duration::from_millis(2)));
+        ring.push(log.finish(7, "RCM"));
+        sleep(Duration::from_millis(2));
+        ring.annotate_encode(7, 0.0015);
+        let t = ring.recent().into_iter().find(|t| t.id == 7).unwrap();
+        assert_eq!(t.spans.last().unwrap().stage, Stage::Encode);
+        let sum: f64 = t.spans.iter().map(|s| s.secs).sum();
+        assert!(sum <= t.wall_s + 1e-9, "sum {} > wall {}", sum, t.wall_s);
+        // unknown id: no panic, no change
+        ring.annotate_encode(999, 0.1);
+        assert_eq!(ring.recent().len(), 1);
+    }
+}

@@ -105,6 +105,22 @@ impl OptBudget {
     }
 }
 
+/// Wall-clock split of one `optimize` call across its major phases,
+/// reported for observability (the coordinator turns these into
+/// per-request trace spans). Phases that did not run stay 0. Time not
+/// covered here (init, prolongation, identity evals) is the caller's to
+/// attribute; the sum never exceeds the call's wall time.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimes {
+    /// coarsening-hierarchy construction — 0 when the hierarchy came
+    /// from a [`SharedPrep`] or the dense path ran
+    pub coarsen_s: f64,
+    /// ADMM on the dense or coarsest window
+    pub admm_s: f64,
+    /// refinement passes: V-cycle per-level + native-scale subgradient
+    pub refine_s: f64,
+}
+
 /// Score initialization — the paper's ablation axis (Table 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScoreInit {
@@ -206,6 +222,7 @@ impl PfmOptimizer {
                 coarse_n: None,
                 probe_threads: composed_threads(self.probe_threads, self.factor_threads),
                 kind: FactorKind::for_matrix(a),
+                phases: PhaseTimes::default(),
             };
         }
 
@@ -257,6 +274,7 @@ impl PfmOptimizer {
         let mut coarse_n = None;
         let mut coarse_evals = 0usize;
         let mut levels_refined = 0usize;
+        let mut phases = PhaseTimes::default();
         let mut params = self.params.clone();
         params.adaptive_rho |= self.budget.adaptive_rho;
         let multilevel_wanted = self.budget.outer > 0 || self.budget.level_refine > 0;
@@ -264,6 +282,7 @@ impl PfmOptimizer {
             if n <= self.dense_cap {
                 if self.budget.outer > 0 {
                     let win = DenseWindow::from_csr(gm);
+                    let t_admm = Instant::now();
                     let out = admm_optimize(
                         &win,
                         &mut obj,
@@ -275,6 +294,7 @@ impl PfmOptimizer {
                         &mut rng,
                         &mut trace,
                     );
+                    phases.admm_s += t_admm.elapsed().as_secs_f64();
                     outer_iters = out.outer_iters;
                     best_f = out.objective;
                     y = out.y;
@@ -287,7 +307,9 @@ impl PfmOptimizer {
                 let hier: Option<&Hierarchy> = match prep.and_then(|p| p.hierarchy.as_ref()) {
                     Some(h) => Some(h),
                     None => {
+                        let t_coarsen = Instant::now();
                         built = Hierarchy::build(gm, self.dense_cap);
+                        phases.coarsen_s += t_coarsen.elapsed().as_secs_f64();
                         built.as_ref()
                     }
                 };
@@ -306,6 +328,7 @@ impl PfmOptimizer {
                     let cf = cobj.eval(&order_from_scores(&yc));
                     let mut ctrace = vec![cf];
                     let win = DenseWindow::from_csr(h.coarsest());
+                    let t_admm = Instant::now();
                     let out = admm_optimize(
                         &win,
                         &mut cobj,
@@ -317,6 +340,7 @@ impl PfmOptimizer {
                         &mut rng,
                         &mut ctrace,
                     );
+                    phases.admm_s += t_admm.elapsed().as_secs_f64();
                     outer_iters = out.outer_iters;
                     coarse_evals = cobj.evals;
                     // candidate A — direct prolongation through the
@@ -351,6 +375,7 @@ impl PfmOptimizer {
                             if lf.is_finite() {
                                 ltrace.clear();
                                 ltrace.push(lf);
+                                let t_refine = Instant::now();
                                 let steps = refine(
                                     lm,
                                     FactorKind::Cholesky,
@@ -362,6 +387,7 @@ impl PfmOptimizer {
                                     &mut rng,
                                     &mut ltrace,
                                 );
+                                phases.refine_s += t_refine.elapsed().as_secs_f64();
                                 if steps > 0 {
                                     levels_refined += 1;
                                 }
@@ -381,6 +407,7 @@ impl PfmOptimizer {
         }
 
         // --- sampled-subgradient refinement at the native scale ---
+        let t_refine = Instant::now();
         let refine_steps = refine(
             a,
             obj.kind(),
@@ -392,6 +419,7 @@ impl PfmOptimizer {
             &mut rng,
             &mut trace,
         );
+        phases.refine_s += t_refine.elapsed().as_secs_f64();
 
         let order = order_from_scores(&y);
         PfmReport {
@@ -407,6 +435,7 @@ impl PfmOptimizer {
             coarse_n,
             probe_threads: pool.threads(),
             kind: obj.kind(),
+            phases,
         }
     }
 }
@@ -484,6 +513,9 @@ pub struct PfmReport {
     pub probe_threads: usize,
     /// factorization kind the objective ran
     pub kind: FactorKind,
+    /// wall-clock split across coarsen / ADMM / refine (all zero when the
+    /// instance was too small for any phase to run)
+    pub phases: PhaseTimes,
 }
 
 #[cfg(test)]

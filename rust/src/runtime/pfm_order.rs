@@ -6,7 +6,7 @@
 //! from is always recorded in the returned provenance.
 
 use crate::order::{fiedler_order_with, order_from_scores_f32};
-use crate::pfm::{OptBudget, PfmOptimizer, ScoreInit, SharedPrep, SPECTRAL_INIT_ITERS};
+use crate::pfm::{OptBudget, PfmOptimizer, PhaseTimes, ScoreInit, SharedPrep, SPECTRAL_INIT_ITERS};
 use crate::runtime::executor::{PfmRuntime, RuntimeError};
 use crate::sparse::Csr;
 
@@ -50,6 +50,9 @@ pub struct OrderOutcome {
     pub opt_evals: usize,
     /// intermediate V-cycle levels the native optimizer refined
     pub levels_refined: usize,
+    /// wall-clock split of the native optimizer's coarsen / ADMM / refine
+    /// phases (all zero on the network and fallback paths)
+    pub phases: PhaseTimes,
 }
 
 /// The learned reordering methods of the paper's Table 2 / Table 3.
@@ -178,6 +181,7 @@ impl Learned {
                 opt_iters: 0,
                 opt_evals: 0,
                 levels_refined: 0,
+                phases: PhaseTimes::default(),
             });
         }
         if let Some(init) = self.native_init() {
@@ -192,6 +196,7 @@ impl Learned {
                 opt_iters: rep.outer_iters,
                 opt_evals: rep.evals,
                 levels_refined: rep.levels_refined,
+                phases: rep.phases,
             });
         }
         // Surrogate-objective methods approximate a spectral ordering;
@@ -202,6 +207,7 @@ impl Learned {
             opt_iters: 0,
             opt_evals: 0,
             levels_refined: 0,
+            phases: PhaseTimes::default(),
         })
     }
 

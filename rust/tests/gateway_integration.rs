@@ -457,6 +457,56 @@ fn client_io_timeout_bounds_a_silent_peer() {
     drop(hold); // detach; the sleeper exits on its own
 }
 
+/// Stage tracing across the wire: every served request carries a
+/// per-stage breakdown (end-anchored optional wire section) whose summed
+/// durations never exceed the client-observed wall clock, and the admin
+/// `trace` / `metrics-text` commands surface the bounded ring and the
+/// Prometheus exposition of the latency histograms.
+#[test]
+fn stage_breakdown_rides_the_wire_and_admin_surfaces_traces() {
+    let gw = gateway(
+        ServiceConfig {
+            workers: 1,
+            artifact_dir: "nonexistent-dir-ok-gwi-stages".into(),
+            ..Default::default()
+        },
+        0.0,
+        32.0,
+    );
+    let a = laplacian_2d(10, 10);
+    let mut c = GatewayClient::connect(gw.local_addr()).unwrap();
+    for i in 0..3u64 {
+        let mut req = request(i, Method::Classical(Classical::Amd), a.clone());
+        req.eval_fill = true;
+        let t0 = std::time::Instant::now();
+        match c.request(&req).unwrap() {
+            Reply::Result(res) => {
+                let wall = t0.elapsed().as_secs_f64();
+                assert!(!res.stages.is_empty(), "every served request carries stages");
+                let labels: Vec<&str> = res.stages.iter().map(|(l, _)| l.as_str()).collect();
+                assert!(labels.contains(&"decode"), "stages: {labels:?}");
+                assert!(labels.contains(&"rate_limit"), "stages: {labels:?}");
+                assert!(labels.contains(&"queue_wait"), "stages: {labels:?}");
+                assert!(labels.contains(&"order"), "stages: {labels:?}");
+                assert!(res.stages.iter().all(|&(_, s)| s >= 0.0), "{:?}", res.stages);
+                let sum: f64 = res.stages.iter().map(|&(_, s)| s).sum();
+                assert!(sum <= wall + 1e-6, "stage sum {sum}s above client wall {wall}s");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    let tr = c.admin(AdminCmd::Trace).unwrap();
+    assert!(tr.contains("\"traces\""), "{tr}");
+    assert!(tr.contains("\"queue_wait\""), "{tr}");
+    assert!(tr.contains("\"encode\""), "ring must carry the encode annotation: {tr}");
+    let text = c.admin(AdminCmd::MetricsText).unwrap();
+    assert!(text.contains("pfm_request_latency_seconds_bucket"), "{text}");
+    assert!(text.contains("pfm_queue_wait_seconds_count"), "{text}");
+    assert!(text.contains("# TYPE"), "{text}");
+    drop(c);
+    gw.shutdown();
+}
+
 /// Admin protocol: ping, metrics (with live gateway counters), throttle.
 #[test]
 fn admin_protocol_reports_live_metrics() {

@@ -1,0 +1,118 @@
+//! Integration tests for the traffic-replay load driver
+//! (`harness::replay`): deterministic trace generation over the public
+//! API, an end-to-end in-process run against a persisting service (warm
+//! bursts must land as warm-store hits on the second pass), and the
+//! committed `BENCH_serving.json` document shape.
+
+use std::time::Duration;
+
+use pfm_reorder::coordinator::{ReorderService, ServiceConfig};
+use pfm_reorder::harness::replay::{
+    self, ReplaySpec, SloRule, TraceKind, BASE_INTERARRIVAL_S, BENCH_SCHEMA,
+};
+use pfm_reorder::persist::PersistConfig;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pfm_replay_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn public_trace_generation_is_deterministic_across_calls() {
+    for kind in [TraceKind::Mixed, TraceKind::Warm, TraceKind::ColdStorm] {
+        let spec = ReplaySpec { kind, speed: 50.0, requests: 40, seed: 1234 };
+        let a = replay::generate(&spec);
+        let b = replay::generate(&spec);
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix, y.matrix, "{kind:?} trace must be reproducible");
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.method.label(), y.method.label());
+        }
+        // open-loop schedule at the compressed inter-arrival gap
+        let gap = a[1].at_s - a[0].at_s;
+        assert!((gap - BASE_INTERARRIVAL_S / 50.0).abs() < 1e-12, "{kind:?} gap {gap}");
+        // a different seed reorders/remints the work
+        let other = replay::generate(&ReplaySpec { seed: 99, ..spec });
+        assert!(
+            kind == TraceKind::Warm || a.iter().zip(&other).any(|(x, y)| x.matrix != y.matrix),
+            "{kind:?}: seed must matter"
+        );
+    }
+}
+
+#[test]
+fn slo_rules_round_trip_through_the_public_parser() {
+    let r = SloRule::parse("warm_hit:p99=250ms").unwrap();
+    assert_eq!(r.class.as_deref(), Some("warm_hit"));
+    assert_eq!(r.stat, "p99");
+    assert!((r.limit_s - 0.25).abs() < 1e-12);
+    assert!(SloRule::parse("p42=1s").is_err());
+    assert!(SloRule::parse("bogus_class:p99=1s").is_err());
+}
+
+/// End-to-end in-process replay: run a warm-burst trace twice against
+/// one persisting service. The first pass populates the warm-start
+/// store (cold native serves); the second pass must be served from it
+/// (warm_hit class), and the benchmark document must carry the schema
+/// and per-class quantiles.
+#[test]
+fn inproc_replay_reports_warm_hits_and_writes_the_bench_document() {
+    let dir = temp_dir("inproc");
+    let service = ReorderService::start(ServiceConfig {
+        workers: 2,
+        artifact_dir: "nonexistent-dir-ok-replay".into(),
+        persist: Some(PersistConfig::new(dir.join("store"))),
+        slow_threshold: Duration::from_millis(100),
+        ..Default::default()
+    });
+
+    let spec = ReplaySpec { kind: TraceKind::Warm, speed: 20.0, requests: 24, seed: 7 };
+    let first = replay::run_inproc(&service, &spec);
+    assert_eq!(first.errors, 0, "first pass must not error");
+    assert!(first.completed() + first.busy == 24);
+
+    // every warm-pool pattern is now persisted; the rerun hits the store
+    let second = replay::run_inproc(&service, &spec);
+    assert_eq!(second.errors, 0);
+    let warm = second
+        .summary("warm_hit")
+        .expect("second pass over identical patterns must contain warm-store hits");
+    assert!(warm.count > 0);
+    assert!(warm.p50_s <= warm.p99_s && warm.p99_s <= warm.p999_s && warm.p999_s <= warm.max_s);
+    assert!(second.throughput_rps() > 0.0);
+
+    // SLO evaluation + committed document shape
+    let rules = vec![
+        SloRule::parse("p99=30s").unwrap(),
+        SloRule::parse("warm_hit:p50=30s").unwrap(),
+    ];
+    let outcomes = second.evaluate(&rules);
+    assert!(outcomes.iter().all(|o| o.pass), "{outcomes:?}");
+    second.check(&outcomes, false).unwrap();
+
+    let bench = dir.join("BENCH_serving.json");
+    replay::write_bench(bench.to_str().unwrap(), &second.to_json(&outcomes)).unwrap();
+    let doc = std::fs::read_to_string(&bench).unwrap();
+    assert!(doc.contains(&format!("\"schema\":\"{BENCH_SCHEMA}\"")), "{doc}");
+    assert!(doc.contains("\"warm_hit\""), "{doc}");
+    assert!(doc.contains("\"p999_s\""), "{doc}");
+    assert!(doc.contains("\"slo\""), "{doc}");
+    assert!(doc.ends_with('\n'));
+
+    // the service's own observability saw the run: bounded histograms
+    // recorded every completion and the trace ring holds recent traces
+    let (_, h) = service
+        .metrics
+        .latency_histograms()
+        .into_iter()
+        .find(|(_, h)| h.count() > 0)
+        .expect("replay must have recorded latencies");
+    assert!(h.count() > 0);
+    assert!(!service.metrics.recent_traces().is_empty());
+
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
