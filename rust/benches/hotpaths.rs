@@ -211,6 +211,35 @@ fn main() {
         r4.objective
     );
 
+    // --- incremental probe evaluation: full vs suffix re-walk at n=4096 ---
+    // equal seed, budget, and thread count; the savings ledger steers both
+    // runs identically, so the incremental run must accept the *same*
+    // orderings and the pair isolates pure probe-evaluation cost
+    let mut rf = None;
+    let pif = bench(&mut results, "probe_incremental/full_n4096", warm, it(2), || {
+        rf = Some(PfmOptimizer::new(par_budget, 7).with_incremental(false).optimize(&grid2d));
+    });
+    let mut ri = None;
+    let pii = bench(&mut results, "probe_incremental/incremental_n4096", warm, it(2), || {
+        ri = Some(PfmOptimizer::new(par_budget, 7).optimize(&grid2d));
+    });
+    let probe_incremental_speedup = pif.median / pii.median.max(1e-12);
+    let (rf, ri) = (rf.unwrap(), ri.unwrap());
+    assert_eq!(
+        rf.order, ri.order,
+        "incremental evaluation must not change the accepted orderings"
+    );
+    assert_eq!(rf.objective, ri.objective);
+    assert_eq!(rf.trace, ri.trace);
+    assert!(ri.incremental_probes > 0, "incremental run never engaged at n=4096");
+    assert_eq!(rf.incremental_probes, 0);
+    println!(
+        "  incremental probe speedup on 2d_n4096 (full → incremental): \
+         {probe_incremental_speedup:.2}×  ({} of {} evals incremental, {} base prepares) \
+         at identical orderings",
+        ri.incremental_probes, ri.evals, ri.probe_prepares
+    );
+
     // --- probe × factor thread composition at n=1024 ---
     // probe2×factor2 and probe4×factor1 request the same total width; the
     // pool is clamped to avail/factor_threads, and the ordering must not
@@ -322,6 +351,7 @@ fn main() {
         .set("lu_amd_speedup_convdiff_n4096", lu_speedup)
         .set("pfm_fill_vs_amd_n1024", pfm_fill_vs_amd)
         .set("pfm_parallel_speedup_n4096", pfm_parallel_speedup)
+        .set("probe_incremental_speedup_n4096", probe_incremental_speedup)
         .set("supernodal_parallel_speedup_n4096", supernodal_parallel_speedup)
         .set("pfm_compose_ratio_n1024", pfm_compose_ratio)
         .set("ns_per_iter", ns_per_iter);

@@ -58,6 +58,12 @@ struct Inner {
     shared_analyses: usize,
     /// V-cycle intermediate levels refined by native-PFM requests (total)
     levels_refined: usize,
+    /// native-PFM objective evaluations served by the incremental suffix
+    /// re-walk (total across requests; `pfm::incremental`)
+    incremental_probes: usize,
+    /// native-PFM objective evaluations that ran a full symbolic/numeric
+    /// pass (total across requests)
+    full_probes: usize,
     /// probe-pool width the service runs native-PFM refinement with
     probe_threads: usize,
     /// parallel-factorization width the service runs with (effective —
@@ -189,6 +195,22 @@ impl Metrics {
 
     pub fn levels_refined(&self) -> usize {
         lock_unpoisoned(&self.inner).levels_refined
+    }
+
+    /// Accumulate a native-PFM request's probe split: evaluations served
+    /// incrementally vs. by a full pass.
+    pub fn record_probe_split(&self, incremental: usize, full: usize) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.incremental_probes += incremental;
+        g.full_probes += full;
+    }
+
+    pub fn incremental_probes(&self) -> usize {
+        lock_unpoisoned(&self.inner).incremental_probes
+    }
+
+    pub fn full_probes(&self) -> usize {
+        lock_unpoisoned(&self.inner).full_probes
     }
 
     /// Record the service's configured probe-pool width (set once at
@@ -464,6 +486,8 @@ impl Metrics {
             .set("symbolic_cache_misses", self.symbolic_misses())
             .set("shared_analyses", self.shared_analyses())
             .set("levels_refined", self.levels_refined())
+            .set("incremental_probes", self.incremental_probes())
+            .set("full_probes", self.full_probes())
             .set("probe_threads", self.probe_threads())
             .set("factor_threads", self.factor_threads())
             .set("gateway", gateway)
@@ -563,13 +587,19 @@ mod tests {
         m.record_levels_refined(2);
         m.record_levels_refined(0);
         m.record_levels_refined(5);
+        m.record_probe_split(40, 9);
+        m.record_probe_split(0, 12);
         assert_eq!(m.shared_analyses(), 5);
         assert_eq!(m.levels_refined(), 7);
+        assert_eq!(m.incremental_probes(), 40);
+        assert_eq!(m.full_probes(), 21);
         assert_eq!(m.probe_threads(), 4);
         assert_eq!(m.factor_threads(), 2);
         let json = m.to_json().to_string();
         assert!(json.contains("\"shared_analyses\":5"));
         assert!(json.contains("\"levels_refined\":7"));
+        assert!(json.contains("\"incremental_probes\":40"));
+        assert!(json.contains("\"full_probes\":21"));
         assert!(json.contains("\"probe_threads\":4"));
         assert!(json.contains("\"factor_threads\":2"));
     }

@@ -857,8 +857,16 @@ fn network_loop(
                             if ph.admm_s > 0.0 {
                                 req.stages.add(Stage::Admm, ph.admm_s);
                             }
-                            if ph.refine_s > 0.0 {
-                                req.stages.add(Stage::Refine, ph.refine_s);
+                            // refine time splits into the incremental-
+                            // engaged portion and the full-evaluation
+                            // remainder, so `admin trace` shows what the
+                            // suffix re-walks actually cost vs. saved
+                            let incr = ph.refine_incr_s.min(ph.refine_s);
+                            if incr > 0.0 {
+                                req.stages.add(Stage::RefineIncremental, incr);
+                            }
+                            if ph.refine_s > incr {
+                                req.stages.add(Stage::Refine, ph.refine_s - incr);
                             }
                             if order_secs > phased {
                                 req.stages.add(Stage::Order, order_secs - phased);
@@ -904,6 +912,7 @@ fn network_loop(
                     Ok((out, latency, fill, fill_kind)) => {
                         metrics.record(l.label(), latency, batch_size, Some(out.provenance));
                         metrics.record_levels_refined(out.levels_refined);
+                        metrics.record_probe_split(out.incremental_probes, out.full_probes);
                         metrics.record_trace(req.stages.finish(req.id, l.label()));
                         let native_run =
                             out.provenance == crate::runtime::Provenance::NativeOptimizer;
@@ -1181,6 +1190,47 @@ mod tests {
         assert_eq!(service.metrics.native_optimized(), 1);
         assert_eq!(service.metrics.fallbacks(), 0);
         assert_eq!(service.metrics.levels_refined(), res.levels_refined);
+        // the probe split is attributed (incremental engagement itself is
+        // matrix/seed-dependent; its accounting is pinned in pfm::)
+        assert!(service.metrics.full_probes() > 0, "native run recorded no full probes");
+    }
+
+    #[test]
+    fn incremental_refinement_is_observable_in_metrics_and_trace() {
+        // a larger request with a real refinement budget: the incremental
+        // path must engage, surface in the metrics split, and carve a
+        // refine_incremental span out of (not in addition to) refine time
+        let service = ReorderService::start(ServiceConfig {
+            workers: 2,
+            artifact_dir: "nonexistent-dir-ok-svc-incr".into(),
+            ..Default::default()
+        });
+        let a = laplacian_2d(24, 24); // n = 576
+        let budget = OptBudget { outer: 1, refine: 24, time_ms: None, ..OptBudget::default() };
+        let rx = service.submit_with_budget(
+            a,
+            Method::Learned(Learned::Pfm),
+            9,
+            false,
+            None,
+            Some(budget),
+        );
+        let res = rx.recv().expect("response").result.expect("ok");
+        assert_eq!(res.provenance, Some(crate::runtime::Provenance::NativeOptimizer));
+        assert!(
+            service.metrics.incremental_probes() > 0,
+            "incremental probes must engage at n=576 with refine=24"
+        );
+        assert!(service.metrics.full_probes() > 0);
+        let incr: f64 = res
+            .stages
+            .iter()
+            .filter(|s| s.stage == Stage::RefineIncremental)
+            .map(|s| s.secs)
+            .sum();
+        assert!(incr > 0.0, "no refine_incremental span recorded");
+        let json = service.metrics.to_json().to_string();
+        assert!(json.contains("\"incremental_probes\""));
     }
 
     #[test]

@@ -52,6 +52,15 @@ pub struct FactorWorkspace {
     /// per-worker scratch for the parallel supernodal scheduler
     /// (`factor::sched`); empty until a parallel factorization runs
     pub(crate) workers: Vec<WorkerScratch>,
+    /// candidate inverse ordering (incremental symbolic eval)
+    pub(crate) inc_inv: Vec<usize>,
+    /// partial etree parents (incremental symbolic eval)
+    pub(crate) inc_parent: Vec<usize>,
+    /// Liu path-compression ancestors (incremental symbolic eval)
+    pub(crate) inc_ancestor: Vec<usize>,
+    /// row-subtree visit marks (incremental symbolic eval; distinct from
+    /// `mark` so a probe can never clobber a numeric kernel's state)
+    pub(crate) inc_mark: Vec<usize>,
     grow_events: u64,
     factorizations: u64,
 }
@@ -177,6 +186,21 @@ impl FactorWorkspace {
             wsc.st_start = 0;
         }
         if grew {
+            self.grow_events += 1;
+        }
+    }
+
+    /// Make the incremental-symbolic scratch usable for an n-row walk
+    /// (`pfm::incremental`). Grows at most once per high-water n (counted
+    /// in [`grow_events`](Self::grow_events)); per-candidate resets are
+    /// the caller's O(n) fills, so the probe-pool steady state performs
+    /// zero scratch allocations.
+    pub(crate) fn acquire_incremental(&mut self, n: usize) {
+        if self.inc_inv.len() < n {
+            self.inc_inv.resize(n, 0);
+            self.inc_parent.resize(n, NONE);
+            self.inc_ancestor.resize(n, NONE);
+            self.inc_mark.resize(n, NONE);
             self.grow_events += 1;
         }
     }
@@ -479,6 +503,19 @@ mod tests {
         assert!(ws.workers[0].st_pos.is_empty(), "staging log must reset");
         ws.acquire_workers(100, 8); // more workers: grows
         assert_eq!(ws.grow_events(), 3);
+    }
+
+    #[test]
+    fn incremental_scratch_grows_once() {
+        let mut ws = FactorWorkspace::new();
+        ws.acquire_incremental(100);
+        assert_eq!(ws.grow_events(), 1);
+        ws.acquire_incremental(100);
+        ws.acquire_incremental(40); // smaller: no growth
+        assert_eq!(ws.grow_events(), 1, "repeat acquires must not grow");
+        ws.acquire_incremental(250);
+        assert_eq!(ws.grow_events(), 2);
+        assert!(ws.inc_inv.len() >= 250 && ws.inc_mark.len() >= 250);
     }
 
     #[test]

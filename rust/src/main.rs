@@ -70,7 +70,10 @@ PFM OPTIONS:
                            any k; also accepted by serve and remote) [default: 1]
     --adaptive-rho         residual-balancing ADMM penalty (mu=10, tau=2)
     --budget-ms <ms>       wall-clock cap
+    --no-incremental       disable incremental probe evaluation (A/B runs;
+                           same ordering, full-cost probes)
     --check-fill           exit nonzero unless optimized fill <= natural fill
+    --check-incremental    exit nonzero unless incremental probes engaged
     --out <dir>            also write pfm_perm.txt + pfm_report.json
 
 GATEWAY OPTIONS:
@@ -154,7 +157,9 @@ struct Opts {
     factor_threads: Option<usize>,
     adaptive_rho: bool,
     budget_ms: Option<u64>,
+    no_incremental: bool,
     check_fill: bool,
+    check_incremental: bool,
     addr: String,
     rate: Option<f64>,
     burst: Option<f64>,
@@ -192,7 +197,9 @@ impl Opts {
             factor_threads: None,
             adaptive_rho: false,
             budget_ms: None,
+            no_incremental: false,
             check_fill: false,
+            check_incremental: false,
             addr: DEFAULT_ADDR.to_string(),
             rate: None,
             burst: None,
@@ -235,7 +242,9 @@ impl Opts {
                 "--factor-threads" => o.factor_threads = it.next().and_then(|s| s.parse().ok()),
                 "--adaptive-rho" => o.adaptive_rho = true,
                 "--budget-ms" => o.budget_ms = it.next().and_then(|s| s.parse().ok()),
+                "--no-incremental" => o.no_incremental = true,
                 "--check-fill" => o.check_fill = true,
+                "--check-incremental" => o.check_incremental = true,
                 "--addr" => o.addr = it.next().cloned().unwrap_or_else(|| DEFAULT_ADDR.into()),
                 "--rate" => o.rate = it.next().and_then(|s| s.parse().ok()),
                 "--burst" => o.burst = it.next().and_then(|s| s.parse().ok()),
@@ -452,7 +461,8 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
     let opt = PfmOptimizer::new(budget, seed)
         .with_init(init)
         .with_threads(o.threads.unwrap_or(1))
-        .with_factor_threads(o.factor_threads.unwrap_or(1));
+        .with_factor_threads(o.factor_threads.unwrap_or(1))
+        .with_incremental(!o.no_incremental);
     let t0 = std::time::Instant::now();
     let rep = opt.optimize(&a);
     let dt = t0.elapsed().as_secs_f64();
@@ -462,7 +472,7 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
         "matrix {} {}x{} nnz={} [{}] | native PFM ({:?} init, {} probe threads, \
          {} factor threads): \
          factor nnz {:.0} (init {:.0}, natural {:.0}) | {} ADMM iters{}, {} refine steps, \
-         {} levels refined, {} evals, {:.1} ms",
+         {} levels refined, {} evals ({} incremental / {} full, {} prepares), {:.1} ms",
         name,
         a.nrows(),
         a.ncols(),
@@ -479,6 +489,9 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
         rep.refine_steps,
         rep.levels_refined,
         rep.evals,
+        rep.incremental_probes,
+        rep.full_probes,
+        rep.probe_prepares,
         dt * 1e3,
     );
     if o.out_given {
@@ -500,6 +513,9 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
             .set("probe_threads", rep.probe_threads)
             .set("factor_threads", opt.factor_threads)
             .set("evals", rep.evals)
+            .set("incremental_probes", rep.incremental_probes)
+            .set("full_probes", rep.full_probes)
+            .set("probe_prepares", rep.probe_prepares)
             .set("wall_ms", dt * 1e3);
         std::fs::write(format!("{}/pfm_report.json", o.out), json.to_string())
             .map_err(|e| e.to_string())?;
@@ -509,6 +525,13 @@ fn cmd_pfm(o: &Opts) -> Result<(), String> {
         return Err(format!(
             "check-fill failed: optimized factor nnz {:.0} above natural {natural:.0}",
             rep.objective
+        ));
+    }
+    if o.check_incremental && rep.incremental_probes == 0 {
+        return Err(format!(
+            "check-incremental failed: 0 of {} evals took the incremental path \
+             (disabled, or no refinement batch engaged)",
+            rep.evals
         ));
     }
     Ok(())

@@ -38,8 +38,12 @@ pub enum Stage {
     Coarsen,
     /// PFM: ADMM on the dense or coarsest window.
     Admm,
-    /// PFM: V-cycle + native-scale refinement passes.
+    /// PFM: V-cycle + native-scale refinement passes (full-evaluation
+    /// portion).
     Refine,
+    /// PFM: the portion of refinement spent in incremental-engaged probe
+    /// batches (base preparation + suffix re-walks; `pfm::incremental`).
+    RefineIncremental,
     /// Fill evaluation: symbolic analysis served from the cache.
     SymbolicHit,
     /// Fill evaluation: symbolic analysis computed fresh.
@@ -61,6 +65,7 @@ impl Stage {
             Stage::Coarsen => "coarsen",
             Stage::Admm => "admm",
             Stage::Refine => "refine",
+            Stage::RefineIncremental => "refine_incremental",
             Stage::SymbolicHit => "symbolic_hit",
             Stage::SymbolicMiss => "symbolic_miss",
             Stage::NumericFactor => "numeric_factor",

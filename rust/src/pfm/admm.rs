@@ -52,8 +52,8 @@ use std::time::Instant;
 use crate::factor::FactorKind;
 use crate::order::order_from_scores;
 use crate::pfm::objective::{
-    conjugate, residual, residual_from, smooth_grad_l, smooth_grad_p, smooth_grad_upstream,
-    smooth_value, DenseWindow, OrderObjective,
+    best_exact, conjugate, residual, residual_from, smooth_grad_l, smooth_grad_p,
+    smooth_grad_upstream, smooth_value, DenseWindow, OrderObjective,
 };
 use crate::pfm::perm::{rank_scores, standardize, SoftPerm};
 use crate::pfm::probes::{ProbePool, PROBES_PER_STEP};
@@ -267,11 +267,13 @@ pub fn admm_optimize(
             prev_llt = Some(cur);
         }
 
-        // --- acceptance on the discrete golden criterion ---
+        // --- acceptance on the discrete golden criterion (exact sources
+        // only: a failed LU's structural bound must not displace the
+        // incumbent — the incumbent's value may itself be numeric) ---
         let order = order_from_scores(&y);
-        let f = obj.eval(&order);
-        if f < best_f {
-            best_f = f;
+        let f = obj.eval_sourced(&order);
+        if f.is_exact() && f.value < best_f {
+            best_f = f.value;
             best_y = y.clone();
         }
         trace.push(best_f);
@@ -309,6 +311,15 @@ fn dist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
 }
 
+/// One bonus refinement step is granted per this many rows of spared
+/// symbolic work (`ProbePool::saved_units`), pricing the bonus step as a
+/// full-cost segment batch ([`PROBES_PER_STEP`] probes × n rows each).
+/// Conservative — an incremental segment batch actually costs a fraction
+/// of that — so the bonus steps are strictly paid for by already-banked
+/// savings and total analyze-equivalent work can never exceed the
+/// nominal budget's.
+const ROWS_PER_BONUS_STEP: u64 = PROBES_PER_STEP as u64;
+
 /// Sampled-subgradient refinement: multi-direction SPSA probe batches
 /// interleaved with batches of rank-space segment moves, all evaluated by
 /// the probe pool and reduced under strict acceptance on the discrete
@@ -317,6 +328,17 @@ fn dist(a: &[f64], b: &[f64]) -> f64 {
 /// `best_f` are updated in place and `trace` gets one best-so-far entry
 /// per step.
 ///
+/// Segment-move batches are evaluated against the incumbent ordering via
+/// [`ProbePool::eval_orders_with_base`], so candidates sharing a long
+/// rank prefix take the incremental suffix re-walk. The rows that splice
+/// spares accumulate in the pool's savings ledger, and `refine` converts
+/// them into **bonus steps** — up to `steps` extra (≤ 2× the nominal
+/// budget), all segment-move shaped (the cheap, incremental-eligible
+/// kind). The ledger is a pure function of the candidate orderings, not
+/// of timing or of whether incremental evaluation is actually enabled,
+/// so the step schedule — and therefore the accepted ordering — is
+/// identical at any thread count and in full-vs-incremental A/B runs.
+///
 /// Every RNG draw happens in the single-threaded generation phase and the
 /// batch shape is fixed ([`PROBES_PER_STEP`]), so the result is
 /// bit-identical at any pool thread count as long as no wall-clock
@@ -324,6 +346,8 @@ fn dist(a: &[f64], b: &[f64]) -> f64 {
 /// costs `2·PROBES_PER_STEP + 1` evaluations (SPSA) or `PROBES_PER_STEP`
 /// (segment moves) — wider than PR 4's single-probe step, but the batch
 /// runs in parallel and the averaged subgradient is lower-variance.
+/// Acceptance scans consider exact evaluation sources only: a failed LU
+/// probe's structural bound can never displace the incumbent.
 #[allow(clippy::too_many_arguments)]
 pub fn refine(
     a: &Csr,
@@ -340,15 +364,24 @@ pub fn refine(
     if n < 4 {
         return 0;
     }
+    // the pool may hold a base prepared on a different matrix (a previous
+    // V-cycle level); an ordering match alone must never resurrect it
+    pool.invalidate_base();
+    let saved0 = pool.saved_units();
     let mut eps = 0.35f64;
     let mut run = 0usize;
+    let mut bonus = 0usize;
     let mut orders: Vec<Vec<usize>> = Vec::with_capacity(2 * PROBES_PER_STEP);
-    for step in 0..steps {
+    let mut step = 0usize;
+    while step < steps + bonus {
         if deadline.is_some_and(|d| Instant::now() >= d) {
             break;
         }
         run += 1;
-        if step % 3 < 2 {
+        // bonus steps (step ≥ nominal budget) are always segment-move
+        // shaped: the savings that funded them price a full-cost segment
+        // batch, and segment moves are what the incremental path serves
+        if step < steps && step % 3 < 2 {
             // --- SPSA batch: two-sided probes around the current scores ---
             let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(PROBES_PER_STEP);
             let mut cands: Vec<Vec<f64>> = Vec::with_capacity(2 * PROBES_PER_STEP);
@@ -363,25 +396,23 @@ pub fn refine(
             orders.extend(cands.iter().map(|c| order_from_scores(c)));
             let fs = pool.eval_orders(a, kind, &orders, deadline);
             let mut improved = false;
-            // best probe: strict < keeps the lowest index on ties
-            let mut bi = 0;
-            for (i, f) in fs.iter().enumerate() {
-                if *f < fs[bi] {
-                    bi = i;
+            // best acceptable probe: exact sources only, strict < keeps
+            // the lowest index on ties
+            if let Some(bi) = best_exact(&fs) {
+                if fs[bi].value < *best_f {
+                    *best_f = fs[bi].value;
+                    *y = cands[bi].clone();
+                    standardize(y);
+                    improved = true;
                 }
             }
-            if fs[bi] < *best_f {
-                *best_f = fs[bi];
-                *y = cands[bi].clone();
-                standardize(y);
-                improved = true;
-            }
-            // averaged subgradient over the finite probe pairs (a pair may
-            // be ∞ only when the deadline cut its evaluation short)
+            // averaged subgradient over the finite probe pairs (skipped
+            // probes are ∞; a fallback bound still carries slope signal
+            // for the gradient estimate even though it can't be accepted)
             let mut ghat = vec![0.0f64; n];
             let inv = 1.0 / (2.0 * eps * PROBES_PER_STEP as f64);
             for (k, delta) in deltas.iter().enumerate() {
-                let (fp, fm) = (fs[2 * k], fs[2 * k + 1]);
+                let (fp, fm) = (fs[2 * k].value, fs[2 * k + 1].value);
                 if !fp.is_finite() || !fm.is_finite() {
                     continue;
                 }
@@ -397,8 +428,8 @@ pub fn refine(
                 standardize(&mut cand);
                 let gorder = vec![order_from_scores(&cand)];
                 let f = pool.eval_orders(a, kind, &gorder, deadline)[0];
-                if f < *best_f {
-                    *best_f = f;
+                if f.is_exact() && f.value < *best_f {
+                    *best_f = f.value;
                     *y = cand;
                     improved = true;
                 }
@@ -425,20 +456,22 @@ pub fn refine(
                 }
                 orders.push(cand_order);
             }
-            let fs = pool.eval_orders(a, kind, &orders, deadline);
-            let mut bi = 0;
-            for (i, f) in fs.iter().enumerate() {
-                if *f < fs[bi] {
-                    bi = i;
+            let fs = pool.eval_orders_with_base(a, kind, &order, &orders, deadline);
+            if let Some(bi) = best_exact(&fs) {
+                if fs[bi].value < *best_f {
+                    *best_f = fs[bi].value;
+                    // scores = ranks of the accepted ordering (argsort inverts)
+                    *y = rank_scores(&orders[bi]);
                 }
-            }
-            if fs[bi] < *best_f {
-                *best_f = fs[bi];
-                // scores = ranks of the accepted ordering (argsort inverts)
-                *y = rank_scores(&orders[bi]);
             }
         }
         trace.push(*best_f);
+        step += 1;
+        // convert banked savings into bonus steps, capped at the nominal
+        // budget (≤ 2× total). Monotone in the ledger, so the loop bound
+        // only ever grows and terminates at the cap.
+        bonus = (((pool.saved_units() - saved0) / (ROWS_PER_BONUS_STEP * n as u64)) as usize)
+            .min(steps);
     }
     run
 }
@@ -545,7 +578,9 @@ mod tests {
             &mut rng,
             &mut trace,
         );
-        assert_eq!(run, 45);
+        // savings from incremental segment batches may fund bonus steps,
+        // but never more than the nominal budget again
+        assert!((45..=90).contains(&run), "run={run}");
         assert!(best <= init_f);
         assert!(pool.evals() > 45, "each step evaluates a whole probe batch");
         for w in trace.windows(2) {
@@ -606,6 +641,105 @@ mod tests {
                 Some(want) => assert_eq!(&got, want, "threads={threads} diverged"),
             }
         }
+    }
+
+    #[test]
+    fn refine_trajectory_is_identical_with_incremental_off() {
+        // the incremental path must change cost only, never the search:
+        // same seed, same budget, incremental on vs off → bit-identical
+        // scores, objective, trace, and step count — while the on-run
+        // provably performs fewer full symbolic analyses
+        let a = laplacian_2d(20, 20);
+        let y0 = rank_scores(&fiedler_order_with(&a, 60, 6));
+        let mut obj = OrderObjective::new(&a);
+        let init_f = obj.eval(&order_from_scores(&y0));
+        let mut outs = Vec::new();
+        for incremental in [true, false] {
+            let mut pool = ProbePool::new(1).with_incremental(incremental);
+            let mut y = y0.clone();
+            let mut best = init_f;
+            let mut rng = Pcg64::new(21);
+            let mut trace = vec![init_f];
+            let run = refine(
+                &a,
+                FactorKind::Cholesky,
+                &mut pool,
+                &mut y,
+                &mut best,
+                24,
+                None,
+                &mut rng,
+                &mut trace,
+            );
+            outs.push((order_from_scores(&y), best, trace, run, pool));
+        }
+        let (on, off) = (&outs[0], &outs[1]);
+        assert_eq!(on.0, off.0, "accepted orderings diverged");
+        assert_eq!(on.1, off.1);
+        assert_eq!(on.2, off.2);
+        assert_eq!(on.3, off.3, "step schedules diverged");
+        assert_eq!(on.4.saved_units(), off.4.saved_units(), "ledger must be mode-independent");
+        assert_eq!(on.4.evals(), off.4.evals());
+        assert!(on.4.incremental_evals() > 0, "incremental run never engaged");
+        assert_eq!(off.4.incremental_evals(), 0);
+        // strictly fewer full analyze-equivalent passes with incremental on
+        assert!(
+            on.4.full_evals() + on.4.base_prepares() < off.4.full_evals(),
+            "full={} prepares={} vs all-full={}",
+            on.4.full_evals(),
+            on.4.base_prepares(),
+            off.4.full_evals()
+        );
+    }
+
+    #[test]
+    fn fallback_lu_bounds_are_never_accepted() {
+        // a zero column makes every pivot sequence singular: all probe
+        // evaluations come back as structural A+Aᵀ bounds. The old
+        // reduction compared those bounds as if they were numeric counts
+        // and "improved" on the incumbent; the sourced reduction must
+        // hold the line exactly.
+        use crate::sparse::Coo;
+        let n = 24;
+        let mut coo = Coo::square(n);
+        for i in 0..n {
+            if i != 2 {
+                coo.push(i, i, 2.0 + i as f64);
+                coo.push(2, i, 0.5);
+            }
+        }
+        for i in 0..n - 1 {
+            coo.push(i, i + 1, -0.25);
+        }
+        let a = coo.to_csr();
+        let mut obj = OrderObjective::new(&a);
+        assert_eq!(obj.kind(), FactorKind::Lu);
+        let id: Vec<usize> = (0..n).collect();
+        let init = obj.eval_sourced(&id);
+        assert!(!init.is_exact(), "test premise: the init itself is a fallback bound");
+        let mut pool = ProbePool::new(2);
+        let mut y = rank_scores(&id);
+        let mut best = init.value;
+        let mut rng = Pcg64::new(5);
+        let mut trace = vec![init.value];
+        let run = refine(
+            &a,
+            FactorKind::Lu,
+            &mut pool,
+            &mut y,
+            &mut best,
+            15,
+            None,
+            &mut rng,
+            &mut trace,
+        );
+        assert!(run >= 15, "refine must actually run");
+        assert_eq!(best, init.value, "a fallback bound displaced the incumbent");
+        assert_eq!(order_from_scores(&y), id, "scores moved on fallback-only evidence");
+        assert!(trace.iter().all(|&f| f == init.value));
+        // the probes really did run and really did produce finite bounds —
+        // the old `is_finite()` reduction would have accepted one
+        assert!(pool.evals() > 0 && pool.skipped() == 0);
     }
 
     #[test]

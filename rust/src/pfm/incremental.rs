@@ -1,0 +1,360 @@
+//! Incremental symbolic probe evaluation — the o(nnz(L)) refinement
+//! unlock (ROADMAP item 2).
+//!
+//! A refinement probe asks for `analyze(&a.permute_sym(cand)).lnnz`, but
+//! the segment-move candidates `admm::refine` generates agree with the
+//! incumbent ordering on a (usually long) rank prefix `[0, lo)`. Row i of
+//! the reordered matrix B = PAPᵀ depends only on the leading
+//! (i+1)×(i+1) submatrix of B, and that submatrix is *identical* between
+//! base and candidate for every i < lo — so row i's elimination-tree
+//! edges and row-subtree count are identical too. The incremental
+//! evaluator therefore:
+//!
+//! 1. splices the base's prefix row-count sum (`prefix[lo]`, precomputed
+//!    once per base ordering by [`IncrementalBase::prepare`]);
+//! 2. re-seeds the partial etree exactly as a from-scratch run would
+//!    have it after processing rows `0..lo`: a prefix node keeps its
+//!    base parent iff that parent is itself in the prefix (an edge of
+//!    the leading submatrix's forest); every other node is a root;
+//! 3. replays the interleaved etree-extension + row-subtree count walk
+//!    of `factor::analyze` for rows `lo..n` only, in *rank space* (no
+//!    `permute_sym`: row `cand[i]` of A is scanned and each neighbor v
+//!    is mapped through `inv` to its candidate rank).
+//!
+//! The result is **bit-identical** to full `analyze` on the permuted
+//! matrix — both sides sum the same exact integer row counts — at cost
+//! O(n + Σ_{i≥lo} row_nnz(i)) instead of O(nnz(L)). See DESIGN.md
+//! §PFM-Optimizer "Incremental probes" for the correctness argument.
+//!
+//! LU-kind probes (numeric, pivoting-dependent) and candidates whose
+//! changed suffix is most of the matrix take the full path instead; the
+//! gate lives in [`suffix_eligible`] / [`ProbePool`](crate::pfm::probes)
+//! so the decision is a pure function of the candidate (never timing),
+//! preserving bit-identical results at any thread count.
+
+use crate::factor::etree::NONE;
+use crate::factor::FactorWorkspace;
+use crate::sparse::Csr;
+
+/// Per-base-ordering state the incremental evaluator resumes from:
+/// the ordering, its inverse, its rank-space etree, and the prefix sums
+/// of its exact row counts. Buffers are reused across `prepare` calls
+/// (the probe pool holds one and re-prepares it per refinement batch).
+#[derive(Debug, Default)]
+pub struct IncrementalBase {
+    /// base ordering (rank → original index)
+    order: Vec<usize>,
+    /// inverse ordering (original index → rank)
+    inv: Vec<usize>,
+    /// etree of the base-reordered matrix, in rank space
+    parent: Vec<usize>,
+    /// prefix[i] = Σ_{k<i} row_nnz[k] of the base factor; len n+1, so
+    /// prefix[n] == lnnz(base)
+    prefix: Vec<usize>,
+}
+
+impl IncrementalBase {
+    pub fn new() -> IncrementalBase {
+        IncrementalBase::default()
+    }
+
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Exact nnz(L) of the base ordering (equals
+    /// `analyze(&a.permute_sym(order)).lnnz`).
+    pub fn lnnz(&self) -> usize {
+        *self.prefix.last().unwrap_or(&0)
+    }
+
+    /// Full symbolic pass over `a` under `order` — one
+    /// `analyze`-equivalent walk that also records everything eval needs
+    /// to resume mid-stream. Uses `ws`'s incremental scratch for the
+    /// ancestor/mark arrays (grown once, reused across batches).
+    pub fn prepare(&mut self, a: &Csr, order: &[usize], ws: &mut FactorWorkspace) {
+        let n = order.len();
+        debug_assert_eq!(a.nrows(), n);
+        self.order.clear();
+        self.order.extend_from_slice(order);
+        self.inv.clear();
+        self.inv.resize(n, 0);
+        for (i, &v) in order.iter().enumerate() {
+            self.inv[v] = i;
+        }
+        self.parent.clear();
+        self.parent.resize(n, NONE);
+        self.prefix.clear();
+        self.prefix.reserve(n + 1);
+        self.prefix.push(0);
+        ws.acquire_incremental(n);
+        let ancestor = &mut ws.inc_ancestor[..n];
+        let mark = &mut ws.inc_mark[..n];
+        for v in ancestor.iter_mut() {
+            *v = NONE;
+        }
+        for v in mark.iter_mut() {
+            *v = NONE;
+        }
+        let mut total = 0usize;
+        for i in 0..n {
+            total += walk_row(a, &self.order, &self.inv, &mut self.parent, ancestor, mark, i);
+            self.prefix.push(total);
+        }
+    }
+
+    /// First rank where `cand` differs from the base ordering (`n` if the
+    /// orderings are identical). The caller passes this as `lo` to
+    /// [`eval`](Self::eval); scanning here (instead of trusting the
+    /// generator's window bounds) makes relocations that happen to be
+    /// no-ops, palindromic reversals, etc. exactly as cheap as they are.
+    pub fn first_diff(&self, cand: &[usize]) -> usize {
+        debug_assert_eq!(cand.len(), self.order.len());
+        for (i, (&b, &c)) in self.order.iter().zip(cand).enumerate() {
+            if b != c {
+                return i;
+            }
+        }
+        self.order.len()
+    }
+
+    /// Exact `analyze(&a.permute_sym(cand)).lnnz` for a candidate that
+    /// agrees with the base on ranks `[0, lo)` (`lo` from
+    /// [`first_diff`](Self::first_diff)): splice the base's prefix row
+    /// counts, re-walk rows `lo..n` only. Bit-identical to the full path
+    /// (both sum the same integers; lnnz < 2⁵³ so the f64 is exact).
+    pub fn eval(&self, a: &Csr, cand: &[usize], lo: usize, ws: &mut FactorWorkspace) -> f64 {
+        let n = self.order.len();
+        debug_assert_eq!(cand.len(), n);
+        debug_assert_eq!(self.first_diff(cand), lo.min(n));
+        if lo >= n {
+            return self.lnnz() as f64;
+        }
+        ws.acquire_incremental(n);
+        let inv = &mut ws.inc_inv[..n];
+        let parent = &mut ws.inc_parent[..n];
+        let ancestor = &mut ws.inc_ancestor[..n];
+        let mark = &mut ws.inc_mark[..n];
+        // candidate inverse = base inverse patched on the moved suffix
+        inv.copy_from_slice(&self.inv);
+        for (i, &v) in cand.iter().enumerate().skip(lo) {
+            inv[v] = i;
+        }
+        // partial-forest resume: a prefix node keeps its base parent iff
+        // that edge lies inside the prefix (rows < lo of the candidate
+        // matrix are identical to the base's, and parent[j] < lo is
+        // decided by exactly those rows); everything else is a root.
+        // Seeding ancestor = parent is valid for Liu's compression — the
+        // immediate parent is an ancestor in the partial forest.
+        for j in 0..lo {
+            let p = self.parent[j];
+            let seed = if p != NONE && p < lo { p } else { NONE };
+            parent[j] = seed;
+            ancestor[j] = seed;
+        }
+        for j in lo..n {
+            parent[j] = NONE;
+            ancestor[j] = NONE;
+        }
+        for m in mark.iter_mut() {
+            *m = NONE;
+        }
+        let mut total = self.prefix[lo];
+        for i in lo..n {
+            total += walk_row(a, cand, inv, parent, ancestor, mark, i);
+        }
+        total as f64
+    }
+}
+
+/// Process row `i` of the reordered matrix in rank space: extend the
+/// partial etree (Liu's path-halving construction) and count row i's
+/// subtree walk, returning row_nnz[i] (diagonal included). One body
+/// shared by `prepare` (from row 0) and `eval` (from row lo) so the two
+/// can never drift.
+///
+/// Mirrors `factor::analyze` exactly, with two deliberate differences:
+/// neighbors arrive in original-index order, so their mapped ranks are
+/// unsorted and `j >= i` must `continue` (not `break` — that relies on
+/// sorted CSR columns); and the etree is extended in the same pass, which
+/// is equivalent because the count walk only distinguishes
+/// `parent[node] < i` (final, identical to the full etree's edge) from
+/// `NONE`/`>= i` (both break).
+fn walk_row(
+    a: &Csr,
+    order: &[usize],
+    inv: &[usize],
+    parent: &mut [usize],
+    ancestor: &mut [usize],
+    mark: &mut [usize],
+    i: usize,
+) -> usize {
+    mark[i] = i;
+    let mut row = 1usize; // diagonal
+    let (cols, _) = a.row(order[i]);
+    for &v in cols {
+        let j = inv[v];
+        if j >= i {
+            continue;
+        }
+        // etree extension: link the root of j's tree to i, compressing
+        // ancestor pointers along the way
+        let mut node = j;
+        while node != NONE && node < i {
+            let next = ancestor[node];
+            ancestor[node] = i;
+            if next == NONE {
+                parent[node] = i;
+                break;
+            }
+            node = next;
+        }
+        // row-subtree count walk (Gilbert–Ng–Peyton marker trick)
+        let mut node = j;
+        while mark[node] != i {
+            mark[node] = i;
+            row += 1;
+            if parent[node] == NONE || parent[node] >= i {
+                break;
+            }
+            node = parent[node];
+        }
+    }
+    row
+}
+
+/// Should a candidate whose first differing rank is `lo` (of `n`) take
+/// the incremental path? The re-walked suffix costs O(n + suffix
+/// row counts); below a quarter-length prefix the splice saves too
+/// little over the flat O(n) overhead to beat the full walk. A pure
+/// function of (n, lo) — never timing — so the engage decision is
+/// identical at every thread count and in full-vs-incremental A/B runs.
+pub fn suffix_eligible(n: usize, lo: usize) -> bool {
+    4 * lo >= n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factor::analyze;
+    use crate::gen::grid::{laplacian_2d, laplacian_3d};
+    use crate::gen::ProblemClass;
+    use crate::order::amd;
+    use crate::util::rng::Pcg64;
+
+    fn full(a: &Csr, order: &[usize]) -> f64 {
+        analyze(&a.permute_sym(order)).lnnz as f64
+    }
+
+    #[test]
+    fn prepare_matches_full_analyze() {
+        let a = laplacian_2d(9, 7);
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        for order in [(0..63).collect::<Vec<_>>(), amd(&a), (0..63).rev().collect::<Vec<_>>()] {
+            base.prepare(&a, &order, &mut ws);
+            assert_eq!(base.lnnz() as f64, full(&a, &order));
+        }
+    }
+
+    #[test]
+    fn eval_matches_full_on_segment_moves() {
+        let a = laplacian_3d(4, 4, 4);
+        let n = a.nrows();
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        let order = amd(&a);
+        base.prepare(&a, &order, &mut ws);
+        let mut rng = Pcg64::new(7);
+        for _ in 0..40 {
+            let len = 2 + rng.next_below(n / 2);
+            let s = rng.next_below(n - len);
+            let mut cand = order.clone();
+            if rng.next_below(2) == 0 {
+                cand[s..s + len].reverse();
+            } else {
+                let seg: Vec<usize> = cand.splice(s..s + len, std::iter::empty()).collect();
+                let at = rng.next_below(cand.len() + 1);
+                let tail = cand.split_off(at);
+                cand.extend_from_slice(&seg);
+                cand.extend_from_slice(&tail);
+            }
+            let lo = base.first_diff(&cand);
+            assert_eq!(base.eval(&a, &cand, lo, &mut ws), full(&a, &cand));
+        }
+    }
+
+    #[test]
+    fn eval_handles_degenerate_windows() {
+        let a = laplacian_2d(8, 8);
+        let n = a.nrows();
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        let order: Vec<usize> = (0..n).collect();
+        base.prepare(&a, &order, &mut ws);
+        // identical candidate: lo == n, zero re-walk
+        assert_eq!(base.first_diff(&order), n);
+        assert_eq!(base.eval(&a, &order, n, &mut ws), base.lnnz() as f64);
+        // lo == 0 (whole ordering reversed): incremental path degenerates
+        // to a full walk but must still be exact
+        let rev: Vec<usize> = (0..n).rev().collect();
+        assert_eq!(base.first_diff(&rev), 0);
+        assert_eq!(base.eval(&a, &rev, 0, &mut ws), full(&a, &rev));
+        // suffix touching the root: reverse the last two ranks
+        let mut tail = order.clone();
+        tail.swap(n - 2, n - 1);
+        let lo = base.first_diff(&tail);
+        assert_eq!(lo, n - 2);
+        assert_eq!(base.eval(&a, &tail, lo, &mut ws), full(&a, &tail));
+    }
+
+    #[test]
+    fn eval_exact_on_unsymmetric_pattern_classes_symmetrized() {
+        // incremental eval is Cholesky-only at the pool level, but the
+        // walk itself must be exact on any symmetric pattern, including
+        // the symmetrized circuit class
+        let a = ProblemClass::Circuit.generate(80, 3).symmetrize();
+        let n = a.nrows();
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        let order = amd(&a);
+        base.prepare(&a, &order, &mut ws);
+        let mut rng = Pcg64::new(11);
+        for _ in 0..20 {
+            let len = 2 + rng.next_below(n / 3);
+            let s = rng.next_below(n - len);
+            let mut cand = order.clone();
+            cand[s..s + len].reverse();
+            let lo = base.first_diff(&cand);
+            assert_eq!(base.eval(&a, &cand, lo, &mut ws), full(&a, &cand));
+        }
+    }
+
+    #[test]
+    fn eligibility_gate_is_a_pure_threshold() {
+        assert!(!suffix_eligible(100, 0));
+        assert!(!suffix_eligible(100, 24));
+        assert!(suffix_eligible(100, 25));
+        assert!(suffix_eligible(100, 100));
+        assert!(suffix_eligible(1, 1));
+        assert!(!suffix_eligible(1, 0));
+    }
+
+    #[test]
+    fn workspace_scratch_steady_state_is_allocation_free() {
+        let a = laplacian_2d(10, 10);
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        let order: Vec<usize> = (0..100).collect();
+        base.prepare(&a, &order, &mut ws);
+        let grown = ws.grow_events();
+        let mut cand = order.clone();
+        cand[60..80].reverse();
+        let lo = base.first_diff(&cand);
+        for _ in 0..16 {
+            base.eval(&a, &cand, lo, &mut ws);
+            base.prepare(&a, &order, &mut ws);
+        }
+        assert_eq!(ws.grow_events(), grown, "steady state must not reallocate");
+    }
+}

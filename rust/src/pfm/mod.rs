@@ -33,6 +33,7 @@
 //! ```
 
 pub mod admm;
+pub mod incremental;
 pub mod multilevel;
 pub mod objective;
 pub mod perm;
@@ -42,7 +43,7 @@ use std::time::{Duration, Instant};
 
 pub use admm::AdmmParams;
 pub use multilevel::{Hierarchy, DEFAULT_DENSE_CAP};
-pub use objective::OrderObjective;
+pub use objective::{Eval, EvalSource, OrderObjective};
 pub use probes::{ProbePool, PROBES_PER_STEP};
 
 use crate::factor::{FactorKind, SymbolicCache};
@@ -119,6 +120,9 @@ pub struct PhaseTimes {
     pub admm_s: f64,
     /// refinement passes: V-cycle per-level + native-scale subgradient
     pub refine_s: f64,
+    /// portion of `refine_s` spent inside incremental-engaged probe
+    /// batches (base preparation + suffix re-walks) — always ≤ `refine_s`
+    pub refine_incr_s: f64,
 }
 
 /// Score initialization — the paper's ablation axis (Table 3).
@@ -153,6 +157,13 @@ pub struct PfmOptimizer {
     /// numeric win itself lands on the solver/serving path
     /// (`DirectSolver::prepare_kind_threaded`).
     pub factor_threads: usize,
+    /// evaluate eligible refinement probes via the incremental suffix
+    /// re-walk (`pfm::incremental`). Quality-neutral: the search
+    /// trajectory, accepted orderings, and trace are bit-identical on or
+    /// off — the toggle changes only where the exact count comes from
+    /// (and how much it costs). On by default; `--no-incremental` in the
+    /// CLI maps here for A/B runs.
+    pub incremental: bool,
 }
 
 impl PfmOptimizer {
@@ -165,7 +176,15 @@ impl PfmOptimizer {
             dense_cap: DEFAULT_DENSE_CAP,
             probe_threads: 1,
             factor_threads: 1,
+            incremental: true,
         }
+    }
+
+    /// Toggle incremental probe evaluation (on by default; see the
+    /// [`incremental`](Self::incremental) field docs).
+    pub fn with_incremental(mut self, on: bool) -> PfmOptimizer {
+        self.incremental = on;
+        self
     }
 
     pub fn with_init(mut self, init: ScoreInit) -> PfmOptimizer {
@@ -218,6 +237,9 @@ impl PfmOptimizer {
                 refine_steps: 0,
                 levels_refined: 0,
                 evals: usize::from(n > 0),
+                incremental_probes: 0,
+                full_probes: usize::from(n > 0),
+                probe_prepares: 0,
                 trace: vec![objective],
                 coarse_n: None,
                 probe_threads: composed_threads(self.probe_threads, self.factor_threads),
@@ -235,8 +257,8 @@ impl PfmOptimizer {
         };
         let gm = proxy.as_ref().unwrap_or(a);
 
-        let mut pool =
-            ProbePool::new(composed_threads(self.probe_threads, self.factor_threads));
+        let mut pool = ProbePool::new(composed_threads(self.probe_threads, self.factor_threads))
+            .with_incremental(self.incremental);
         let mut rng = Pcg64::new(self.seed);
         let mut y = match self.init {
             ScoreInit::Spectral => {
@@ -250,20 +272,27 @@ impl PfmOptimizer {
             }
         };
 
-        let init_objective = obj.eval(&order_from_scores(&y));
+        let init_eval = obj.eval_sourced(&order_from_scores(&y));
+        let init_objective = init_eval.value;
         let mut best_f = init_objective;
         let mut trace = vec![init_objective];
 
         // free candidate: never return something worse than no reordering.
         // The symbolic Cholesky count of the identity is pattern-keyed
         // shareable (SharedPrep); the LU count is numeric, so unsymmetric
-        // matrices always evaluate it themselves.
+        // matrices always evaluate it themselves. A fallback LU bound may
+        // displace the incumbent only while the incumbent is itself a
+        // bound — an exact measurement is never traded for an estimate.
         let identity: Vec<usize> = (0..n).collect();
-        let id_f = prep
+        let id_eval = match prep
             .and_then(|p| p.natural_objective)
             .filter(|_| obj.kind() == FactorKind::Cholesky)
-            .unwrap_or_else(|| obj.eval(&identity));
-        if id_f < best_f {
+        {
+            Some(v) => Eval { value: v, source: EvalSource::Symbolic },
+            None => obj.eval_sourced(&identity),
+        };
+        let id_f = id_eval.value;
+        if id_f < best_f && (id_eval.is_exact() || !init_eval.is_exact()) {
             best_f = id_f;
             y = rank_scores(&identity);
         }
@@ -350,9 +379,9 @@ impl PfmOptimizer {
                     // golden criterion
                     let mut cand = prolong(&out.y, &h.composed(), &y);
                     standardize(&mut cand);
-                    let f = obj.eval(&order_from_scores(&cand));
-                    if f < best_f {
-                        best_f = f;
+                    let f = obj.eval_sourced(&order_from_scores(&cand));
+                    if f.is_exact() && f.value < best_f {
+                        best_f = f.value;
                         y = cand;
                     }
                     trace.push(best_f);
@@ -367,12 +396,13 @@ impl PfmOptimizer {
                             standardize(&mut yl);
                             let lm = &h.matrices[lvl];
                             let lorder = vec![order_from_scores(&yl)];
-                            let mut lf =
+                            let le =
                                 pool.eval_orders(lm, FactorKind::Cholesky, &lorder, deadline)[0];
-                            // ∞ = the deadline already passed: keep
+                            // skipped = the deadline already passed: keep
                             // prolonging (cheap, keeps the walk well-formed)
                             // but skip the level's refinement work
-                            if lf.is_finite() {
+                            if le.evaluated() {
+                                let mut lf = le.value;
                                 ltrace.clear();
                                 ltrace.push(lf);
                                 let t_refine = Instant::now();
@@ -395,9 +425,9 @@ impl PfmOptimizer {
                         }
                         let mut cand = prolong(&yl, &h.maps[0], &y);
                         standardize(&mut cand);
-                        let f = obj.eval(&order_from_scores(&cand));
-                        if f < best_f {
-                            best_f = f;
+                        let f = obj.eval_sourced(&order_from_scores(&cand));
+                        if f.is_exact() && f.value < best_f {
+                            best_f = f.value;
                             y = cand;
                         }
                         trace.push(best_f);
@@ -420,6 +450,7 @@ impl PfmOptimizer {
             &mut trace,
         );
         phases.refine_s += t_refine.elapsed().as_secs_f64();
+        phases.refine_incr_s = pool.incremental_secs().min(phases.refine_s);
 
         let order = order_from_scores(&y);
         PfmReport {
@@ -431,6 +462,9 @@ impl PfmOptimizer {
             refine_steps,
             levels_refined,
             evals: obj.evals + coarse_evals + pool.evals(),
+            incremental_probes: pool.incremental_evals(),
+            full_probes: obj.evals + coarse_evals + pool.full_evals(),
+            probe_prepares: pool.base_prepares(),
             trace,
             coarse_n,
             probe_threads: pool.threads(),
@@ -504,6 +538,18 @@ pub struct PfmReport {
     pub levels_refined: usize,
     /// discrete objective evaluations (fine + coarse + probe pool)
     pub evals: usize,
+    /// evaluations served by the incremental suffix re-walk
+    /// (`pfm::incremental`) — bit-identical to full passes, sublinear
+    /// cost. Always 0 with [`PfmOptimizer::incremental`] off.
+    /// `incremental_probes + full_probes == evals`.
+    pub incremental_probes: usize,
+    /// evaluations that ran a full symbolic/numeric pass over the
+    /// permuted matrix (fine + coarse + probe pool)
+    pub full_probes: usize,
+    /// full symbolic passes spent preparing incremental base state
+    /// (amortized across every incremental probe of a batch; not counted
+    /// in `evals`)
+    pub probe_prepares: usize,
     /// best-so-far objective trace (non-increasing)
     pub trace: Vec<f64>,
     /// coarse problem size when the multilevel path engaged
@@ -577,6 +623,29 @@ mod tests {
             assert_eq!(rep.evals, base.evals);
             assert_eq!(rep.probe_threads, crate::util::sync::effective_threads(threads));
         }
+    }
+
+    #[test]
+    fn incremental_split_is_consistent_and_ab_bit_identical() {
+        // the tentpole's optimizer-level contract: incremental on vs off
+        // is a pure cost toggle (same ordering, objective, trace, eval
+        // count), and the report's probe split accounts for every eval
+        let a = laplacian_2d(24, 24); // n = 576 → threaded pool + V-cycle
+        let budget = OptBudget { outer: 1, refine: 24, level_refine: 4, ..OptBudget::default() };
+        let on = PfmOptimizer::new(budget, 9).optimize(&a);
+        assert_eq!(on.incremental_probes + on.full_probes, on.evals);
+        assert!(on.incremental_probes > 0, "incremental path never engaged at n=576");
+        assert!(on.probe_prepares > 0);
+        assert!(on.phases.refine_incr_s <= on.phases.refine_s);
+        let off = PfmOptimizer::new(budget, 9).with_incremental(false).optimize(&a);
+        assert_eq!(off.incremental_probes, 0);
+        assert_eq!(off.probe_prepares, 0);
+        assert_eq!(off.order, on.order, "incremental toggle changed the search");
+        assert_eq!(off.objective, on.objective);
+        assert_eq!(off.trace, on.trace);
+        assert_eq!(off.evals, on.evals);
+        // strictly fewer full passes, even charging base preparations
+        assert!(on.full_probes + on.probe_prepares < off.full_probes);
     }
 
     #[test]

@@ -31,6 +31,78 @@ use crate::factor::lu::{self, LuOptions};
 use crate::factor::{analyze, analyze_lu, FactorKind, FactorWorkspace};
 use crate::sparse::Csr;
 
+/// How an [`Eval`] value was produced. The acceptance scans gate on
+/// [`is_exact`](EvalSource::is_exact): a `LuBound` is a structural
+/// *upper bound* substituted when the numeric LU fails on a candidate's
+/// pivot sequence — comparing it against a numeric nnz(L+U) (or letting
+/// it displace the incumbent) manufactures wins that are artifacts of
+/// the fallback, so the optimizer must never accept one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalSource {
+    /// exact nnz(L) via symbolic analysis of the permuted matrix
+    Symbolic,
+    /// exact nnz(L) via the incremental suffix re-walk
+    /// (`pfm::incremental` — bit-identical to `Symbolic`)
+    Incremental,
+    /// exact numeric nnz(L+U) from the Gilbert–Peierls kernel
+    NumericLu,
+    /// structural A+Aᵀ bound: the LU factorization failed (singular
+    /// pivot sequence) — comparable to other bounds only, never exact
+    LuBound,
+    /// never evaluated (probe-pool deadline expired first)
+    Skipped,
+}
+
+impl EvalSource {
+    /// Is this an exact measurement of the golden criterion?
+    pub fn is_exact(self) -> bool {
+        matches!(self, EvalSource::Symbolic | EvalSource::Incremental | EvalSource::NumericLu)
+    }
+}
+
+/// A discrete-objective evaluation tagged with its provenance. Lower
+/// `value` is better, but only [`is_exact`](Eval::is_exact) evaluations
+/// may win an acceptance scan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Eval {
+    pub value: f64,
+    pub source: EvalSource,
+}
+
+impl Eval {
+    /// A probe the pool never ran: infinite value, never acceptable.
+    pub fn skipped() -> Eval {
+        Eval { value: f64::INFINITY, source: EvalSource::Skipped }
+    }
+
+    /// Did the probe actually run (regardless of outcome)?
+    pub fn evaluated(&self) -> bool {
+        self.source != EvalSource::Skipped
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.source.is_exact()
+    }
+}
+
+/// Index of the best *acceptable* candidate in a probe batch: the
+/// minimum value among exact-source evaluations, ties to the lowest
+/// index (strict `<` in probe-index order — the determinism contract).
+/// Fallback bounds and skipped probes never win; `None` if nothing in
+/// the batch is exact.
+pub fn best_exact(evals: &[Eval]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, e) in evals.iter().enumerate() {
+        if !e.is_exact() {
+            continue;
+        }
+        if best.map_or(true, |b| e.value < evals[b].value) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
 /// Discrete objective evaluator: hard ordering → structural factor nnz.
 /// Owns the scratch workspace so repeated evaluations (the SPSA inner
 /// loop) reuse allocations.
@@ -57,8 +129,15 @@ impl<'a> OrderObjective<'a> {
     /// structural A+Aᵀ bound otherwise). Lower is better; this is the
     /// golden criterion the paper's ‖L‖₁ approximates.
     pub fn eval(&mut self, order: &[usize]) -> f64 {
+        self.eval_sourced(order).value
+    }
+
+    /// [`eval`](Self::eval) with the evaluation source attached, for
+    /// acceptance scans that must distinguish a numeric nnz(L+U) from
+    /// the structural bound a failed LU substitutes.
+    pub fn eval_sourced(&mut self, order: &[usize]) -> Eval {
         self.evals += 1;
-        eval_order(self.a, self.kind, &mut self.ws, order)
+        eval_order_sourced(self.a, self.kind, &mut self.ws, order)
     }
 
     /// Entrywise ℓ₁ norm of the factors under `order` (‖L‖₁ + ‖Lᵀ‖₁ for
@@ -88,14 +167,28 @@ impl<'a> OrderObjective<'a> {
 /// (that method delegates here), so parallel probe results are
 /// interchangeable with sequential ones.
 pub fn eval_order(a: &Csr, kind: FactorKind, ws: &mut FactorWorkspace, order: &[usize]) -> f64 {
+    eval_order_sourced(a, kind, ws, order).value
+}
+
+/// [`eval_order`] with provenance: a failed LU probe comes back tagged
+/// [`EvalSource::LuBound`] instead of silently impersonating a numeric
+/// count, so reductions can refuse to accept it over an exact one.
+pub fn eval_order_sourced(
+    a: &Csr,
+    kind: FactorKind,
+    ws: &mut FactorWorkspace,
+    order: &[usize],
+) -> Eval {
     let pap = a.permute_sym(order);
     match kind {
-        FactorKind::Cholesky => analyze(&pap).lnnz as f64,
+        FactorKind::Cholesky => {
+            Eval { value: analyze(&pap).lnnz as f64, source: EvalSource::Symbolic }
+        }
         FactorKind::Lu => {
             let lsym = analyze_lu(&pap);
             match lu::factorize(&pap, &lsym, LuOptions::default(), ws) {
-                Ok(f) => f.lu_nnz() as f64,
-                Err(_) => lsym.lu_nnz_bound as f64,
+                Ok(f) => Eval { value: f.lu_nnz() as f64, source: EvalSource::NumericLu },
+                Err(_) => Eval { value: lsym.lu_nnz_bound as f64, source: EvalSource::LuBound },
             }
         }
     }
@@ -346,6 +439,67 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Unsymmetric matrix with an identically-zero column: every pivot
+    /// candidate in that column is 0, so the Gilbert–Peierls kernel
+    /// reports `Singular` under *any* ordering — the candidate shape that
+    /// used to let the structural bound impersonate a numeric count.
+    fn singular_unsymmetric(n: usize) -> Csr {
+        use crate::sparse::Coo;
+        let mut coo = Coo::square(n);
+        for i in 0..n {
+            if i != 2 {
+                coo.push(i, i, 2.0 + i as f64);
+                // row 2 stays nonempty so the pattern is unsymmetric and
+                // the zero column (no entries anywhere in column 2) is a
+                // column-only defect
+                coo.push(2, i, 0.5);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn failed_lu_probe_is_tagged_as_bound_not_numeric() {
+        let a = singular_unsymmetric(6);
+        let mut ws = FactorWorkspace::new();
+        let id: Vec<usize> = (0..6).collect();
+        let e = eval_order_sourced(&a, FactorKind::Lu, &mut ws, &id);
+        assert_eq!(e.source, EvalSource::LuBound, "singular LU must be tagged as fallback");
+        assert!(!e.is_exact() && e.evaluated());
+        assert_eq!(e.value, analyze_lu(&a.permute_sym(&id)).lu_nnz_bound as f64);
+        // a healthy LU stays numeric-exact
+        let u = ProblemClass::Circuit.generate(50, 8);
+        let idu: Vec<usize> = (0..u.nrows()).collect();
+        let eu = eval_order_sourced(&u, FactorKind::Lu, &mut ws, &idu);
+        assert_eq!(eu.source, EvalSource::NumericLu);
+        assert!(eu.is_exact());
+        // and Cholesky is symbolic-exact
+        let s = laplacian_2d(5, 5);
+        let ids: Vec<usize> = (0..25).collect();
+        assert_eq!(
+            eval_order_sourced(&s, FactorKind::Cholesky, &mut ws, &ids).source,
+            EvalSource::Symbolic
+        );
+    }
+
+    #[test]
+    fn best_exact_never_prefers_a_fallback_bound() {
+        let num = |v| Eval { value: v, source: EvalSource::NumericLu };
+        let bound = |v| Eval { value: v, source: EvalSource::LuBound };
+        // the bound is "better" numerically but must not win
+        assert_eq!(best_exact(&[bound(10.0), num(20.0)]), Some(1));
+        // ties resolve to the lowest probe index (determinism contract)
+        assert_eq!(best_exact(&[num(5.0), num(5.0), num(4.0), num(4.0)]), Some(2));
+        // nothing exact → nothing acceptable
+        assert_eq!(best_exact(&[bound(1.0), Eval::skipped()]), None);
+        assert_eq!(best_exact(&[]), None);
+        // skipped probes are transparent
+        assert_eq!(
+            best_exact(&[Eval::skipped(), Eval { value: 7.0, source: EvalSource::Incremental }]),
+            Some(1)
+        );
     }
 
     #[test]

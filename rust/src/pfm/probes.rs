@@ -8,6 +8,25 @@
 //! out over `std::thread::scope` workers and the results are reduced in
 //! probe-index order afterwards.
 //!
+//! # Incremental evaluation
+//!
+//! [`eval_orders_with_base`](ProbePool::eval_orders_with_base) is the
+//! segment-move entry point: candidates that share a long rank prefix
+//! with the incumbent ordering are evaluated by the sublinear suffix
+//! re-walk of [`crate::pfm::incremental`] instead of a full
+//! `permute_sym` + `analyze`. Eligibility (`suffix_eligible`, Cholesky
+//! only) and batch engagement (prefix savings must cover the one-time
+//! base preparation) are pure functions of the candidate orderings —
+//! never of timing or thread count — and the incremental value is
+//! bit-identical to the full path, so every determinism guarantee below
+//! is preserved. The pool counts `incremental` / `full` evaluations and
+//! accumulates `saved_units` (rows *not* re-walked, in units of one
+//! row), which `admm::refine` converts into bonus refinement steps.
+//! `saved_units` accrues from the candidate structure even when
+//! incremental evaluation is disabled, so an A/B run (incremental on vs
+//! off) follows the identical search trajectory and must produce the
+//! identical ordering — the equivalence the bench pair asserts.
+//!
 //! # Determinism
 //!
 //! Orderings are **bit-identical to the sequential path at any thread
@@ -27,9 +46,10 @@
 //! skipped depends on when each one starts, which is timing — two runs
 //! differ under an expiring deadline even at the same thread count, so no
 //! thread count can promise bit-equality there. What always holds, budget
-//! or not, is the strict-acceptance invariant (skipped probes are `∞` and
-//! never accepted, so the result is never worse than the init). The
-//! determinism tests and the speedup bench therefore pin `time_ms: None`.
+//! or not, is the strict-acceptance invariant (skipped probes come back
+//! [`EvalSource::Skipped`] with value `∞` and are never accepted, so the
+//! result is never worse than the init). The determinism tests and the
+//! speedup bench therefore pin `time_ms: None`.
 //!
 //! # Thread safety
 //!
@@ -43,15 +63,18 @@
 //! # Deadlines
 //!
 //! A worker checks the optional deadline *before each probe* and returns
-//! `f64::INFINITY` for probes it skips (never accepted — every real
-//! objective value is finite). This bounds budget overshoot by one
-//! in-flight probe per worker instead of one full batch (the
-//! `OptBudget::serving()` wall-clock contract).
+//! [`Eval::skipped`] for probes it skips. This bounds budget overshoot by
+//! one in-flight probe per worker instead of one full batch (the
+//! `OptBudget::serving()` wall-clock contract). Skipped probes are
+//! counted separately from evaluated ones — `evals()` reports only work
+//! actually performed, and the source tag (not value finiteness) is what
+//! distinguishes "never ran" from "ran and failed".
 
 use std::time::Instant;
 
 use crate::factor::{FactorKind, FactorWorkspace};
-use crate::pfm::objective::eval_order;
+use crate::pfm::incremental::{suffix_eligible, IncrementalBase};
+use crate::pfm::objective::{eval_order_sourced, Eval, EvalSource};
 use crate::sparse::Csr;
 use crate::util::sync::effective_threads;
 
@@ -68,13 +91,46 @@ pub const PROBES_PER_STEP: usize = 4;
 /// V-cycle levels.
 const PAR_MIN_NNZ: usize = 2_000;
 
+/// Per-candidate routing decided in the single-threaded generation
+/// phase: the first rank where it differs from the batch base, and
+/// whether the suffix re-walk applies.
+#[derive(Clone, Copy)]
+struct Route {
+    lo: usize,
+    incremental: bool,
+}
+
 /// A reusable worker pool: per-worker factorization workspaces plus the
 /// configured parallelism. Threads are scoped per batch (no long-lived
-/// channels to keep alive); the workspaces persist across batches.
+/// channels to keep alive); the workspaces and the incremental base
+/// persist across batches.
 pub struct ProbePool {
     threads: usize,
     workspaces: Vec<FactorWorkspace>,
-    evals: usize,
+    /// evaluate eligible candidates via the incremental suffix re-walk?
+    /// (off = full path for everything; the search trajectory is
+    /// identical either way, only the cost per probe changes)
+    incremental_enabled: bool,
+    /// reusable per-base state for the incremental evaluator
+    base: IncrementalBase,
+    /// base ordering the savings ledger (and, when enabled, `base`)
+    /// currently reflects — engaged batches off an unchanged incumbent
+    /// reuse the preparation instead of paying it again. Tracked in both
+    /// modes so the ledger (and therefore `admm::refine`'s bonus-step
+    /// schedule) is identical whether or not incremental eval is on.
+    accounted_base: Vec<usize>,
+    accounted_valid: bool,
+    evaluated: usize,
+    skipped: usize,
+    incremental: usize,
+    base_prepares: usize,
+    /// rows spared from re-walking by prefix splicing, net of base
+    /// preparations (units of one matrix row; accrues from candidate
+    /// structure alone, independent of `incremental_enabled`)
+    saved_units: u64,
+    /// wall clock spent inside incremental-engaged batches (prepare +
+    /// probes) — the stage trace's `refine_incremental` span
+    incr_secs: f64,
 }
 
 impl ProbePool {
@@ -84,7 +140,32 @@ impl ProbePool {
     /// [`threads`](Self::threads) reports the *effective* width.
     pub fn new(threads: usize) -> ProbePool {
         let threads = effective_threads(threads);
-        ProbePool { threads, workspaces: FactorWorkspace::pool(threads), evals: 0 }
+        ProbePool {
+            threads,
+            workspaces: FactorWorkspace::pool(threads),
+            incremental_enabled: true,
+            base: IncrementalBase::new(),
+            accounted_base: Vec::new(),
+            accounted_valid: false,
+            evaluated: 0,
+            skipped: 0,
+            incremental: 0,
+            base_prepares: 0,
+            saved_units: 0,
+            incr_secs: 0.0,
+        }
+    }
+
+    /// Toggle incremental evaluation (on by default). Off forces every
+    /// probe down the full `permute_sym` + analyze path — values and
+    /// accepted orderings are bit-identical either way.
+    pub fn with_incremental(mut self, on: bool) -> ProbePool {
+        self.incremental_enabled = on;
+        self
+    }
+
+    pub fn incremental_enabled(&self) -> bool {
+        self.incremental_enabled
     }
 
     pub fn threads(&self) -> usize {
@@ -92,64 +173,201 @@ impl ProbePool {
     }
 
     /// Discrete-objective evaluations actually performed (deadline-skipped
-    /// probes are not counted).
+    /// probes are not counted — see [`skipped`](Self::skipped)).
     pub fn evals(&self) -> usize {
-        self.evals
+        self.evaluated
+    }
+
+    /// Probes skipped because the deadline expired before they started.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Evaluations served by the incremental suffix re-walk.
+    pub fn incremental_evals(&self) -> usize {
+        self.incremental
+    }
+
+    /// Evaluations that ran the full `permute_sym` + analysis path.
+    pub fn full_evals(&self) -> usize {
+        self.evaluated - self.incremental
+    }
+
+    /// Full symbolic passes spent preparing incremental bases.
+    pub fn base_prepares(&self) -> usize {
+        self.base_prepares
+    }
+
+    /// Net rows spared from re-walking (prefix splices minus base
+    /// preparations), in units of one matrix row. A pure function of the
+    /// candidate batches seen — identical at any thread count and
+    /// whether or not incremental evaluation is enabled.
+    pub fn saved_units(&self) -> u64 {
+        self.saved_units
+    }
+
+    /// Wall clock spent inside incremental-engaged probe batches.
+    pub fn incremental_secs(&self) -> f64 {
+        self.incr_secs
     }
 
     /// Evaluate the discrete objective of every candidate ordering.
     /// `results[i]` corresponds to `orders[i]`; probes skipped because
-    /// `deadline` passed come back as `f64::INFINITY`.
+    /// `deadline` passed come back as [`Eval::skipped`].
     pub fn eval_orders(
         &mut self,
         a: &Csr,
         kind: FactorKind,
         orders: &[Vec<usize>],
         deadline: Option<Instant>,
-    ) -> Vec<f64> {
+    ) -> Vec<Eval> {
+        self.run_batch(a, kind, orders, None, deadline)
+    }
+
+    /// Evaluate a batch of candidates that were derived from `base_order`
+    /// (the segment-move entry point). Candidates sharing a long enough
+    /// rank prefix with the base are evaluated incrementally when the
+    /// batch's total spared prefix work exceeds the one-time base
+    /// preparation; everything else (and every LU probe) takes the full
+    /// path. Values are bit-identical to [`eval_orders`](Self::eval_orders)
+    /// in all cases.
+    pub fn eval_orders_with_base(
+        &mut self,
+        a: &Csr,
+        kind: FactorKind,
+        base_order: &[usize],
+        orders: &[Vec<usize>],
+        deadline: Option<Instant>,
+    ) -> Vec<Eval> {
+        if orders.is_empty() {
+            return Vec::new();
+        }
+        let n = base_order.len();
+        // generation-phase routing: pure candidate structure, no timing
+        let routes: Vec<Route> = orders
+            .iter()
+            .map(|o| {
+                let lo = first_diff(base_order, o);
+                Route { lo, incremental: kind == FactorKind::Cholesky && suffix_eligible(n, lo) }
+            })
+            .collect();
+        let spared: u64 = routes.iter().filter(|r| r.incremental).map(|r| r.lo as u64).sum();
+        // engage only when the spliced prefixes outweigh the base
+        // preparation — free when the incumbent is unchanged since the
+        // last engaged batch, one full symbolic pass otherwise
+        let reuse = self.accounted_valid && self.accounted_base == base_order;
+        let prep_cost = if reuse { 0 } else { n as u64 };
+        let engage = spared > prep_cost;
+        if engage {
+            self.saved_units += spared - prep_cost;
+            if !reuse {
+                self.accounted_base.clear();
+                self.accounted_base.extend_from_slice(base_order);
+                self.accounted_valid = true;
+            }
+        }
+        if !(engage && self.incremental_enabled) {
+            return self.run_batch(a, kind, orders, None, deadline);
+        }
+        let t0 = Instant::now();
+        if !reuse {
+            self.base.prepare(a, base_order, &mut self.workspaces[0]);
+            self.base_prepares += 1;
+        }
+        let results = self.run_batch(a, kind, orders, Some(&routes), deadline);
+        self.incr_secs += t0.elapsed().as_secs_f64();
+        results
+    }
+
+    /// Drop the prepared-base association. Call when the matrix the pool
+    /// will evaluate may have changed (e.g. entering a new refinement
+    /// pass or V-cycle level) — an ordering match alone must never reuse
+    /// a base prepared on a different matrix.
+    pub fn invalidate_base(&mut self) {
+        self.accounted_valid = false;
+    }
+
+    /// Shared batch driver: fan out (or run sequentially under the nnz
+    /// cutoff), tally counters from the tagged results. `routes` carries
+    /// per-candidate incremental routing; `None` means all-full.
+    fn run_batch(
+        &mut self,
+        a: &Csr,
+        kind: FactorKind,
+        orders: &[Vec<usize>],
+        routes: Option<&[Route]>,
+        deadline: Option<Instant>,
+    ) -> Vec<Eval> {
         if orders.is_empty() {
             return Vec::new();
         }
         let nw = if a.nnz() < PAR_MIN_NNZ { 1 } else { self.threads.min(orders.len()) };
-        let mut results = vec![f64::INFINITY; orders.len()];
+        let mut results = vec![Eval::skipped(); orders.len()];
+        let base = &self.base;
+        let workspaces = &mut self.workspaces;
         if nw <= 1 {
-            let ws = &mut self.workspaces[0];
-            for (o, r) in orders.iter().zip(results.iter_mut()) {
-                *r = eval_probe(a, kind, ws, o, deadline);
+            let ws = &mut workspaces[0];
+            for (k, (o, r)) in orders.iter().zip(results.iter_mut()).enumerate() {
+                *r = eval_probe(a, kind, base, ws, o, routes.map(|rt| rt[k]), deadline);
             }
         } else {
             let chunk = orders.len().div_ceil(nw);
             std::thread::scope(|s| {
-                for (ws, (ord_chunk, res_chunk)) in self
-                    .workspaces
+                for (wi, (ws, (ord_chunk, res_chunk))) in workspaces
                     .iter_mut()
                     .zip(orders.chunks(chunk).zip(results.chunks_mut(chunk)))
+                    .enumerate()
                 {
                     s.spawn(move || {
-                        for (o, r) in ord_chunk.iter().zip(res_chunk.iter_mut()) {
-                            *r = eval_probe(a, kind, ws, o, deadline);
+                        for (k, (o, r)) in ord_chunk.iter().zip(res_chunk.iter_mut()).enumerate()
+                        {
+                            let route = routes.map(|rt| rt[wi * chunk + k]);
+                            *r = eval_probe(a, kind, base, ws, o, route, deadline);
                         }
                     });
                 }
             });
         }
-        self.evals += results.iter().filter(|f| f.is_finite()).count();
+        for e in &results {
+            if e.evaluated() {
+                self.evaluated += 1;
+            } else {
+                self.skipped += 1;
+            }
+            if e.source == EvalSource::Incremental {
+                self.incremental += 1;
+            }
+        }
         results
     }
 }
 
-/// One probe: deadline check, then the golden criterion of `order` on `a`.
+/// First rank where `cand` differs from `base` (`base.len()` if equal).
+fn first_diff(base: &[usize], cand: &[usize]) -> usize {
+    base.iter().zip(cand).position(|(b, c)| b != c).unwrap_or(base.len())
+}
+
+/// One probe: deadline check, then the golden criterion of `order` on `a`
+/// — via the incremental suffix re-walk when routed there, the full
+/// permute + analysis otherwise. Bit-identical values either way.
 fn eval_probe(
     a: &Csr,
     kind: FactorKind,
+    base: &IncrementalBase,
     ws: &mut FactorWorkspace,
     order: &[usize],
+    route: Option<Route>,
     deadline: Option<Instant>,
-) -> f64 {
+) -> Eval {
     if deadline.is_some_and(|d| Instant::now() >= d) {
-        return f64::INFINITY;
+        return Eval::skipped();
     }
-    eval_order(a, kind, ws, order)
+    match route {
+        Some(r) if r.incremental => {
+            Eval { value: base.eval(a, order, r.lo, ws), source: EvalSource::Incremental }
+        }
+        _ => eval_order_sourced(a, kind, ws, order),
+    }
 }
 
 #[cfg(test)]
@@ -169,9 +387,11 @@ mod tests {
         let mut seq = ProbePool::new(1);
         let base = seq.eval_orders(&a, FactorKind::Cholesky, &orders, None);
         assert_eq!(seq.evals(), 11);
+        assert_eq!(seq.skipped(), 0);
         // ground truth through the direct symbolic path
         for (o, f) in orders.iter().zip(&base) {
-            assert_eq!(*f, analyze(&a.permute_sym(o)).lnnz as f64);
+            assert_eq!(f.value, analyze(&a.permute_sym(o)).lnnz as f64);
+            assert_eq!(f.source, EvalSource::Symbolic);
         }
         for threads in [2, 3, 4, 8, 16] {
             let mut pool = ProbePool::new(threads);
@@ -182,13 +402,91 @@ mod tests {
     }
 
     #[test]
+    fn incremental_batch_is_bit_identical_and_counted() {
+        let a = laplacian_2d(32, 32);
+        let n = a.nrows();
+        let base_order: Vec<usize> = (0..n).collect();
+        // segment moves high in the ordering: eligible and engaging
+        let mut orders = Vec::new();
+        for s in [600usize, 700, 800, 900] {
+            let mut o = base_order.clone();
+            o[s..s + 80].reverse();
+            orders.push(o);
+        }
+        let mut full = ProbePool::new(1).with_incremental(false);
+        let want = full.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+        assert_eq!(full.incremental_evals(), 0);
+        assert_eq!(full.full_evals(), 4);
+        assert!(full.saved_units() > 0, "savings accrue even with incremental off");
+        for threads in [1, 2, 4, 8] {
+            let mut pool = ProbePool::new(threads);
+            let got =
+                pool.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.value, w.value, "threads={threads}");
+                assert_eq!(g.source, EvalSource::Incremental);
+            }
+            assert_eq!(pool.incremental_evals(), 4, "threads={threads}");
+            assert_eq!(pool.full_evals(), 0);
+            assert_eq!(pool.base_prepares(), 1);
+            assert_eq!(pool.saved_units(), full.saved_units(), "mode-independent savings");
+        }
+    }
+
+    #[test]
+    fn unchanged_incumbent_reuses_the_prepared_base() {
+        let a = laplacian_2d(32, 32);
+        let n = a.nrows();
+        let base_order: Vec<usize> = (0..n).collect();
+        let mut orders = Vec::new();
+        for s in [600usize, 700, 800, 900] {
+            let mut o = base_order.clone();
+            o[s..s + 80].reverse();
+            orders.push(o);
+        }
+        let mut pool = ProbePool::new(2);
+        pool.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+        let saved1 = pool.saved_units();
+        pool.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+        assert_eq!(pool.base_prepares(), 1, "second batch must reuse the base");
+        // without the prepare to amortize, the second batch saves more
+        assert!(pool.saved_units() > 2 * saved1);
+        // invalidation forces a fresh preparation
+        pool.invalidate_base();
+        pool.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+        assert_eq!(pool.base_prepares(), 2);
+        assert_eq!(pool.incremental_evals(), 12);
+    }
+
+    #[test]
+    fn short_prefix_batches_do_not_engage() {
+        let a = laplacian_2d(16, 16);
+        let n = a.nrows();
+        let base_order: Vec<usize> = (0..n).collect();
+        // every candidate differs from rank 0 on: nothing to splice
+        let orders: Vec<Vec<usize>> = (0..4).map(|_| (0..n).rev().collect()).collect();
+        let mut pool = ProbePool::new(2);
+        let res = pool.eval_orders_with_base(&a, FactorKind::Cholesky, &base_order, &orders, None);
+        assert!(res.iter().all(|e| e.source == EvalSource::Symbolic));
+        assert_eq!(pool.incremental_evals(), 0);
+        assert_eq!(pool.base_prepares(), 0);
+        assert_eq!(pool.saved_units(), 0);
+    }
+
+    #[test]
     fn expired_deadline_skips_probes() {
         let a = laplacian_2d(8, 8);
         let orders: Vec<Vec<usize>> = vec![(0..64).collect(); 6];
         let mut pool = ProbePool::new(4);
         let fs = pool.eval_orders(&a, FactorKind::Cholesky, &orders, Some(Instant::now()));
-        assert!(fs.iter().all(|f| f.is_infinite()), "{fs:?}");
+        // the explicit status — not value finiteness — is what says
+        // "never ran": the counter stays honest even for objectives that
+        // could legitimately come back infinite
+        assert!(fs.iter().all(|e| e.source == EvalSource::Skipped), "{fs:?}");
+        assert!(fs.iter().all(|e| e.value.is_infinite() && !e.evaluated()));
         assert_eq!(pool.evals(), 0, "skipped probes must not count as evals");
+        assert_eq!(pool.skipped(), 6, "…but must be visible as skips");
     }
 
     #[test]
@@ -196,6 +494,10 @@ mod tests {
         let a = laplacian_2d(4, 4);
         let mut pool = ProbePool::new(4);
         assert!(pool.eval_orders(&a, FactorKind::Cholesky, &[], None).is_empty());
+        assert!(pool
+            .eval_orders_with_base(&a, FactorKind::Cholesky, &[0, 1], &[], None)
+            .is_empty());
         assert_eq!(pool.evals(), 0);
+        assert_eq!(pool.skipped(), 0);
     }
 }

@@ -48,6 +48,12 @@ pub struct OrderOutcome {
     pub opt_iters: usize,
     /// discrete objective evaluations the native optimizer spent
     pub opt_evals: usize,
+    /// evaluations served by the incremental suffix re-walk
+    /// (`pfm::incremental`); `incremental_probes + full_probes ==
+    /// opt_evals` on the native path, both 0 otherwise
+    pub incremental_probes: usize,
+    /// evaluations that ran a full symbolic/numeric pass
+    pub full_probes: usize,
     /// intermediate V-cycle levels the native optimizer refined
     pub levels_refined: usize,
     /// wall-clock split of the native optimizer's coarsen / ADMM / refine
@@ -180,6 +186,8 @@ impl Learned {
                 provenance: Provenance::Network,
                 opt_iters: 0,
                 opt_evals: 0,
+                incremental_probes: 0,
+                full_probes: 0,
                 levels_refined: 0,
                 phases: PhaseTimes::default(),
             });
@@ -195,6 +203,8 @@ impl Learned {
                 provenance: Provenance::NativeOptimizer,
                 opt_iters: rep.outer_iters,
                 opt_evals: rep.evals,
+                incremental_probes: rep.incremental_probes,
+                full_probes: rep.full_probes,
                 levels_refined: rep.levels_refined,
                 phases: rep.phases,
             });
@@ -206,6 +216,8 @@ impl Learned {
             provenance: Provenance::SpectralFallback,
             opt_iters: 0,
             opt_evals: 0,
+            incremental_probes: 0,
+            full_probes: 0,
             levels_refined: 0,
             phases: PhaseTimes::default(),
         })

@@ -865,6 +865,133 @@ fn prop_parallel_schedule_declines_serving_sized_and_path_etrees() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Incremental symbolic probe evaluation invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_incremental_eval_bit_identical_to_full_analyze_on_all_8_classes() {
+    // the tentpole contract: for any symmetric pattern, any base ordering,
+    // and any segment-move candidate, the incremental suffix re-walk
+    // returns *exactly* analyze(permute_sym(cand)).lnnz — including the
+    // degenerate windows (lo = 0, suffix touching the root, width-1
+    // relocations, identical candidate)
+    use pfm_reorder::pfm::incremental::IncrementalBase;
+    let classes: Vec<ProblemClass> = ProblemClass::ALL
+        .iter()
+        .chain(&ProblemClass::UNSYMMETRIC)
+        .copied()
+        .collect();
+    forall(12, |rng| {
+        let class = classes[rng.next_below(classes.len())];
+        let a0 = class.generate(50 + rng.next_below(90), rng.next_u64());
+        // the incremental walk is defined on symmetric patterns (the
+        // pool's Cholesky-only gate); unsymmetric classes run symmetrized
+        let a = if a0.is_symmetric(1e-12) { a0 } else { a0.symmetrize() };
+        let n = a.nrows();
+        let mut ws = FactorWorkspace::new();
+        let mut base = IncrementalBase::new();
+        for order in [(0..n).collect::<Vec<_>>(), amd(&a)] {
+            base.prepare(&a, &order, &mut ws);
+            let mut cands: Vec<Vec<usize>> = Vec::new();
+            // random reverse + relocate windows
+            for _ in 0..3 {
+                let len = (2 + rng.next_below((n / 2).max(2))).min(n - 1);
+                let s = rng.next_below(n - len);
+                let mut c = order.clone();
+                c[s..s + len].reverse();
+                cands.push(c);
+                let mut c = order.clone();
+                let seg: Vec<usize> = c.splice(s..s + len, std::iter::empty()).collect();
+                let at = rng.next_below(c.len() + 1);
+                let tail = c.split_off(at);
+                c.extend_from_slice(&seg);
+                c.extend_from_slice(&tail);
+                cands.push(c);
+            }
+            // lo = 0: whole ordering reversed
+            let mut c = order.clone();
+            c.reverse();
+            cands.push(c);
+            // suffix touching the root
+            let mut c = order.clone();
+            c.swap(n - 2, n - 1);
+            cands.push(c);
+            // width-1 relocation
+            let mut c = order.clone();
+            let v = c.remove(rng.next_below(n));
+            c.insert(rng.next_below(n), v);
+            cands.push(c);
+            // identical candidate (lo == n)
+            cands.push(order.clone());
+            for cand in cands {
+                check_permutation(&cand).map_err(|e| format!("{class:?}: {e}"))?;
+                let lo = base.first_diff(&cand);
+                let inc = base.eval(&a, &cand, lo, &mut ws);
+                let fullv = analyze(&a.permute_sym(&cand)).lnnz as f64;
+                if inc != fullv {
+                    return Err(format!(
+                        "{class:?} n={n} lo={lo}: incremental {inc} != full {fullv}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_probe_pool_incremental_batches_bit_identical_across_threads() {
+    // pool-level determinism with incremental evaluation on: a segment
+    // batch sharing a long rank prefix must (a) engage the incremental
+    // path for every candidate, (b) return values bit-identical to a
+    // full-evaluation pool, (c) at every thread count
+    use pfm_reorder::factor::FactorKind;
+    use pfm_reorder::pfm::ProbePool;
+    forall(6, |rng| {
+        // above the pool's parallel nnz cutoff so threads genuinely engage
+        let side = 21 + rng.next_below(6);
+        let a = pfm_reorder::gen::grid::laplacian_2d(side, side);
+        let n = a.nrows();
+        let order = amd(&a);
+        let mut orders = Vec::new();
+        for _ in 0..4 {
+            let len = 2 + rng.next_below(n / 8);
+            // windows start past n/3 > n/4: eligible by construction, and
+            // spared prefix rows Σlo > n guarantee the batch engages
+            let s = n / 3 + rng.next_below(n - n / 3 - len);
+            let mut c = order.clone();
+            c[s..s + len].reverse();
+            orders.push(c);
+        }
+        let mut full_pool = ProbePool::new(1).with_incremental(false);
+        let reference =
+            full_pool.eval_orders_with_base(&a, FactorKind::Cholesky, &order, &orders, None);
+        if full_pool.incremental_evals() != 0 {
+            return Err("disabled pool served incremental evals".into());
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let mut pool = ProbePool::new(threads);
+            let got =
+                pool.eval_orders_with_base(&a, FactorKind::Cholesky, &order, &orders, None);
+            if got.iter().map(|e| e.value).ne(reference.iter().map(|e| e.value)) {
+                return Err(format!("threads={threads}: values diverged from full pool"));
+            }
+            if pool.incremental_evals() != orders.len() {
+                return Err(format!(
+                    "threads={threads}: {} of {} probes ran incrementally",
+                    pool.incremental_evals(),
+                    orders.len()
+                ));
+            }
+            if pool.saved_units() != full_pool.saved_units() {
+                return Err(format!("threads={threads}: savings ledger diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_pfm_never_exceeds_spectral_init_fill_on_symmetric_suite() {
     use pfm_reorder::order::fiedler_order_with;
